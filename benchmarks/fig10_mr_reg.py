@@ -1,0 +1,22 @@
+"""Fig. 10: MR registration time vs region size (the OS-side pinning cost
+scales with size; SoftRoCE skips the NIC-side mapping cost)."""
+import time
+
+from repro.runtime.cluster import SimCluster
+
+
+def main():
+    cl = SimCluster(1)
+    ctx = cl.nodes[0].device.open_context()
+    pd = ctx.alloc_pd()
+    for size in (1 << 12, 1 << 16, 1 << 20, 1 << 24):
+        n = 20 if size >= 1 << 20 else 200
+        t0 = time.perf_counter()
+        for _ in range(n):
+            pd.reg_mr(size)
+        us = (time.perf_counter() - t0) / n * 1e6
+        print(f"fig10_mr_reg[{size}B],{us:.2f},us")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Fig. 11: migration time vs number of QPs (ib_send_bw-style container
+with n_qps channels, migrated mid-stream; total time + image size)."""
+from repro.runtime.cluster import SimCluster
+from repro.runtime.apps import SendBwApp
+from repro.runtime.collectives import connect_pair
+
+
+def main():
+    for n_qps in (1, 4, 16, 64):
+        cl = SimCluster(3)
+        A = cl.launch("send", 0)
+        B = cl.launch("recv", 1)
+        aa = SendBwApp(msg_size=4096, window=4, n_qps=n_qps)
+        aa.attach(A, sender=True)
+        A.app = aa
+        ab = SendBwApp(msg_size=4096, window=4, n_qps=n_qps)
+        ab.attach(B, sender=False)
+        B.app = ab
+        for i in range(n_qps):
+            connect_pair(aa.channels[i], ab.channels[i])
+        for _ in range(30):
+            cl.step_all()
+        rep = cl.migrate("recv", 2)
+        for _ in range(300):
+            cl.step_all()
+        print(f"fig11_migration[{n_qps}qps],{rep.total_s*1e6:.0f},"
+              f"image_KiB={rep.image_bytes/1024:.0f},"
+              f"ckpt_us={rep.checkpoint_s*1e6:.0f},"
+              f"restore_us={rep.restore_s*1e6:.0f},resumed={ab.received>0}")
+
+
+if __name__ == "__main__":
+    main()

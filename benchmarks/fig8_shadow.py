@@ -1,0 +1,63 @@
+"""Fig. 8: DMTCP-style shadow-object interposition overhead vs native,
+across message sizes (bandwidth drop / latency increase)."""
+import time
+
+from repro.core.shadow import ShadowVerbs
+from repro.core.verbs import RecvWR, SGE, SendWR
+from repro.core.packets import Op
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import Channel, connect_pair
+
+
+def _run(msg_size, n_msgs, shadowed):
+    cl = SimCluster(2)
+    ca = cl.launch("a", 0)
+    cb = cl.launch("b", 1)
+    c1 = Channel(ca.ctx, msg_size * 2)
+    c2 = Channel(cb.ctx, msg_size * 2)
+    connect_pair(c1, c2)
+    sh = ShadowVerbs(ca.ctx) if shadowed else None
+    if sh is not None:
+        # shadow the existing MRs the DMTCP way: bounce buffers
+        pd = ca.ctx.pds[0]
+        from repro.core.shadow import _ShadowMR
+        for mrn in (c1.mrn_send, c1.mrn_recv):
+            user = c1.h.mr(mrn)
+            sh._mrs[user.mrn] = _ShadowMR(user, pd.reg_mr(user.size))
+    qp1 = c1.h.qp(c1.qpn)
+    mr1 = c1.h.mr(c1.mrn_send)
+    data = b"q" * msg_size
+    t0 = time.perf_counter()
+    done = 0
+    wrid = 0
+    while done < n_msgs:
+        c2.post_recv(msg_size)
+        mr1.write(0, data)
+        wrid += 1
+        wr = SendWR(wrid, Op.SEND, SGE(mr1, 0, msg_size))
+        if sh is not None:
+            sh.post_send(qp1, wr)
+        else:
+            qp1.post_send(wr)
+        cl.run_until_idle()
+        if sh is not None:
+            sh.poll(c1.h.cq(c1.cqn), 8)
+        else:
+            c1.poll(8)
+        c2.poll(8)
+        done += 1
+    dt = time.perf_counter() - t0
+    return dt / n_msgs * 1e6, msg_size * n_msgs / dt / 1e6
+
+
+def main():
+    for size in (1024, 4096, 16384, 65536):
+        lat_n, bw_n = _run(size, 40, shadowed=False)
+        lat_s, bw_s = _run(size, 40, shadowed=True)
+        print(f"fig8_native[{size}B],{lat_n:.1f},MBps={bw_n:.1f}")
+        print(f"fig8_shadow[{size}B],{lat_s:.1f},MBps={bw_s:.1f},"
+              f"overhead_pct={(lat_s-lat_n)/lat_n*100:.1f}")
+
+
+if __name__ == "__main__":
+    main()

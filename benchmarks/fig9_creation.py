@@ -1,0 +1,35 @@
+"""Fig. 9: verbs object creation time (PD, CQ, MR, QP incl. the mandatory
+Reset->Init->RTR->RTS walk)."""
+import time
+
+from repro.core.states import QPState
+from repro.runtime.cluster import SimCluster
+
+
+def _t(fn, n=200):
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main():
+    cl = SimCluster(2)
+    ctx = cl.nodes[0].device.open_context()
+    pd = ctx.alloc_pd()
+    cq = ctx.create_cq()
+
+    print(f"fig9_create[PD],{_t(ctx.alloc_pd):.2f},us")
+    print(f"fig9_create[CQ],{_t(lambda: ctx.create_cq()):.2f},us")
+    print(f"fig9_create[MR_1MiB],{_t(lambda: pd.reg_mr(1 << 20), 50):.2f},us")
+
+    def qp_to_rts():
+        qp = pd.create_qp(cq, cq)
+        qp.modify(QPState.INIT)
+        qp.modify(QPState.RTR, dest_gid=1, dest_qpn=1, rq_psn=0)
+        qp.modify(QPState.RTS, sq_psn=0)
+    print(f"fig9_create[QP_to_RTS],{_t(qp_to_rts):.2f},us")
+
+
+if __name__ == "__main__":
+    main()

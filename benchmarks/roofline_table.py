@@ -1,0 +1,38 @@
+"""§Roofline summary from the dry-run JSONL (benchmarks view of the
+40-cell × 2-mesh table)."""
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def load(path="dryrun_baseline.jsonl"):
+    fn = os.path.join(RESULTS, path)
+    if not os.path.exists(fn):
+        return []
+    return [json.loads(l) for l in open(fn)]
+
+
+def main():
+    recs = [r for r in load() if "error" not in r]
+    if not recs:
+        print("roofline_table[missing],0,run_dryrun_first")
+        return
+    for r in recs:
+        if r["mesh"] != "16x16":
+            continue
+        rl = r["roofline"]
+        print(f"roofline[{r['arch']}|{r['shape']}],"
+              f"{rl['step_s']*1e6:.0f},"
+              f"compute_ms={rl['compute_s']*1e3:.2f},"
+              f"memory_ms={rl['memory_s']*1e3:.2f},"
+              f"collective_ms={rl['collective_s']*1e3:.2f},"
+              f"bottleneck={rl['bottleneck']},"
+              f"useful={rl['useful_ratio']:.2f}")
+    mp = sum(1 for r in recs if r["mesh"] == "2x16x16")
+    sp = sum(1 for r in recs if r["mesh"] == "16x16")
+    print(f"roofline[dryrun_cells],{sp+mp},single_pod={sp},multi_pod={mp}")
+
+
+if __name__ == "__main__":
+    main()

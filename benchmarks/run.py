@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. sys.path is extended so the
+suite runs as ``PYTHONPATH=src python -m benchmarks.run`` from the repo
+root (the fabric benchmarks also import tests.helpers).
+"""
+import os
+import sys
+import time
+import traceback
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+from benchmarks import (fig7_overhead, fig8_shadow, fig9_creation,  # noqa
+                        fig10_mr_reg, fig11_qps, fig13_training_migration,
+                        roofline_table, table1_sloc, table2_dump_sizes)
+
+MODULES = [
+    ("table1_sloc", table1_sloc),
+    ("table2_dump_sizes", table2_dump_sizes),
+    ("fig7_overhead", fig7_overhead),
+    ("fig8_shadow", fig8_shadow),
+    ("fig9_creation", fig9_creation),
+    ("fig10_mr_reg", fig10_mr_reg),
+    ("fig11_qps", fig11_qps),
+    ("fig13_training_migration", fig13_training_migration),
+    ("roofline_table", roofline_table),
+]
+
+
+def main() -> None:
+    failures = 0
+    for name, mod in MODULES:
+        t0 = time.time()
+        try:
+            mod.main()
+            print(f"# {name} done in {time.time()-t0:.1f}s")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED: {e}")
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

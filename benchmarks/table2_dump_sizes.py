@@ -1,0 +1,38 @@
+"""Table 2: per-object dump sizes (bytes) for PD/MR/CQ/SRQ/QP/QP-with-SRQ."""
+import msgpack
+
+from repro.core import dump as dumplib
+from repro.core.verbs import RecvWR, SGE
+from repro.runtime.cluster import SimCluster
+from tests.helpers import make_channel_pair
+
+
+def main():
+    cl = SimCluster(2)
+    c1, c2, ca, cb = make_channel_pair(cl)
+    # put a QP mid-message so "current WQE state" is populated
+    c2.post_recv(4096)
+    c1.post_send_bytes(b"z" * 4096)
+    cl.pump(2)
+    ctx = ca.ctx
+    srq = ctx.create_srq()
+    mr = ctx.mrs[0]
+    srq.post(RecvWR(1, SGE(mr, 0, 128)))
+    pd2 = ctx.alloc_pd()
+    cq2 = ctx.create_cq()
+    qp_srq = pd2.create_qp(cq2, cq2, srq)
+
+    sizes = {
+        "PD": len(msgpack.packb(dumplib.dump_object(ctx.pds[0]))),
+        "MR": len(msgpack.packb(dumplib.dump_object(ctx.mrs[0]))),
+        "CQ": len(msgpack.packb(dumplib.dump_object(ctx.cqs[0]))),
+        "SRQ": len(msgpack.packb(dumplib.dump_object(srq))),
+        "QP": len(msgpack.packb(dumplib.dump_object(ctx.qps[0]))),
+        "QP_w_SRQ": len(msgpack.packb(dumplib.dump_object(qp_srq))),
+    }
+    for k, v in sizes.items():
+        print(f"table2_dump_size[{k}],{v},bytes")
+
+
+if __name__ == "__main__":
+    main()

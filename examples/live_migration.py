@@ -1,0 +1,56 @@
+"""Live migration of a containerised distributed training job — the
+paper's headline demo, end to end:
+
+  1. 4 data-parallel ranks train over verbs RC connections (ring
+     all-reduce on the software RoCEv2 fabric).
+  2. Mid-run, rank 1's container is live-migrated to a spare node:
+     QPs stop, peers get NAK_STOPPED and pause, the image moves, the
+     restored QPs send resume messages with their new address, peers
+     retransmit exactly the lost packets.
+  3. The loss trajectory is bitwise identical to a run that never
+     migrated — transparency, verified.
+
+    PYTHONPATH=src python examples/live_migration.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+
+from repro.runtime.trainer import FabricTrainer
+
+
+def main():
+    print("reference run (no migration):")
+    ref = FabricTrainer(4, seed=11)
+    l_ref = ref.train(12)
+    for i in (0, 5, 11):
+        print(f"  step {i:2d} loss={l_ref[i]:.6f}")
+
+    print("\nmigrated run (rank1 -> spare node at step 6):")
+    mig = FabricTrainer(4, seed=11)
+    l_mig = []
+    for s in range(12):
+        if s == 6:
+            rep = mig.cluster.migrate("rank1",
+                                      len(mig.cluster.nodes) - 1)
+            print(f"  [migration: image={rep.image_bytes/1024:.0f} KiB "
+                  f"ckpt={rep.checkpoint_s*1e3:.2f}ms "
+                  f"restore={rep.restore_s*1e3:.2f}ms]")
+        l_mig.append(mig.step())
+    for i in (0, 5, 6, 11):
+        print(f"  step {i:2d} loss={l_mig[i]:.6f}")
+
+    same_losses = l_ref == l_mig
+    same_weights = all(np.array_equal(ref.weights(r), mig.weights(r))
+                       for r in range(4))
+    print(f"\nloss trajectories bitwise identical: {same_losses}")
+    print(f"final weights bitwise identical:     {same_weights}")
+    assert same_losses and same_weights
+    print("MigrOS transparency: VERIFIED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Sharded checkpointing: msgpack + zstd, per-leaf streaming, async writer.
+
+Layout: <dir>/step_<N>/{manifest.msgpack, leaf_<i>.bin}. Each leaf is the
+full (unsharded) array — on restore, ``jax.device_put`` with the target
+shardings re-shards for whatever mesh the restart runs on (elastic
+restart). The MigrOS container path reuses the same serialisation for user
+state inside migration images.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import msgpack
+import numpy as np
+import zstandard
+
+
+def _pack_leaf(arr) -> bytes:
+    a = np.asarray(arr)
+    meta = {"dtype": str(a.dtype), "shape": list(a.shape)}
+    raw = msgpack.packb(meta) + bytes(a.tobytes())
+    return zstandard.ZstdCompressor(level=1).compress(raw)
+
+
+def _unpack_leaf(blob: bytes) -> np.ndarray:
+    raw = zstandard.ZstdDecompressor().decompress(blob)
+    up = msgpack.Unpacker()
+    up.feed(raw)
+    meta = up.unpack()
+    off = up.tell()
+    a = np.frombuffer(raw[off:], dtype=np.dtype(meta["dtype"]))
+    return a.reshape(meta["shape"])
+
+
+def save(path: str, tree: Any, *, step: int, extra: Optional[Dict] = None,
+         async_write: bool = False):
+    """Save a pytree of arrays. Returns the checkpoint directory."""
+    d = os.path.join(path, f"step_{step:08d}")
+    tmp = d + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    host = [np.asarray(x) for x in leaves]   # device->host before async
+
+    def _write():
+        for i, a in enumerate(host):
+            with open(os.path.join(tmp, f"leaf_{i:05d}.bin"), "wb") as f:
+                f.write(_pack_leaf(a))
+        manifest = {"n_leaves": len(host), "step": step,
+                    "treedef": str(treedef), "extra": extra or {}}
+        with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+            f.write(msgpack.packb(manifest))
+        if os.path.isdir(d):                 # re-save after restart
+            shutil.rmtree(d)
+        os.replace(tmp, d)                   # atomic publish
+
+    if async_write:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return d, t
+    _write()
+    return d
+
+
+def restore(ckpt_dir: str, like: Any, *, shardings: Any = None) -> Any:
+    """Restore into the structure of `like` (pytree of arrays/SDS)."""
+    with open(os.path.join(ckpt_dir, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read(), raw=False)
+    leaves, treedef = jax.tree.flatten(like)
+    assert manifest["n_leaves"] == len(leaves), "structure mismatch"
+    out = []
+    for i in range(len(leaves)):
+        with open(os.path.join(ckpt_dir, f"leaf_{i:05d}.bin"), "rb") as f:
+            out.append(_unpack_leaf(f.read()))
+    tree = jax.tree.unflatten(treedef, out)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def latest(path: str) -> Optional[str]:
+    if not os.path.isdir(path):
+        return None
+    steps = sorted(d for d in os.listdir(path) if d.startswith("step_")
+                   and not d.endswith(".tmp"))
+    return os.path.join(path, steps[-1]) if steps else None
+
+
+def manifest_extra(ckpt_dir: str) -> Dict:
+    with open(os.path.join(ckpt_dir, "manifest.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read(), raw=False)["extra"]

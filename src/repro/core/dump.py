@@ -1,0 +1,277 @@
+"""Checkpoint/restore API for verbs objects (paper §3.2, Listing 1).
+
+``dump_context`` is atomic: it first moves every QP of the context to
+STOPPED (so the 'NIC' can no longer mutate state behind the OS's back),
+then serialises all objects. ``restore_object`` applies per-object recovery
+commands: CREATE (with QPN/MRN pinning via the last-id mechanism),
+SET_MR_KEYS, and REFILL (rings, PSNs, in-flight task state + queueing the
+resume message). MR *contents* are not part of the verbs dump — they travel
+with the container memory image, exactly as in CRIU (paper §3.2).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Dict, List
+
+import msgpack
+
+from repro.core.packets import NakCode, Op, Packet
+from repro.core.states import QPState
+from repro.core.verbs import (CompletionQueue, Context, MemoryRegion,
+                              ProtectionDomain, QueuePair, RecvWR, SendWR,
+                              SGE, SharedReceiveQueue, WCStatus,
+                              WorkCompletion)
+
+DUMP_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# serialisation helpers
+# ---------------------------------------------------------------------------
+
+
+def _wc(wc: WorkCompletion) -> dict:
+    return {"wr_id": wc.wr_id, "status": wc.status.value,
+            "opcode": wc.opcode, "byte_len": wc.byte_len, "qpn": wc.qpn}
+
+
+def _sge(s: SGE) -> dict:
+    return {"mrn": s.mr.mrn, "offset": s.offset, "length": s.length}
+
+
+def _send_wr(wr: SendWR) -> dict:
+    return {"wr_id": wr.wr_id, "op": wr.opcode.value, "sge": _sge(wr.sge),
+            "raddr": wr.raddr, "rkey": wr.rkey, "sent": wr.sent,
+            "first_psn": wr.first_psn, "last_psn": wr.last_psn}
+
+
+def _recv_wr(wr: RecvWR) -> dict:
+    return {"wr_id": wr.wr_id, "sge": _sge(wr.sge),
+            "received": wr.received}
+
+
+def _packet(p: Packet) -> dict:
+    return {"op": p.op.value, "src_gid": p.src_gid, "src_qpn": p.src_qpn,
+            "dest_gid": p.dest_gid, "dest_qpn": p.dest_qpn, "psn": p.psn,
+            "payload": bytes(p.payload), "raddr": p.raddr, "rkey": p.rkey,
+            "length": p.length, "first": p.first, "last": p.last,
+            "wr_id": p.wr_id}
+
+
+def dump_object(obj) -> dict:
+    """Single-object dump (sizes of these are the paper's Table 2)."""
+    if isinstance(obj, ProtectionDomain):
+        return {"type": "PD", "pdn": obj.pdn}
+    if isinstance(obj, MemoryRegion):
+        return {"type": "MR", "mrn": obj.mrn, "size": obj.size,
+                "lkey": obj.lkey, "rkey": obj.rkey, "pdn": obj.pd.pdn}
+    if isinstance(obj, CompletionQueue):
+        return {"type": "CQ", "cqn": obj.cqn, "depth": obj.depth,
+                "head": obj.head, "tail": obj.tail,
+                "ring": [_wc(w) for w in obj.ring]}
+    if isinstance(obj, SharedReceiveQueue):
+        return {"type": "SRQ", "srqn": obj.srqn,
+                "queue": [_recv_wr(r) for r in obj.queue]}
+    if isinstance(obj, QueuePair):
+        d = {"type": "QP", "qpn": obj.qpn, "state": obj.state.value,
+             "dest_gid": obj.dest_gid, "dest_qpn": obj.dest_qpn,
+             "pdn": obj.pd.pdn, "send_cqn": obj.send_cq.cqn,
+             "recv_cqn": obj.recv_cq.cqn,
+             "srqn": obj.srq.srqn if obj.srq else None,
+             # requester/responder/completer ("QP tasks") state:
+             "sq_psn": obj.sq_psn, "una": obj.una, "epsn": obj.epsn,
+             "sq": [_send_wr(w) for w in obj.sq],
+             "rq": [_recv_wr(w) for w in obj.rq],
+             "inflight": [_packet(p) for p in obj.inflight],
+             "pending_comp": [list(t) for t in obj.pending_comp],
+             "cur_wqe": _send_wr(obj.cur_wqe) if obj.cur_wqe else None,
+             "cur_rr": _recv_wr(obj.cur_rr) if obj.cur_rr else None}
+        return d
+    raise TypeError(type(obj))
+
+
+def dump_context(ctx: Context, *, stop: bool = True) -> bytes:
+    """Atomic dump of every verbs object in the context.       # [MIGR]
+
+    Stops all QPs first so no packet processing can race the dump
+    (the paper runs this in the kernel for the same reason)."""
+    if stop:
+        for qp in ctx.qps:                                       # [MIGR]
+            if qp.state in (QPState.RTS, QPState.RTR, QPState.SQD):
+                qp.modify(QPState.STOPPED, system=True)          # [MIGR]
+    image = {
+        "version": DUMP_VERSION,
+        "gid": ctx.device.gid,
+        "pds": [dump_object(p) for p in ctx.pds],
+        "mrs": [dump_object(m) for m in ctx.mrs],
+        "cqs": [dump_object(c) for c in ctx.cqs],
+        "srqs": [dump_object(s) for s in ctx.srqs],
+        "qps": [dump_object(q) for q in ctx.qps],
+    }
+    return msgpack.packb(image, use_bin_type=True)
+
+
+# ---------------------------------------------------------------------------
+# restore
+# ---------------------------------------------------------------------------
+
+
+class RestoreSession:
+    """Tracks id→object maps while a context image is restored."""
+
+    def __init__(self, ctx: Context):
+        self.ctx = ctx
+        self.pd_by_n: Dict[int, ProtectionDomain] = {}
+        self.mr_by_n: Dict[int, MemoryRegion] = {}
+        self.cq_by_n: Dict[int, CompletionQueue] = {}
+        self.srq_by_n: Dict[int, SharedReceiveQueue] = {}
+        self.qp_by_n: Dict[int, QueuePair] = {}
+
+    def _rsge(self, d) -> SGE:
+        return SGE(self.mr_by_n[d["mrn"]], d["offset"], d["length"])
+
+    def _rsend(self, d) -> SendWR:
+        wr = SendWR(d["wr_id"], Op(d["op"]), self._rsge(d["sge"]),
+                    d["raddr"], d["rkey"])
+        wr.sent = d["sent"]
+        wr.first_psn = d["first_psn"]
+        wr.last_psn = d["last_psn"]
+        return wr
+
+    def _rrecv(self, d) -> RecvWR:
+        wr = RecvWR(d["wr_id"], self._rsge(d["sge"]))
+        wr.received = d["received"]
+        return wr
+
+
+def restore_object(session: RestoreSession, cmd: str, entry: dict,
+                   **kw):
+    """Fine-grained per-object restore (paper's ibv_restore_object)."""
+    ctx = session.ctx
+    dev = ctx.device
+    t = entry["type"]
+    if cmd == "CREATE":
+        # All object numbers are preserved across restore — the namespace
+        # partitioning (§4.1) guarantees the original IDs are free on any
+        # node, so user-held handles stay valid.                 # [MIGR]
+        if t == "PD":
+            pd = ctx.alloc_pd()
+            pd.pdn = entry["pdn"]                                # [MIGR]
+            session.pd_by_n[entry["pdn"]] = pd
+            return pd
+        if t == "CQ":
+            cq = ctx.create_cq(entry["depth"])
+            cq.cqn = entry["cqn"]                                # [MIGR]
+            session.cq_by_n[entry["cqn"]] = cq
+            return cq
+        if t == "SRQ":
+            srq = ctx.create_srq()
+            srq.srqn = entry["srqn"]                             # [MIGR]
+            session.srq_by_n[entry["srqn"]] = srq
+            return srq
+        if t == "MR":
+            dev.last_mrn = entry["mrn"] - 1                      # [MIGR]
+            mr = session.pd_by_n[entry["pdn"]].reg_mr(entry["size"])
+            assert mr.mrn == entry["mrn"]
+            session.mr_by_n[mr.mrn] = mr
+            return mr
+        if t == "QP":
+            dev.last_qpn = entry["qpn"] - 1                      # [MIGR]
+            qp = session.pd_by_n[entry["pdn"]].create_qp(
+                session.cq_by_n[entry["send_cqn"]],
+                session.cq_by_n[entry["recv_cqn"]],
+                session.srq_by_n.get(entry["srqn"]))
+            assert qp.qpn == entry["qpn"]
+            session.qp_by_n[qp.qpn] = qp
+            return qp
+        raise TypeError(t)
+
+    if cmd == "SET_MR_KEYS":                                     # [MIGR]
+        mr = session.mr_by_n[entry["mrn"]]
+        mr.lkey, mr.rkey = entry["lkey"], entry["rkey"]
+        return mr
+
+    if cmd == "REFILL":                                          # [MIGR]
+        if t == "CQ":
+            cq = session.cq_by_n[entry["cqn"]]
+            cq.head, cq.tail = entry["head"], entry["tail"]
+            for w in entry["ring"]:
+                cq.ring.append(WorkCompletion(
+                    w["wr_id"], WCStatus(w["status"]), w["opcode"],
+                    w["byte_len"], w["qpn"]))
+            return cq
+        if t == "SRQ":
+            srq = session.srq_by_n[entry["srqn"]]
+            for r in entry["queue"]:
+                srq.queue.append(session._rrecv(r))
+            return srq
+        if t == "QP":
+            qp = session.qp_by_n[entry["qpn"]]
+            assert qp.state == QPState.RTS, "REFILL requires RTS"
+            qp.sq_psn = entry["sq_psn"]
+            qp.una = entry["una"]
+            qp.epsn = entry["epsn"]
+            qp.sq = deque(session._rsend(w) for w in entry["sq"])
+            qp.rq = deque(session._rrecv(w) for w in entry["rq"])
+            qp.pending_comp = deque(tuple(t_) for t_ in
+                                    entry["pending_comp"])
+            qp.cur_wqe = (session._rsend(entry["cur_wqe"])
+                          if entry["cur_wqe"] else None)
+            qp.cur_rr = (session._rrecv(entry["cur_rr"])
+                         if entry["cur_rr"] else None)
+            # Re-emit in-flight packets with OUR (possibly new) source
+            # address; the resume handshake tells us what to retransmit.
+            qp.inflight = deque(
+                Packet(op=Op(p["op"]), src_gid=dev.gid, src_qpn=qp.qpn,
+                       dest_gid=qp.dest_gid, dest_qpn=qp.dest_qpn,
+                       psn=p["psn"], payload=p["payload"],
+                       raddr=p["raddr"], rkey=p["rkey"],
+                       length=p["length"], first=p["first"],
+                       last=p["last"], wr_id=p["wr_id"])
+                for p in entry["inflight"])
+            qp.last_progress = dev.fabric.now
+            qp.resume_pending = True                             # [MIGR]
+            return qp
+        raise TypeError(t)
+    raise ValueError(cmd)
+
+
+def restore_context(ctx: Context, image_bytes: bytes,
+                    relocated=None) -> RestoreSession:
+    """Full recovery flow: CREATE all → keys → state walk → REFILL.
+
+    ``relocated`` (control-plane): QPN -> current gid, so that QPs whose
+    partner has ALSO migrated are restored with the partner's new address
+    (paper §3.4: simultaneous migrations must not confuse addressing)."""
+    image = msgpack.unpackb(image_bytes, raw=False)
+    assert image["version"] == DUMP_VERSION
+    if relocated:                                                # [MIGR]
+        for e in image["qps"]:                                   # [MIGR]
+            if e["dest_qpn"] in relocated:                       # [MIGR]
+                e["dest_gid"] = relocated[e["dest_qpn"]]         # [MIGR]
+    s = RestoreSession(ctx)
+    for e in image["pds"]:
+        restore_object(s, "CREATE", e)
+    for e in image["cqs"]:
+        restore_object(s, "CREATE", e)
+    for e in image["srqs"]:
+        restore_object(s, "CREATE", e)
+    for e in image["mrs"]:
+        restore_object(s, "CREATE", e)
+        restore_object(s, "SET_MR_KEYS", e)
+    for e in image["qps"]:
+        qp = restore_object(s, "CREATE", e)
+        # walk the state machine exactly as the paper prescribes:
+        # Reset -> Init -> RTR -> RTS, then REFILL.
+        if e["state"] in ("RTR", "RTS", "SQD", "STOPPED"):
+            qp.modify(QPState.INIT)
+            qp.modify(QPState.RTR, dest_gid=e["dest_gid"],
+                      dest_qpn=e["dest_qpn"], rq_psn=e["epsn"])
+        if e["state"] in ("RTS", "SQD", "STOPPED"):
+            qp.modify(QPState.RTS, sq_psn=e["sq_psn"])
+            restore_object(s, "REFILL", e)
+    for e in image["cqs"]:
+        restore_object(s, "REFILL", e)
+    for e in image["srqs"]:
+        restore_object(s, "REFILL", e)
+    return s

@@ -1,0 +1,31 @@
+"""Cluster-wide QPN/MRN namespace partitioning (paper §4.1).
+
+Two processes must never share a QPN/MRN on one node. CRIU solved the
+analogous PID problem with PID namespaces; for verbs objects the paper
+partitions the number space across nodes ahead of time so a restored
+object's original ID is guaranteed free on any node. Each node's device
+draws from its own disjoint range; the controller validates ranges.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+RANGE = 1_000_000
+
+
+class GlobalNamespace:
+    def __init__(self):
+        self._owners: Dict[int, int] = {}      # base -> gid
+
+    def range_for(self, gid: int) -> int:
+        base = gid * RANGE
+        prev = self._owners.get(base)
+        if prev is not None and prev != gid:
+            raise ValueError(f"range {base} already owned by {prev}")
+        self._owners[base] = gid
+        return base
+
+    @staticmethod
+    def owner_of(number: int) -> int:
+        """Which node allocated this QPN/MRN originally."""
+        return number // RANGE

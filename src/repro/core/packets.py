@@ -1,0 +1,58 @@
+"""RoCEv2-style packet formats (BTH-level, per paper §3.4/§4.2).
+
+MigrOS protocol additions are three wire-level items:           # [MIGR]
+  * NAK code ``NAK_STOPPED``                                    # [MIGR]
+  * ``RESUME`` packet carrying the sender's new address and the PSN of its
+    first unacknowledged packet                                 # [MIGR]
+  * ``RESUME_ACK`` acknowledging the last successfully received packet
+    (normal ACK semantics reused)                               # [MIGR]
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+class Op(enum.Enum):
+    SEND = "SEND"                    # two-sided send (consumes an RR)
+    WRITE = "WRITE"                  # one-sided RDMA write
+    READ_REQ = "READ_REQ"            # one-sided RDMA read request
+    READ_RESP = "READ_RESP"
+    ACK = "ACK"
+    NAK = "NAK"
+    RESUME = "RESUME"                # [MIGR]
+    RESUME_ACK = "RESUME_ACK"        # [MIGR]
+
+
+class NakCode(enum.Enum):
+    PSN_SEQ_ERR = "PSN_SEQ_ERR"
+    INVALID_RKEY = "INVALID_RKEY"
+    STOPPED = "NAK_STOPPED"          # [MIGR]
+
+
+@dataclass
+class Packet:
+    op: Op
+    src_gid: int
+    src_qpn: int
+    dest_gid: int
+    dest_qpn: int
+    psn: int = 0
+    # payload for SEND/WRITE/READ_RESP; (addr, length) metadata for one-sided
+    payload: bytes = b""
+    raddr: int = 0
+    rkey: int = 0
+    length: int = 0
+    first: bool = True               # message framing over MTU packets
+    last: bool = True
+    wr_id: int = 0
+    nak_code: Optional[NakCode] = None
+    read_psn: int = 0                # responder PSN for READ_RESP streams
+
+    @property
+    def route(self) -> Tuple[int, int]:
+        return (self.dest_gid, self.dest_qpn)
+
+    def nbytes(self) -> int:
+        return 64 + len(self.payload)    # ~BTH/GRH header + payload

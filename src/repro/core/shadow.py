@@ -1,0 +1,78 @@
+"""DMTCP-style interposition baseline (paper §5.2, Fig. 8).
+
+DMTCP achieves migratability by *intercepting every IB verbs call* and
+maintaining shadow objects between the application and the NIC: work
+requests are rewritten to point at shadow bounce buffers, completions are
+rewritten back. The interception runs always — even if the process never
+migrates. This module reproduces that architecture so the benchmarks can
+measure its standing cost against MigrOS' zero-interception fast path.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.core.verbs import (Context, MemoryRegion, QueuePair, RecvWR,
+                              SendWR, SGE)
+
+
+@dataclass
+class _ShadowMR:
+    user: MemoryRegion
+    shadow: MemoryRegion
+
+
+class ShadowVerbs:
+    """Wraps a verbs Context; every data-path call goes through shadows."""
+
+    def __init__(self, ctx: Context):
+        self.ctx = ctx
+        self._mrs: Dict[int, _ShadowMR] = {}      # user mrn -> pair
+        self._wr_map: Dict[int, int] = {}         # wr_id bookkeeping
+        self._qp_log: Dict[int, list] = defaultdict(list)
+
+    # -- object shadowing -------------------------------------------------------
+    def reg_mr(self, pd, size: int) -> MemoryRegion:
+        user = pd.reg_mr(size)
+        shadow = pd.reg_mr(size)
+        self._mrs[user.mrn] = _ShadowMR(user, shadow)
+        return user
+
+    def create_qp(self, pd, send_cq, recv_cq, srq=None) -> QueuePair:
+        qp = pd.create_qp(send_cq, recv_cq, srq)
+        self._qp_log[qp.qpn] = []
+        return qp
+
+    # -- data path (interception overhead lives here) -----------------------------
+    def post_send(self, qp: QueuePair, wr: SendWR):
+        pair = self._mrs[wr.sge.mr.mrn]
+        # bounce copy user -> shadow, rewrite the WR to the shadow MR
+        data = wr.sge.mr.read(wr.sge.offset, wr.sge.length)
+        pair.shadow.write(wr.sge.offset, data)
+        rewritten = SendWR(wr.wr_id, wr.opcode,
+                           SGE(pair.shadow, wr.sge.offset, wr.sge.length),
+                           wr.raddr, wr.rkey)
+        self._wr_map[wr.wr_id] = wr.sge.mr.mrn
+        self._qp_log[qp.qpn].append(("send", wr.wr_id, wr.sge.length))
+        qp.post_send(rewritten)
+
+    def post_recv(self, qp: QueuePair, wr: RecvWR):
+        pair = self._mrs[wr.sge.mr.mrn]
+        rewritten = RecvWR(wr.wr_id,
+                           SGE(pair.shadow, wr.sge.offset, wr.sge.length))
+        self._wr_map[wr.wr_id] = wr.sge.mr.mrn
+        self._qp_log[qp.qpn].append(("recv", wr.wr_id, wr.sge.length))
+        qp.post_recv(rewritten)
+
+    def poll(self, cq, n: int = 1):
+        wcs = cq.poll(n)
+        for wc in wcs:
+            mrn = self._wr_map.pop(wc.wr_id, None)
+            if mrn is None:
+                continue
+            pair = self._mrs[mrn]
+            if wc.opcode == "RECV":
+                # bounce copy shadow -> user on completion
+                pair.user.buf[:wc.byte_len] = pair.shadow.buf[:wc.byte_len]
+        return wcs

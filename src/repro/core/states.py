@@ -1,0 +1,70 @@
+"""QP state machine (paper Fig. 4).
+
+Standard IB verbs states: Reset, Init, RTR, RTS, SQD, SQE, Error.
+MigrOS adds two states invisible to the user application:        # [MIGR]
+  * STOPPED — set by ``dump_context``; the QP neither sends nor receives;
+    incoming packets are answered with NAK_STOPPED and dropped.   # [MIGR]
+  * PAUSED  — entered when the partner QP reports STOPPED; sending is
+    suspended until a RESUME message re-addresses the connection. # [MIGR]
+"""
+from __future__ import annotations
+
+import enum
+
+
+class QPState(enum.Enum):
+    RESET = "RESET"
+    INIT = "INIT"
+    RTR = "RTR"          # ready to receive
+    RTS = "RTS"          # ready to send
+    SQD = "SQD"          # send queue drain
+    SQE = "SQE"          # send queue error
+    ERROR = "ERROR"
+    STOPPED = "STOPPED"  # [MIGR] checkpoint side
+    PAUSED = "PAUSED"    # [MIGR] partner side
+
+
+# Transitions available to the *user application* via modify_qp
+# (paper: normal states/transitions).
+USER_TRANSITIONS = {
+    (QPState.RESET, QPState.INIT),
+    (QPState.INIT, QPState.RTR),
+    (QPState.RTR, QPState.RTS),
+    (QPState.RTS, QPState.SQD),
+    (QPState.SQD, QPState.RTS),
+    # any state can be torn down to RESET or ERROR by the user
+}
+
+# Transitions driven by the OS / NIC.
+SYSTEM_TRANSITIONS = {
+    (QPState.RTS, QPState.ERROR),
+    (QPState.RTR, QPState.ERROR),
+    (QPState.RTS, QPState.SQE),
+    (QPState.RTS, QPState.STOPPED),    # [MIGR] dump_context
+    (QPState.RTR, QPState.STOPPED),    # [MIGR]
+    (QPState.SQD, QPState.STOPPED),    # [MIGR]
+    (QPState.RTS, QPState.PAUSED),     # [MIGR] partner saw NAK_STOPPED
+    (QPState.PAUSED, QPState.RTS),     # [MIGR] resume received
+    (QPState.STOPPED, QPState.RESET),  # [MIGR] destroyed with checkpoint
+}
+
+
+class InvalidTransition(Exception):
+    pass
+
+
+def check_transition(cur: QPState, new: QPState, *, system: bool = False):
+    if new in (QPState.RESET, QPState.ERROR) and not system:
+        return  # user may always tear down
+    table = SYSTEM_TRANSITIONS if system else USER_TRANSITIONS
+    if (cur, new) not in table:
+        raise InvalidTransition(f"{cur.value} -> {new.value} "
+                                f"({'system' if system else 'user'})")
+
+
+def can_send(state: QPState) -> bool:
+    return state == QPState.RTS
+
+
+def can_receive(state: QPState) -> bool:
+    return state in (QPState.RTR, QPState.RTS, QPState.SQD)

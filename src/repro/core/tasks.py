@@ -1,0 +1,227 @@
+"""Requester / responder / completer QP tasks (paper Fig. 6).
+
+These three tasks are what a hardware RoCEv2 NIC implements in silicon, so
+changes here "directly translate to hardware changes" (paper §5.1). The
+migration additions on the *fast path* are single-branch checks marked
+# [MIGR]; everything else migration-related runs only while a connection is
+actually migrating — mirroring the paper's minimal-changes claim, which
+``benchmarks/table1_sloc.py`` quantifies.
+"""
+from __future__ import annotations
+
+from repro.core.packets import NakCode, Op, Packet
+from repro.core.states import QPState, can_receive, can_send
+
+
+def _wc(*args, **kw):
+    from repro.core.verbs import WorkCompletion
+    return WorkCompletion(*args, **kw)
+
+
+def _success():
+    from repro.core.verbs import WCStatus
+    return WCStatus.SUCCESS
+
+
+def _emit(qp, pkt: Packet):
+    qp.device.fabric.send(pkt)
+
+
+def _retx(qp, pkt: Packet):
+    """Retransmit: headers are rebuilt from the *current* QP context —
+    after a partner migration the stored packet's address is stale and the
+    resume handshake has updated qp.dest_*."""                 # [MIGR]
+    pkt.src_gid, pkt.src_qpn = qp.device.gid, qp.qpn             # [MIGR]
+    pkt.dest_gid, pkt.dest_qpn = qp.dest_gid, qp.dest_qpn        # [MIGR]
+    qp.device.fabric.send(pkt)
+
+
+def _mk(qp, op, **kw) -> Packet:
+    return Packet(op=op, src_gid=qp.device.gid, src_qpn=qp.qpn,
+                  dest_gid=qp.dest_gid, dest_qpn=qp.dest_qpn, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Requester: turns send WQEs into packets (go-back-N window)
+# ---------------------------------------------------------------------------
+
+
+def requester(qp):
+    if qp.state == QPState.PAUSED:                              # [MIGR]
+        return                                                  # [MIGR]
+    now = qp.device.fabric.now
+    if qp.resume_pending and qp.state == QPState.RTS:           # [MIGR]
+        # retried until the partner's RESUME_ACK arrives        # [MIGR]
+        if now - qp.last_resume_tx >= qp.RETRANS_TIMEOUT:       # [MIGR]
+            _emit(qp, _mk(qp, Op.RESUME, psn=qp.una))           # [MIGR]
+            qp.last_resume_tx = now                             # [MIGR]
+        return                                                  # [MIGR]
+    if not can_send(qp.state):
+        return
+    # retransmit on timeout (go-back-N)
+    if qp.inflight and now - qp.last_progress > qp.RETRANS_TIMEOUT:
+        for pkt in qp.inflight:
+            _retx(qp, pkt)
+        qp.last_progress = now
+        return
+    budget = qp.WINDOW - len(qp.inflight)
+    while budget > 0:
+        if qp.cur_wqe is None:
+            if not qp.sq:
+                return
+            qp.cur_wqe = qp.sq.popleft()
+            qp.cur_wqe.first_psn = qp.sq_psn
+        wr = qp.cur_wqe
+        if wr.opcode == Op.READ_REQ:
+            pkt = _mk(qp, Op.READ_REQ, psn=qp.sq_psn, raddr=wr.raddr,
+                      rkey=wr.rkey, length=wr.sge.length, wr_id=wr.wr_id)
+            wr.last_psn = qp.sq_psn
+            qp.sq_psn += 1
+            qp.inflight.append(pkt)
+            _emit(qp, pkt)
+            qp.pending_comp.append((wr.last_psn, wr.wr_id, "READ",
+                                    wr.sge.length))
+            qp.cur_wqe = None
+            budget -= 1
+            continue
+        chunk = min(qp.MTU, wr.sge.length - wr.sent)
+        payload = wr.sge.mr.read(wr.sge.offset + wr.sent, chunk)
+        first = wr.sent == 0
+        last = wr.sent + chunk >= wr.sge.length
+        pkt = _mk(qp, wr.opcode, psn=qp.sq_psn, payload=payload,
+                  first=first, last=last, wr_id=wr.wr_id,
+                  raddr=wr.raddr + wr.sent, rkey=wr.rkey,
+                  length=wr.sge.length)
+        wr.sent += chunk
+        wr.last_psn = qp.sq_psn
+        qp.sq_psn += 1
+        qp.inflight.append(pkt)
+        _emit(qp, pkt)
+        budget -= 1
+        if last:
+            qp.pending_comp.append((wr.last_psn, wr.wr_id,
+                                    wr.opcode.value, wr.sge.length))
+            qp.cur_wqe = None
+
+
+# ---------------------------------------------------------------------------
+# Responder: consumes request packets, ACKs, fills RRs / MRs
+# ---------------------------------------------------------------------------
+
+
+def responder(qp):
+    n = len(qp.rx)
+    for _ in range(n):
+        pkt = qp.rx.popleft()
+        if pkt.op in (Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK,
+                      Op.READ_RESP):
+            qp.rx.append(pkt)         # completer-class packet; requeue
+            continue
+        if qp.state == QPState.STOPPED:                          # [MIGR]
+            _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,               # [MIGR]
+                          nak_code=NakCode.STOPPED))             # [MIGR]
+            continue                                             # [MIGR]
+        if not can_receive(qp.state):
+            continue
+        if pkt.psn != qp.epsn:
+            if pkt.psn < qp.epsn:   # duplicate: re-ack, drop
+                _emit(qp, _mk(qp, Op.ACK, psn=qp.epsn - 1))
+            elif qp.last_nak_epsn != qp.epsn:   # one NAK per gap (RoCE)
+                qp.last_nak_epsn = qp.epsn
+                _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
+                              nak_code=NakCode.PSN_SEQ_ERR))
+            continue
+        if pkt.op == Op.SEND:
+            if pkt.first and qp.cur_rr is None:
+                qp.cur_rr = qp.next_rr()
+            rr = qp.cur_rr
+            if rr is None:
+                # RNR: no receive posted yet — nak so sender retries
+                _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
+                              nak_code=NakCode.PSN_SEQ_ERR))
+                continue
+            rr.sge.mr.write(rr.sge.offset + rr.received, pkt.payload)
+            rr.received += len(pkt.payload)
+            qp.epsn += 1
+            qp.last_nak_epsn = -1
+            _emit(qp, _mk(qp, Op.ACK, psn=pkt.psn))
+            if pkt.last:
+                qp.recv_cq.push(_wc(rr.wr_id, _success(), "RECV",
+                                    rr.received, qp.qpn))
+                qp.cur_rr = None
+        elif pkt.op == Op.WRITE:
+            mr = qp.device.rkey_lookup(pkt.rkey)
+            if mr is None:
+                _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
+                              nak_code=NakCode.INVALID_RKEY))
+                continue
+            mr.write(pkt.raddr, pkt.payload)
+            qp.epsn += 1
+            qp.last_nak_epsn = -1
+            _emit(qp, _mk(qp, Op.ACK, psn=pkt.psn))
+        elif pkt.op == Op.READ_REQ:
+            mr = qp.device.rkey_lookup(pkt.rkey)
+            if mr is None:
+                _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
+                              nak_code=NakCode.INVALID_RKEY))
+                continue
+            qp.epsn += 1
+            data = mr.read(pkt.raddr, pkt.length)
+            _emit(qp, _mk(qp, Op.READ_RESP, psn=pkt.psn, payload=data,
+                          wr_id=pkt.wr_id))
+
+
+# ---------------------------------------------------------------------------
+# Completer: processes ACK/NAK (+ resume) and posts send completions
+# ---------------------------------------------------------------------------
+
+
+def _ack_up_to(qp, psn: int):
+    while qp.inflight and qp.inflight[0].psn <= psn:
+        qp.inflight.popleft()
+    if psn >= qp.una:
+        qp.una = psn + 1
+        qp.last_progress = qp.device.fabric.now
+    while qp.pending_comp and qp.pending_comp[0][0] <= psn:
+        _, wr_id, opcode, blen = qp.pending_comp.popleft()
+        qp.send_cq.push(_wc(wr_id, _success(), opcode, blen, qp.qpn))
+
+
+def completer(qp):
+    n = len(qp.rx)
+    for _ in range(n):
+        pkt = qp.rx.popleft()
+        if pkt.op not in (Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK,
+                          Op.READ_RESP):
+            qp.rx.append(pkt)
+            continue
+        if pkt.op == Op.ACK:
+            _ack_up_to(qp, pkt.psn)
+        elif pkt.op == Op.READ_RESP:
+            # single-MTU READ: find the pending read WR, deliver payload
+            _ack_up_to(qp, pkt.psn)
+        elif pkt.op == Op.NAK:
+            if pkt.nak_code == NakCode.STOPPED:                  # [MIGR]
+                if qp.state == QPState.RTS:                      # [MIGR]
+                    qp.modify(QPState.PAUSED, system=True)       # [MIGR]
+                # drop everything in flight; resume retransmits   # [MIGR]
+                continue                                         # [MIGR]
+            # go-back-N: retransmit from the requested psn
+            for p in qp.inflight:
+                if p.psn >= pkt.psn:
+                    _retx(qp, p)
+            qp.last_progress = qp.device.fabric.now
+        elif pkt.op == Op.RESUME:                                # [MIGR]
+            # Partner migrated: learn its new address (the source of the
+            # resume), leave PAUSED, ack the last packet we received.
+            qp.dest_gid = pkt.src_gid                            # [MIGR]
+            qp.dest_qpn = pkt.src_qpn                            # [MIGR]
+            if qp.state == QPState.PAUSED:                       # [MIGR]
+                qp.modify(QPState.RTS, system=True)              # [MIGR]
+            _emit(qp, _mk(qp, Op.RESUME_ACK, psn=qp.epsn - 1))   # [MIGR]
+        elif pkt.op == Op.RESUME_ACK:                            # [MIGR]
+            qp.resume_pending = False                            # [MIGR]
+            _ack_up_to(qp, pkt.psn)                              # [MIGR]
+            for p in qp.inflight:                                # [MIGR]
+                _retx(qp, p)                                     # [MIGR]
+            qp.last_progress = qp.device.fabric.now              # [MIGR]

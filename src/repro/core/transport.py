@@ -1,0 +1,80 @@
+"""Software fabric: deterministic packet router between nodes.
+
+Plays the role SoftRoCE plays in the paper — a software implementation of
+the wire protocol that lets the OS inspect and control everything. The
+fabric is synchronous and step-driven (no threads): ``pump()`` delivers
+in-flight packets and runs every QP's requester/responder/completer tasks
+once; determinism makes protocol tests exact. Loss injection exercises the
+go-back-N retransmission path that migration relies on.
+"""
+from __future__ import annotations
+
+import random
+from collections import defaultdict, deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.packets import Packet
+
+
+class Fabric:
+    def __init__(self, *, loss_prob: float = 0.0, seed: int = 0,
+                 latency_steps: int = 1, bandwidth_Bps: float = 40e9 / 8):
+        self.loss_prob = loss_prob
+        self.rng = random.Random(seed)
+        self.latency = max(1, latency_steps)
+        self.bandwidth = bandwidth_Bps
+        self.now = 0
+        self._wire: deque = deque()           # (deliver_at, packet)
+        self._devices: Dict[int, "RdmaDevice"] = {}   # gid -> device
+        self.stats = defaultdict(int)
+        self.trace: Optional[List[Packet]] = None
+
+    # -- topology ------------------------------------------------------------
+    def attach(self, gid: int, device):
+        assert gid not in self._devices, f"gid {gid} in use"
+        self._devices[gid] = device
+
+    def detach(self, gid: int):
+        self._devices.pop(gid, None)
+
+    def device(self, gid: int):
+        return self._devices.get(gid)
+
+    # -- wire ----------------------------------------------------------------
+    def send(self, pkt: Packet):
+        self.stats["tx_packets"] += 1
+        self.stats["tx_bytes"] += pkt.nbytes()
+        if self.trace is not None:
+            self.trace.append(pkt)
+        if self.rng.random() < self.loss_prob:
+            self.stats["dropped"] += 1
+            return
+        self._wire.append((self.now + self.latency, pkt))
+
+    def pump(self, steps: int = 1):
+        """Advance time: deliver due packets, then run all QP tasks."""
+        for _ in range(steps):
+            self.now += 1
+            undelivered = deque()
+            while self._wire:
+                at, pkt = self._wire.popleft()
+                if at > self.now:
+                    undelivered.append((at, pkt))
+                    continue
+                dev = self._devices.get(pkt.dest_gid)
+                if dev is None:
+                    self.stats["unroutable"] += 1   # [MIGR] old address
+                    continue
+                dev.receive(pkt)
+            self._wire = undelivered
+            for dev in list(self._devices.values()):
+                dev.run_tasks()
+
+    def run_until_idle(self, max_steps: int = 100_000) -> int:
+        """Pump until no packets are in flight and all QPs are quiescent."""
+        for i in range(max_steps):
+            self.pump()
+            if not self._wire and all(d.idle() for d in
+                                      self._devices.values()):
+                return i + 1
+        raise TimeoutError("fabric did not quiesce")

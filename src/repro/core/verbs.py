@@ -1,0 +1,327 @@
+"""IB-verbs-style object model over the software fabric.
+
+Objects mirror the paper's Fig. 2: Context > PD > {MR, QP(SQ,RQ), SRQ} with
+CQs for completions. Numbers (QPN/MRN) are device-assigned sequentially;
+``last_qpn``/``last_mrn`` expose the ns_last_pid-style restore mechanism
+(paper §4.1).                                                   # [MIGR]
+"""
+from __future__ import annotations
+
+import enum
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional
+
+from repro.core import tasks as qptasks
+from repro.core.packets import NakCode, Op, Packet
+from repro.core.states import QPState, can_send, check_transition
+
+
+class WCStatus(enum.Enum):
+    SUCCESS = "SUCCESS"
+    LOC_LEN_ERR = "LOC_LEN_ERR"
+    REM_ACCESS_ERR = "REM_ACCESS_ERR"
+    WR_FLUSH_ERR = "WR_FLUSH_ERR"
+
+
+@dataclass
+class WorkCompletion:
+    wr_id: int
+    status: WCStatus
+    opcode: str
+    byte_len: int = 0
+    qpn: int = 0
+
+
+@dataclass
+class SGE:
+    mr: "MemoryRegion"
+    offset: int
+    length: int
+
+
+@dataclass
+class SendWR:
+    wr_id: int
+    opcode: Op                      # SEND / WRITE / READ_REQ
+    sge: SGE
+    raddr: int = 0
+    rkey: int = 0
+    # requester progress (dumped as part of "current WQE state")
+    sent: int = 0
+    first_psn: int = -1
+    last_psn: int = -1
+
+
+@dataclass
+class RecvWR:
+    wr_id: int
+    sge: SGE
+    received: int = 0
+
+
+class MemoryRegion:
+    def __init__(self, pd: "ProtectionDomain", size: int, mrn: int,
+                 lkey: int, rkey: int):
+        self.pd = pd
+        self.size = size
+        self.mrn = mrn
+        self.lkey = lkey
+        self.rkey = rkey
+        self.buf = bytearray(size)
+
+    def write(self, off: int, data: bytes):
+        if off + len(data) > self.size:
+            raise IndexError("MR overflow")
+        self.buf[off:off + len(data)] = data
+
+    def read(self, off: int, length: int) -> bytes:
+        return bytes(self.buf[off:off + length])
+
+
+class CompletionQueue:
+    def __init__(self, cqn: int, depth: int = 4096):
+        self.cqn = cqn
+        self.depth = depth
+        self.ring: Deque[WorkCompletion] = deque(maxlen=depth)
+        self.head = 0                      # ring-buffer metadata (dumped)
+        self.tail = 0
+
+    def push(self, wc: WorkCompletion):
+        self.ring.append(wc)
+        self.tail += 1
+
+    def poll(self, n: int = 1) -> List[WorkCompletion]:
+        out = []
+        while self.ring and len(out) < n:
+            out.append(self.ring.popleft())
+            self.head += 1
+        return out
+
+
+class SharedReceiveQueue:
+    def __init__(self, srqn: int):
+        self.srqn = srqn
+        self.queue: Deque[RecvWR] = deque()
+
+    def post(self, wr: RecvWR):
+        self.queue.append(wr)
+
+
+class QueuePair:
+    MTU = 1024
+    WINDOW = 64
+    RETRANS_TIMEOUT = 200       # fabric steps
+
+    def __init__(self, pd: "ProtectionDomain", qpn: int,
+                 send_cq: CompletionQueue, recv_cq: CompletionQueue,
+                 srq: Optional[SharedReceiveQueue] = None):
+        self.pd = pd
+        self.device: "RdmaDevice" = pd.ctx.device
+        self.qpn = qpn
+        self.send_cq = send_cq
+        self.recv_cq = recv_cq
+        self.srq = srq
+        self.state = QPState.RESET
+        # addressing
+        self.dest_gid = -1
+        self.dest_qpn = -1
+        # requester
+        self.sq: Deque[SendWR] = deque()
+        self.cur_wqe: Optional[SendWR] = None
+        self.sq_psn = 0                 # next PSN to assign
+        self.una = 0                    # oldest unacknowledged PSN
+        self.inflight: Deque[Packet] = deque()
+        self.last_progress = 0
+        self.pending_comp: Deque = deque()   # (last_psn, wr_id, opcode, len)
+        # responder
+        self.rq: Deque[RecvWR] = deque()
+        self.epsn = 0                   # next expected PSN
+        self.last_nak_epsn = -1         # NAK suppression (one per gap)
+        self.cur_rr: Optional[RecvWR] = None
+        self.rx: Deque[Packet] = deque()
+        # migration                                              # [MIGR]
+        self.resume_pending = False     # REFILL queues a resume  # [MIGR]
+        self.last_resume_tx = -10**9    # resume retry timer      # [MIGR]
+
+    # -- user API --------------------------------------------------------------
+    def modify(self, new_state: QPState, *, dest_gid: int = None,
+               dest_qpn: int = None, rq_psn: int = None, sq_psn: int = None,
+               system: bool = False):
+        check_transition(self.state, new_state, system=system)
+        if new_state == QPState.RTR:
+            if dest_gid is not None:
+                self.dest_gid = dest_gid
+            if dest_qpn is not None:
+                self.dest_qpn = dest_qpn
+            if rq_psn is not None:
+                self.epsn = rq_psn
+        if new_state == QPState.RTS and sq_psn is not None:
+            self.sq_psn = sq_psn
+            self.una = sq_psn
+        self.state = new_state
+
+    def post_send(self, wr: SendWR):
+        if self.state not in (QPState.RTS, QPState.PAUSED):
+            raise RuntimeError(f"post_send in {self.state}")
+        self.sq.append(wr)
+
+    def post_recv(self, wr: RecvWR):
+        self.rq.append(wr)
+
+    # -- helpers ----------------------------------------------------------------
+    def next_rr(self) -> Optional[RecvWR]:
+        if self.srq is not None and self.srq.queue:
+            return self.srq.queue.popleft()
+        if self.rq:
+            return self.rq.popleft()
+        return None
+
+    def idle(self) -> bool:
+        if self.state in (QPState.PAUSED, QPState.STOPPED, QPState.ERROR,
+                          QPState.RESET, QPState.INIT):
+            return not self.rx
+        return (not self.sq and self.cur_wqe is None and
+                not self.inflight and not self.rx and
+                not self.resume_pending)
+
+
+class ProtectionDomain:
+    def __init__(self, ctx: "Context", pdn: int):
+        self.ctx = ctx
+        self.pdn = pdn
+
+    def reg_mr(self, size: int) -> MemoryRegion:
+        return self.ctx.device.reg_mr(self, size)
+
+    def create_qp(self, send_cq, recv_cq, srq=None) -> QueuePair:
+        return self.ctx.device.create_qp(self, send_cq, recv_cq, srq)
+
+
+class Context:
+    """Per-container verbs context (the unit of dump_context)."""
+
+    def __init__(self, device: "RdmaDevice", ctx_id: int):
+        self.device = device
+        self.ctx_id = ctx_id
+        self.pds: List[ProtectionDomain] = []
+        self.mrs: List[MemoryRegion] = []
+        self.cqs: List[CompletionQueue] = []
+        self.srqs: List[SharedReceiveQueue] = []
+        self.qps: List[QueuePair] = []
+
+    def alloc_pd(self) -> ProtectionDomain:
+        pd = ProtectionDomain(self, self.device.next_pdn())
+        self.pds.append(pd)
+        return pd
+
+    def create_cq(self, depth: int = 4096) -> CompletionQueue:
+        cq = CompletionQueue(self.device.next_cqn(), depth)
+        self.cqs.append(cq)
+        return cq
+
+    def create_srq(self) -> SharedReceiveQueue:
+        srq = SharedReceiveQueue(self.device.next_srqn())
+        self.srqs.append(srq)
+        return srq
+
+
+class RdmaDevice:
+    """The 'NIC': owns numbering, routes packets to QPs, runs QP tasks."""
+
+    def __init__(self, fabric, gid: int, *, qpn_base: Optional[int] = None):
+        self.fabric = fabric
+        self.gid = gid
+        fabric.attach(gid, self)
+        self.rng = random.Random(gid * 7919 + 13)
+        # Cluster-wide QPN/MRN partitioning (paper §4.1): each node owns a
+        # disjoint range so restored IDs never collide.          # [MIGR]
+        base = qpn_base if qpn_base is not None else gid * 1_000_000
+        self._qpn = base
+        self._mrn = base
+        self._pdn = base
+        self._cqn = base
+        self._srqn = base
+        self.last_qpn: Optional[int] = None   # [MIGR] ns_last_pid analogue
+        self.last_mrn: Optional[int] = None   # [MIGR]
+        self.qps: Dict[int, QueuePair] = {}
+        self.contexts: List[Context] = []
+
+    # -- numbering ---------------------------------------------------------------
+    def next_pdn(self):
+        self._pdn += 1
+        return self._pdn
+
+    def next_cqn(self):
+        self._cqn += 1
+        return self._cqn
+
+    def next_srqn(self):
+        self._srqn += 1
+        return self._srqn
+
+    # -- object creation -----------------------------------------------------------
+    def open_context(self) -> Context:
+        ctx = Context(self, len(self.contexts))
+        self.contexts.append(ctx)
+        return ctx
+
+    def reg_mr(self, pd: ProtectionDomain, size: int) -> MemoryRegion:
+        if self.last_mrn is not None:                        # [MIGR]
+            mrn, self.last_mrn = self.last_mrn + 1, None     # [MIGR]
+            if any(m.mrn == mrn for m in pd.ctx.mrs):        # [MIGR]
+                raise RuntimeError(f"MRN {mrn} collision")   # [MIGR]
+            self._mrn = max(self._mrn, mrn)                  # [MIGR]
+        else:
+            self._mrn += 1
+            mrn = self._mrn
+        mr = MemoryRegion(pd, size, mrn,
+                          lkey=self.rng.getrandbits(32),
+                          rkey=self.rng.getrandbits(32))
+        pd.ctx.mrs.append(mr)
+        return mr
+
+    def create_qp(self, pd, send_cq, recv_cq, srq=None) -> QueuePair:
+        if self.last_qpn is not None:                        # [MIGR]
+            qpn, self.last_qpn = self.last_qpn + 1, None     # [MIGR]
+            if qpn in self.qps:                              # [MIGR]
+                raise RuntimeError(f"QPN {qpn} collision")   # [MIGR]
+            self._qpn = max(self._qpn, qpn)                  # [MIGR]
+        else:
+            self._qpn += 1
+            qpn = self._qpn
+        qp = QueuePair(pd, qpn, send_cq, recv_cq, srq)
+        self.qps[qpn] = qp
+        pd.ctx.qps.append(qp)
+        return qp
+
+    def destroy_qp(self, qpn: int):
+        qp = self.qps.pop(qpn, None)
+        if qp is not None:
+            for ctx in self.contexts:
+                if qp in ctx.qps:
+                    ctx.qps.remove(qp)
+
+    # -- fabric interface ------------------------------------------------------------
+    def receive(self, pkt: Packet):
+        qp = self.qps.get(pkt.dest_qpn)
+        if qp is None:
+            return  # dropped; sender's go-back-N recovers after migration
+        qp.rx.append(pkt)
+
+    def run_tasks(self):
+        for qp in list(self.qps.values()):
+            qptasks.responder(qp)
+            qptasks.completer(qp)
+            qptasks.requester(qp)
+
+    def idle(self) -> bool:
+        return all(qp.idle() for qp in self.qps.values())
+
+    def rkey_lookup(self, rkey: int):
+        for ctx in self.contexts:
+            for mr in ctx.mrs:
+                if mr.rkey == rkey:
+                    return mr
+        return None

@@ -1,0 +1,105 @@
+"""Pure-jnp oracles for every kernel. Small-shape, O(S^2)/sequential —
+ground truth for kernel tests and for the blocked/pallas implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None):
+    """Naive masked attention.
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, Kh, hd] with H % Kh == 0.
+    ``window`` > 0 restricts key j for query i to i - window < j <= i.
+    Query positions are right-aligned: qpos = Sk - Sq + arange(Sq).
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, Kh, _ = k.shape
+    G = H // Kh
+    scale = scale if scale is not None else hd ** -0.5
+    qf = q.reshape(B, Sq, Kh, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bckh->bkgqc", qf, kf) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = (Sk - Sq) + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= (qpos[:, None] - kpos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def rglru_ref(x, a_log, gate_a, gate_x, *, c: float = 8.0):
+    """RG-LRU (Griffin eq. 2-4), sequential over time.
+
+    x:       [B, S, D]  input
+    a_log:   [D]        learnable Lambda (pre-softplus)
+    gate_a:  [B, S, D]  recurrence gate pre-activation  r_t
+    gate_x:  [B, S, D]  input gate pre-activation       i_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+    log a_t = -c * softplus(a_log) * sigmoid(r_t).
+    Returns (y [B,S,D], h_final [B,D]). Computation in float32.
+    """
+    xf = x.astype(jnp.float32)
+    log_a = -c * jax.nn.softplus(a_log.astype(jnp.float32)) * \
+        jax.nn.sigmoid(gate_a.astype(jnp.float32))            # [B,S,D]
+    a = jnp.exp(log_a)
+    gated_x = jax.nn.sigmoid(gate_x.astype(jnp.float32)) * xf
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = beta * gated_x
+
+    def step(h, inp):
+        a_t, bx_t = inp
+        h = a_t * h + bx_t
+        return h, h
+
+    h0 = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+    hT, ys = jax.lax.scan(step, h0, (a.swapaxes(0, 1), bx.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype), hT
+
+
+def ssd_ref(x, dt, A_log, B, C, *, D=None, h0=None):
+    """Mamba-2 SSD, sequential-over-time oracle.
+
+    x:  [b, S, H, P]   inputs (already post-conv/activation)
+    dt: [b, S, H]      softplus'd step sizes (> 0)
+    A_log: [H]         per-head decay (a_t = exp(-exp(A_log) * dt))
+    B:  [b, S, G, N]   input projections (G groups, H % G == 0)
+    C:  [b, S, G, N]   output projections
+    D:  [H] or None    skip connection
+    h0: [b, H, P, N]   initial state
+    Returns (y [b,S,H,P], h_final [b,H,P,N]).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(-jnp.exp(A_log.astype(jnp.float32))[None, None] * dtf)  # [b,S,H]
+    Bf = jnp.repeat(B.astype(jnp.float32), rep, axis=2)   # [b,S,H,N]
+    Cf = jnp.repeat(C.astype(jnp.float32), rep, axis=2)
+
+    def step(h, inp):
+        x_t, dt_t, a_t, B_t, C_t = inp
+        # h: [b,H,P,N]
+        h = a_t[..., None, None] * h + \
+            (dt_t[..., None, None] * x_t[..., None]) * B_t[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", h, C_t)
+        return h, y
+
+    if h0 is None:
+        h0 = jnp.zeros((b, H, P, N), jnp.float32)
+    xs = (xf.swapaxes(0, 1), dtf.swapaxes(0, 1), a.swapaxes(0, 1),
+          Bf.swapaxes(0, 1), Cf.swapaxes(0, 1))
+    hT, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    y = ys.swapaxes(0, 1)
+    if D is not None:
+        y = y + D.astype(jnp.float32)[None, None, :, None] * xf
+    return y.astype(x.dtype), hT

@@ -1,0 +1,352 @@
+"""Attention mixers: GQA/MQA (global + sliding-window), MLA, cross-attention.
+
+Full-sequence paths (train/prefill) route through ``repro.kernels.ops``;
+decode paths update KV caches in place (functionally) and use the decode
+kernels. All caches are explicit pytrees so they serialise through the
+MigrOS dump/restore machinery like any other buffer.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import ParamDef, apply_rope
+from repro.sharding.partition import constrain
+
+# ---------------------------------------------------------------------------
+# Standard GQA/MQA attention
+# ---------------------------------------------------------------------------
+
+
+def attn_def(cfg: ModelConfig):
+    D = cfg.d_model
+    d = {
+        "wq": ParamDef((D, cfg.q_dim), ("embed", "heads")),
+        "wk": ParamDef((D, cfg.kv_dim), ("embed", "heads")),
+        "wv": ParamDef((D, cfg.kv_dim), ("embed", "heads")),
+        "wo": ParamDef((cfg.q_dim, D), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        d["q_norm"] = ParamDef((cfg.head_dim,), ("norm",), "zeros")
+        d["k_norm"] = ParamDef((cfg.head_dim,), ("norm",), "zeros")
+    return d
+
+
+def _rms_head(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _qkv(cfg: ModelConfig, p, x, positions, rope=True):
+    dt = x.dtype
+    B, S, _ = x.shape
+    H, Kh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, H, hd)
+    k = (x @ p["wk"].astype(dt)).reshape(B, S, Kh, hd)
+    v = (x @ p["wv"].astype(dt)).reshape(B, S, Kh, hd)
+    if cfg.qk_norm:
+        q = _rms_head(q, p["q_norm"], cfg.norm_eps)
+        k = _rms_head(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_pct, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_pct, cfg.rope_theta)
+    if cfg.qkv_constraint == "batch":
+        # pin activations to batch-sharded/heads-on-TP: stops the
+        # partitioner from sequence-sharding MQA K/V, which turns every
+        # blocked-attention slice into a collective (§Perf, cell B)
+        q = constrain(q, ("batch", None, "heads", None))
+        k = constrain(k, ("batch", None, "heads", None))
+        v = constrain(v, ("batch", None, "heads", None))
+    return q, k, v
+
+
+def attn_forward(cfg: ModelConfig, p, x, positions, *, kind="attn",
+                 causal=True, impl=None, schedule="full"):
+    """x: [B,S,D]; positions: [B,S] absolute. Returns [B,S,D]."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(cfg, p, x, positions)
+    window = cfg.local_window if kind == "local" else 0
+    o = ops.attention(q, k, v, causal=causal, window=window,
+                      softcap=cfg.attn_logit_softcap, impl=impl,
+                      schedule=schedule)
+    return o.reshape(B, S, cfg.q_dim) @ p["wo"].astype(x.dtype)
+
+
+def attn_cache_def(cfg: ModelConfig, kind, batch, capacity, dtype):
+    """ShapeDtypeStructs for one layer's cache (materialise via zeros_like)."""
+    Kh, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind == "local":
+        W = min(cfg.local_window, capacity)
+        return {
+            "k": jax.ShapeDtypeStruct((batch, W, Kh, hd), dtype),
+            "v": jax.ShapeDtypeStruct((batch, W, Kh, hd), dtype),
+            "slot_pos": jax.ShapeDtypeStruct((batch, W), jnp.int32),
+        }
+    return {
+        "k": jax.ShapeDtypeStruct((batch, capacity, Kh, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, capacity, Kh, hd), dtype),
+    }
+
+
+def attn_cache_axes(cfg: ModelConfig, kind):
+    """Logical axes for the cache entries (mirrors ``attn_cache_def``).
+
+    KV-head-rich caches shard heads over TP; MQA caches shard the sequence
+    dim over whatever mesh axes remain (see sharding.partition rules).
+    """
+    if cfg.num_kv_heads % 8 == 0:
+        kv = ("batch", "seq_data", "heads", None)
+    else:
+        kv = ("batch", "seq_kv", None, None)
+    d = {"k": kv, "v": kv}
+    if kind == "local":
+        d["slot_pos"] = (kv[0], kv[1])
+    return d
+
+
+def mla_cache_axes(cfg: ModelConfig):
+    return {"ckv": ("batch", "seq_kv", None),
+            "kpe": ("batch", "seq_kv", None)}
+
+
+def _write_at(cache, new, idx):
+    """cache: [B,S,...]; new: [B,1,...]; idx: [B] -> per-row dynamic update."""
+    def row(c, n, i):
+        start = (i,) + (0,) * (c.ndim - 1)
+        return jax.lax.dynamic_update_slice(c, n, start)
+    return jax.vmap(row)(cache, new, idx)
+
+
+def attn_decode(cfg: ModelConfig, p, x, cache, positions, *, kind="attn"):
+    """x: [B,1,D]; positions: [B] index of the new token. -> (y, cache)."""
+    B = x.shape[0]
+    q, k, v = _qkv(cfg, p, x, positions[:, None])
+    lengths = positions + 1
+    if kind == "local":
+        W = cache["k"].shape[1]
+        slot = positions % W
+        cache = dict(cache,
+                     k=_write_at(cache["k"], k, slot),
+                     v=_write_at(cache["v"], v, slot),
+                     slot_pos=_write_at(cache["slot_pos"],
+                                        positions[:, None], slot))
+        o = ops.attention_decode(q, cache["k"], cache["v"], lengths,
+                                 window=cfg.local_window,
+                                 softcap=cfg.attn_logit_softcap,
+                                 slot_positions=cache["slot_pos"])
+    else:
+        cache = dict(cache,
+                     k=_write_at(cache["k"], k, positions),
+                     v=_write_at(cache["v"], v, positions))
+        o = ops.attention_decode(q, cache["k"], cache["v"], lengths,
+                                 softcap=cfg.attn_logit_softcap)
+    y = o.reshape(B, 1, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return y, cache
+
+
+def attn_prefill_cache(cfg: ModelConfig, p, x, positions, *, kind, capacity):
+    """Build a decode cache from a full prefix (used by ``LM.prefill``)."""
+    B, S, _ = x.shape
+    _, k, v = _qkv(cfg, p, x, positions)
+    dtype = k.dtype
+    Kh, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind == "local":
+        W = min(cfg.local_window, capacity)
+        # keep the last W positions, placed at their ring slots
+        pos_last = positions[:, -1]                        # [B]
+        take = jnp.arange(W)                               # ring slots
+        # slot s holds absolute position p where p % W == s and p in (last-W, last]
+        def gather_row(kr, vr, plast):
+            pos_for_slot = plast - ((plast - take) % W)    # [W]
+            ok = pos_for_slot >= jnp.maximum(0, plast - W + 1)
+            src = jnp.clip(pos_for_slot - (positions[0, 0] * 0), 0, S - 1)
+            kk = kr[src] * ok[:, None, None].astype(kr.dtype)
+            vv = vr[src] * ok[:, None, None].astype(vr.dtype)
+            return kk, vv, jnp.where(ok, pos_for_slot, -1)
+        kk, vv, sp = jax.vmap(gather_row)(k, v, pos_last)
+        return {"k": kk, "v": vv, "slot_pos": sp}
+    padk = jnp.zeros((B, capacity - S, Kh, hd), dtype)
+    return {"k": jnp.concatenate([k, padk], 1),
+            "v": jnp.concatenate([v, padk], 1)}
+
+
+# ---------------------------------------------------------------------------
+# Multi-head Latent Attention (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+
+def mla_def(cfg: ModelConfig):
+    m = cfg.mla
+    D, H = cfg.d_model, cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    d = {}
+    if m.q_lora_rank:
+        d["wq_a"] = ParamDef((D, m.q_lora_rank), ("embed", "lora"))
+        d["q_norm"] = ParamDef((m.q_lora_rank,), ("norm",), "zeros")
+        d["wq_b"] = ParamDef((m.q_lora_rank, H * qk_head), ("lora", "heads"))
+    else:
+        d["wq"] = ParamDef((D, H * qk_head), ("embed", "heads"))
+    d["wkv_a"] = ParamDef((D, m.kv_lora_rank + m.qk_rope_head_dim),
+                          ("embed", "lora"))
+    d["kv_norm"] = ParamDef((m.kv_lora_rank,), ("norm",), "zeros")
+    d["wkv_b"] = ParamDef((m.kv_lora_rank,
+                           H * (m.qk_nope_head_dim + m.v_head_dim)),
+                          ("lora", "heads"))
+    d["wo"] = ParamDef((H * m.v_head_dim, D), ("heads", "embed"))
+    return d
+
+
+def _rms_vec(x, scale, eps):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def _mla_q(cfg, p, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    dt = x.dtype
+    if m.q_lora_rank:
+        qa = _rms_vec(x @ p["wq_a"].astype(dt), p["q_norm"], cfg.norm_eps)
+        q = (qa @ p["wq_b"].astype(dt)).reshape(B, S, H, qk_head)
+    else:
+        q = (x @ p["wq"].astype(dt)).reshape(B, S, H, qk_head)
+    q_nope, q_pe = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_pe = apply_rope(q_pe, positions, 1.0, cfg.rope_theta)
+    return q_nope, q_pe
+
+
+def _mla_ckv(cfg, p, x, positions):
+    m = cfg.mla
+    dt = x.dtype
+    ckv = x @ p["wkv_a"].astype(dt)
+    c, kpe = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+    c = _rms_vec(c, p["kv_norm"], cfg.norm_eps)
+    kpe = apply_rope(kpe[..., None, :], positions, 1.0, cfg.rope_theta)[..., 0, :]
+    return c, kpe
+
+
+def mla_forward(cfg: ModelConfig, p, x, positions, *, impl=None,
+                schedule="full"):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    dt = x.dtype
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_nope, q_pe = _mla_q(cfg, p, x, positions)
+    c, kpe = _mla_ckv(cfg, p, x, positions)
+    kv = (c @ p["wkv_b"].astype(dt)).reshape(
+        B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kv[..., :m.qk_nope_head_dim], kv[..., m.qk_nope_head_dim:]
+    q = jnp.concatenate([q_nope, q_pe], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(kpe[:, :, None], q_pe.shape)], -1)
+    # pad v to qk_head so the shared kernel applies; slice after
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, qk_head - m.v_head_dim)))
+    o = ops.attention(q, k, vp, causal=True, scale=qk_head ** -0.5,
+                      impl=impl, schedule=schedule)[..., :m.v_head_dim]
+    return o.reshape(B, S, H * m.v_head_dim) @ p["wo"].astype(dt)
+
+
+def mla_cache_def(cfg: ModelConfig, batch, capacity, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, capacity, m.kv_lora_rank), dtype),
+        "kpe": jax.ShapeDtypeStruct((batch, capacity, m.qk_rope_head_dim),
+                                    dtype),
+    }
+
+
+def mla_decode(cfg: ModelConfig, p, x, cache, positions):
+    """Absorbed-matmul MLA decode over the compressed cache."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    dt = x.dtype
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q_nope, q_pe = _mla_q(cfg, p, x, positions[:, None])    # [B,1,H,*]
+    c, kpe = _mla_ckv(cfg, p, x, positions[:, None])
+    cache = dict(cache,
+                 ckv=_write_at(cache["ckv"], c, positions),
+                 kpe=_write_at(cache["kpe"], kpe, positions))
+    wkv_b = p["wkv_b"].astype(dt).reshape(
+        m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    w_k = wkv_b[..., :m.qk_nope_head_dim]                   # [L,H,nope]
+    w_v = wkv_b[..., m.qk_nope_head_dim:]                   # [L,H,v]
+    q_eff = jnp.einsum("bhn,lhn->bhl", q_nope[:, 0], w_k)   # [B,H,L]
+    scale = qk_head ** -0.5
+    lengths = positions + 1
+    S = cache["ckv"].shape[1]
+    sc = (jnp.einsum("bhl,bsl->bhs", q_eff.astype(jnp.float32),
+                     cache["ckv"].astype(jnp.float32)) +
+          jnp.einsum("bhr,bsr->bhs", q_pe[:, 0].astype(jnp.float32),
+                     cache["kpe"].astype(jnp.float32))) * scale
+    valid = jnp.arange(S)[None] < lengths[:, None]
+    sc = jnp.where(valid[:, None], sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    ctx = jnp.einsum("bhs,bsl->bhl", pr,
+                     cache["ckv"].astype(jnp.float32))      # [B,H,L]
+    o = jnp.einsum("bhl,lhv->bhv", ctx, w_v.astype(jnp.float32))
+    y = o.reshape(B, 1, H * m.v_head_dim).astype(dt) @ p["wo"].astype(dt)
+    return y, cache
+
+
+def mla_prefill_cache(cfg: ModelConfig, p, x, positions, *, capacity):
+    m = cfg.mla
+    B, S, _ = x.shape
+    c, kpe = _mla_ckv(cfg, p, x, positions)
+    padc = jnp.zeros((B, capacity - S, m.kv_lora_rank), c.dtype)
+    padp = jnp.zeros((B, capacity - S, m.qk_rope_head_dim), kpe.dtype)
+    return {"ckv": jnp.concatenate([c, padc], 1),
+            "kpe": jnp.concatenate([kpe, padp], 1)}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder)
+# ---------------------------------------------------------------------------
+
+
+def xattn_def(cfg: ModelConfig):
+    D = cfg.d_model
+    return {
+        "wq": ParamDef((D, cfg.q_dim), ("embed", "heads")),
+        "wk": ParamDef((D, cfg.kv_dim), ("embed", "heads")),
+        "wv": ParamDef((D, cfg.kv_dim), ("embed", "heads")),
+        "wo": ParamDef((cfg.q_dim, D), ("heads", "embed")),
+    }
+
+
+def xattn_kv(cfg: ModelConfig, p, enc_out):
+    B, Se, _ = enc_out.shape
+    dt = enc_out.dtype
+    k = (enc_out @ p["wk"].astype(dt)).reshape(B, Se, cfg.num_kv_heads,
+                                               cfg.head_dim)
+    v = (enc_out @ p["wv"].astype(dt)).reshape(B, Se, cfg.num_kv_heads,
+                                               cfg.head_dim)
+    return k, v
+
+
+def xattn_forward(cfg: ModelConfig, p, x, k, v, *, impl=None):
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    o = ops.attention(q, k, v, causal=False, impl=impl)
+    return o.reshape(B, S, cfg.q_dim) @ p["wo"].astype(dt)
+
+
+def xattn_decode(cfg: ModelConfig, p, x, cache):
+    """Cross-attention decode over precomputed encoder K/V (no cache write)."""
+    B = x.shape[0]
+    dt = x.dtype
+    q = (x @ p["wq"].astype(dt)).reshape(B, 1, cfg.num_heads, cfg.head_dim)
+    Se = cache["xk"].shape[1]
+    lengths = jnp.full((B,), Se, jnp.int32)
+    o = ops.attention_decode(q, cache["xk"], cache["xv"], lengths)
+    return o.reshape(B, 1, cfg.q_dim) @ p["wo"].astype(dt)

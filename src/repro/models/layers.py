@@ -1,0 +1,156 @@
+"""Shared building blocks: ParamDef trees, norms, rotary embeddings, MLPs.
+
+Parameters are declared once as trees of :class:`ParamDef` (shape + logical
+axes + initialiser). The same tree serves three purposes:
+
+* ``init_params``      — materialise real arrays (smoke tests, examples),
+* ``abstract_params``  — ``ShapeDtypeStruct`` stand-ins (dry-run, no alloc),
+* ``logical_specs``    — logical-axis tree consumed by ``repro.sharding``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# ParamDef
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    """A single parameter: shape, logical axis names, initialiser."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"      # normal | zeros | ones
+    scale: float = 1.0        # stddev multiplier for "normal"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def init_params(defs, key, dtype):
+    """Materialise a ParamDef tree into real arrays (path-keyed folding)."""
+    leaves = jax.tree_util.tree_leaves_with_path(defs, is_leaf=_is_def)
+
+    out = {}
+    for i, (path, d) in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        if d.init == "zeros":
+            arr = jnp.zeros(d.shape, dtype)
+        elif d.init == "ones":
+            arr = jnp.ones(d.shape, dtype)
+        elif d.init == "fixed":   # std = scale, independent of fan-in
+            arr = (jax.random.normal(k, d.shape, jnp.float32)
+                   * d.scale).astype(dtype)
+        else:
+            fan_in = d.shape[0] if len(d.shape) > 1 else max(d.shape[-1], 1)
+            std = d.scale / (fan_in ** 0.5)
+            arr = (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+        out[path] = arr
+    return jax.tree_util.tree_map_with_path(
+        lambda p, d: out[p], defs, is_leaf=_is_def)
+
+
+def abstract_params(defs, dtype):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs, is_leaf=_is_def)
+
+
+def logical_specs(defs):
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def norm_def(cfg: ModelConfig, dim: Optional[int] = None):
+    dim = dim or cfg.d_model
+    if cfg.norm_kind == "layernorm":
+        return {"scale": ParamDef((dim,), ("norm",), "ones"),
+                "bias": ParamDef((dim,), ("norm",), "zeros")}
+    return {"scale": ParamDef((dim,), ("norm",), "zeros")}  # gemma-style (1+w)
+
+
+def apply_norm(cfg: ModelConfig, p, x, eps=None):
+    eps = eps or cfg.norm_eps
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+        y = y * (1.0 + p["scale"].astype(jnp.float32))
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (with partial-rotary support)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, rope_pct: float, theta: float):
+    rot = int(head_dim * rope_pct) // 2 * 2
+    inv = 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+    return rot, inv
+
+
+def apply_rope(x, positions, rope_pct=1.0, theta=10_000.0):
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    hd = x.shape[-1]
+    rot, inv = rope_freqs(hd, rope_pct, theta)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    ang = positions[..., None].astype(jnp.float32) * inv          # [..., S, rot/2]
+    cos = jnp.cos(ang)[..., None, :]                              # [..., S, 1, rot/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+# ---------------------------------------------------------------------------
+# MLPs (dense)
+# ---------------------------------------------------------------------------
+
+
+def mlp_def(cfg: ModelConfig, d_ff: Optional[int] = None):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {"wi_gate": ParamDef((D, F), ("embed", "ffn")),
+                "wi_up": ParamDef((D, F), ("embed", "ffn")),
+                "wo": ParamDef((F, D), ("ffn", "embed"))}
+    return {"wi": ParamDef((D, F), ("embed", "ffn")),
+            "wo": ParamDef((F, D), ("ffn", "embed"))}
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    dt = x.dtype
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True))
+        h = act(x @ p["wi_gate"].astype(dt)) * (x @ p["wi_up"].astype(dt))
+        return h @ p["wo"].astype(dt)
+    h = jax.nn.gelu(x @ p["wi"].astype(dt), approximate=True)
+    return h @ p["wo"].astype(dt)
+
+
+def softcap(x, cap: float):
+    return jnp.tanh(x / cap) * cap if cap > 0 else x

@@ -1,0 +1,241 @@
+"""Mixture-of-Experts block (DeepSeek-style: shared + routed, top-k).
+
+Two dispatch paths:
+
+* **EP (shard_map)** — the production path whenever a mesh with a "model"
+  axis is active: experts are sharded over "model"; each batch shard sorts
+  its token copies by destination expert shard, packs fixed-capacity send
+  buffers, exchanges them with ``jax.lax.all_to_all``, runs its local
+  experts as one batched matmul, and returns results through the reverse
+  all-to-all. Explicit collectives == the honest EP cost (GSPMD
+  auto-sharding of a generic scatter would replicate the token buffer —
+  measured 374 GB/device on deepseek-v2 — hence this path).
+* **Local (sort-based)** — single-device fallback for smoke tests: the same
+  sort→pack→batched-matmul→combine with no collectives.
+
+Both drop overflow beyond ``capacity_factor`` (standard dropping semantics)
+and add a Switch-style load-balance aux loss.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef
+from repro.sharding import partition as part
+
+
+def moe_def(cfg: ModelConfig):
+    m = cfg.moe
+    D, E, F = cfg.d_model, m.num_experts, m.d_ff_expert
+    d = {
+        "router": ParamDef((D, E), ("embed", None), scale=0.1),
+        "wi_gate": ParamDef((E, D, F), ("experts", "embed", "ffn")),
+        "wi_up": ParamDef((E, D, F), ("experts", "embed", "ffn")),
+        "wo": ParamDef((E, F, D), ("experts", "ffn", "embed")),
+    }
+    if m.num_shared > 0:
+        Fs = m.num_shared * F
+        d["shared"] = {
+            "wi_gate": ParamDef((D, Fs), ("embed", "ffn")),
+            "wi_up": ParamDef((D, Fs), ("embed", "ffn")),
+            "wo": ParamDef((Fs, D), ("ffn", "embed")),
+        }
+    return d
+
+
+def _capacity(tokens: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: [B,S,D] -> (y [B,S,D], aux_loss scalar f32). Picks EP shard_map
+    when a mesh with an expert axis is active, else the local path."""
+    mesh, rules = part._active()
+    if mesh is not None:
+        ax = rules.get("experts")
+        if (ax in mesh.shape and cfg.moe.num_experts % mesh.shape[ax] == 0
+                and mesh.shape[ax] > 1):
+            return _moe_ep(cfg, p, x, mesh, rules, ax)
+    return _moe_local(cfg, p, x)
+
+
+def _shared(cfg, p, xf, dt):
+    sp = p["shared"]
+    h = jax.nn.silu(xf @ sp["wi_gate"].astype(dt)) * \
+        (xf @ sp["wi_up"].astype(dt))
+    return h @ sp["wo"].astype(dt)
+
+
+def _moe_local(cfg: ModelConfig, p, x):
+    m = cfg.moe
+    B, S, D = x.shape
+    dt = x.dtype
+    T = B * S
+    E, K = m.num_experts, m.top_k
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                  # [T,E]
+    gates, eidx = jax.lax.top_k(probs, K)                    # [T,K]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (Switch-style) ------------------------------
+    me = probs.mean(0)                                        # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(
+        1.0 / (T * K))
+    aux = m.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ------------------------------------------------
+    C = _capacity(T, cfg)
+    e_flat = eidx.reshape(-1)                                 # [T*K]
+    order = jnp.argsort(e_flat)                               # stable
+    se = e_flat[order]
+    tok = order // K
+    counts = jnp.zeros((E,), jnp.int32).at[e_flat].add(1)
+    starts = jnp.cumsum(counts) - counts                      # [E]
+    pos_in_e = jnp.arange(T * K) - starts[se]
+    keep = pos_in_e < C
+    dest = jnp.where(keep, se * C + pos_in_e, E * C)          # drop slot
+
+    buf = jnp.zeros((E * C + 1, D), dt).at[dest].set(xf[tok])
+    eb = buf[:E * C].reshape(E, C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, p["wi_gate"].astype(dt)))
+    h = h * jnp.einsum("ecd,edf->ecf", eb, p["wi_up"].astype(dt))
+    eo = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dt))    # [E,C,D]
+
+    flat = jnp.concatenate([eo.reshape(E * C, D),
+                            jnp.zeros((1, D), dt)], 0)
+    ys = flat[dest]                                           # sorted order
+    w = (gates.reshape(-1)[order] * keep).astype(dt)          # [T*K]
+    y = jnp.zeros((T, D), dt).at[tok].add(ys * w[:, None])
+
+    if m.num_shared > 0:
+        y = y + _shared(cfg, p, xf, dt)
+    return y.reshape(B, S, D), aux
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel dispatch (shard_map + all_to_all)
+# ---------------------------------------------------------------------------
+
+
+def _moe_ep(cfg: ModelConfig, p, x, mesh, rules, expert_axis):
+    m = cfg.moe
+    B, S, D = x.shape
+    dt = x.dtype
+    nsh = mesh.shape[expert_axis]
+    E_loc = m.num_experts // nsh
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    in_specs = (P(batch_axes if B % max(
+        part._axis_size(mesh, batch_axes), 1) == 0 else None, None, None),
+        P(None, None),                       # router (replicated)
+        P(expert_axis, None, None),          # wi_gate [E,D,F]
+        P(expert_axis, None, None),          # wi_up
+        P(expert_axis, None, None))          # wo
+    out_specs = (in_specs[0], P())
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=in_specs,
+             out_specs=out_specs, check_vma=False)
+    def routed(x_loc, router, wi_g, wi_u, wo):
+        b, s, _ = x_loc.shape
+        T_all = b * s
+        K = m.top_k
+        # x is replicated across the expert axis: each shard owns a token
+        # slice (SP over the expert axis) so routing work isn't duplicated.
+        T = -(-T_all // nsh)                      # padded slice length
+        idx = jax.lax.axis_index(expert_axis)
+        xf_all = x_loc.reshape(T_all, D)
+        if T * nsh != T_all:
+            xf_all = jnp.pad(xf_all, ((0, T * nsh - T_all), (0, 0)))
+        xf = jax.lax.dynamic_slice(xf_all, (idx * T, 0), (T, D))
+        tok_valid = (idx * T + jnp.arange(T)) < T_all
+        logits = xf.astype(jnp.float32) @ router.astype(jnp.float32)
+        probs = jax.nn.softmax(logits, -1)
+        gates, eidx = jax.lax.top_k(probs, K)                    # [T,K]
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        gates = gates * tok_valid[:, None]
+
+        # aux loss from this shard's stats (averaged over shards by psum)
+        me = probs.mean(0)
+        ce = jnp.zeros((m.num_experts,), jnp.float32).at[
+            eidx.reshape(-1)].add(1.0 / (T * K))
+        aux = m.router_aux_weight * m.num_experts * jnp.sum(me * ce)
+        for ax in batch_axes + (expert_axis,):
+            aux = jax.lax.pmean(aux, ax)
+
+        # ---- pack per destination expert-shard -----------------------------
+        e_flat = eidx.reshape(-1)
+        shard_of = e_flat // E_loc
+        C_send = max(4, -(-int(T * K * m.capacity_factor / nsh) // 4) * 4)
+        tok = jnp.arange(T * K) // K
+        meta = {"local_e": (e_flat % E_loc).astype(jnp.int32),
+                "gate": gates.reshape(-1).astype(jnp.float32)}
+        order = jnp.argsort(shard_of)
+        sg = shard_of[order]
+        counts = jnp.zeros((nsh,), jnp.int32).at[shard_of].add(1)
+        starts = jnp.cumsum(counts) - counts
+        pos = jnp.arange(T * K) - starts[sg]
+        keep = pos < C_send
+        dest = jnp.where(keep, sg * C_send + pos, nsh * C_send)
+        send_x = jnp.zeros((nsh * C_send + 1, D), dt).at[dest].set(
+            xf[tok[order]])[:nsh * C_send]
+        send_e = jnp.full((nsh * C_send + 1,), -1, jnp.int32).at[dest].set(
+            meta["local_e"][order])[:nsh * C_send]
+
+        # ---- all-to-all to expert shards ------------------------------------
+        recv_x = jax.lax.all_to_all(
+            send_x.reshape(nsh, C_send, D), expert_axis, 0, 0, tiled=False
+        ).reshape(nsh * C_send, D)
+        recv_e = jax.lax.all_to_all(
+            send_e.reshape(nsh, C_send), expert_axis, 0, 0, tiled=False
+        ).reshape(nsh * C_send)
+
+        # ---- local expert compute (pack by local expert id) -----------------
+        R = nsh * C_send
+        C_loc = max(4, -(-R // E_loc // 4) * 4)
+        rec_e = jnp.where(recv_e < 0, E_loc, recv_e)  # invalid -> drop row
+        order2 = jnp.argsort(rec_e)
+        se2 = rec_e[order2]
+        counts2 = jnp.zeros((E_loc + 1,), jnp.int32).at[rec_e].add(1)
+        starts2 = jnp.cumsum(counts2) - counts2
+        pos2 = jnp.arange(R) - starts2[se2]
+        keep2 = (pos2 < C_loc) & (se2 < E_loc)
+        dest2 = jnp.where(keep2, se2 * C_loc + pos2, E_loc * C_loc)
+        ebuf = jnp.zeros((E_loc * C_loc + 1, D), dt).at[dest2].set(
+            recv_x[order2])
+        eb = ebuf[:E_loc * C_loc].reshape(E_loc, C_loc, D)
+        h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", eb, wi_g.astype(dt)))
+        h = h * jnp.einsum("ecd,edf->ecf", eb, wi_u.astype(dt))
+        eo = jnp.einsum("ecf,efd->ecd", h, wo.astype(dt))
+        flat = jnp.concatenate(
+            [eo.reshape(E_loc * C_loc, D), jnp.zeros((1, D), dt)], 0)
+        back = jnp.zeros((R, D), dt).at[order2].set(flat[dest2])
+
+        # ---- return through reverse all-to-all -------------------------------
+        ret = jax.lax.all_to_all(
+            back.reshape(nsh, C_send, D), expert_axis, 0, 0, tiled=False
+        ).reshape(nsh * C_send, D)
+
+        # ---- combine --------------------------------------------------------
+        flat_ret = jnp.concatenate([ret, jnp.zeros((1, D), dt)], 0)
+        ys = flat_ret[dest]                        # sorted order
+        w = (meta["gate"][order] * keep).astype(dt)
+        y = jnp.zeros((T, D), dt).at[tok[order]].add(ys * w[:, None])
+        # gather token slices back from all expert-axis shards
+        y_all = jax.lax.all_gather(y, expert_axis, axis=0,
+                                   tiled=True)[:T_all]
+        return y_all.reshape(b, s, D), aux
+
+    y, aux = routed(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])
+    if m.num_shared > 0:
+        y = y + _shared(cfg, p, x.reshape(B * S, D), dt).reshape(B, S, D)
+    return y, aux

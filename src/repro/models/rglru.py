@@ -1,0 +1,90 @@
+"""Griffin recurrent block (RecurrentGemma): dual linear branches, causal
+depthwise conv, RG-LRU recurrence with block-diagonal gates, GeLU gating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import ParamDef
+
+
+def _dims(cfg: ModelConfig):
+    R = cfg.rnn_width or cfg.d_model
+    nh = cfg.rnn_heads
+    assert R % nh == 0
+    return R, nh, R // nh
+
+
+def rec_def(cfg: ModelConfig):
+    R, nh, bh = _dims(cfg)
+    D = cfg.d_model
+    return {
+        "wx": ParamDef((D, R), ("embed", "ffn")),
+        "wg": ParamDef((D, R), ("embed", "ffn")),
+        "conv_w": ParamDef((cfg.rnn_conv, R), (None, "ffn")),
+        "a_log": ParamDef((R,), (None,), "ones", scale=0.5),
+        "w_ga": ParamDef((nh, bh, bh), ("heads", None, None)),
+        "b_ga": ParamDef((R,), (None,), "zeros"),
+        "w_gx": ParamDef((nh, bh, bh), ("heads", None, None)),
+        "b_gx": ParamDef((R,), (None,), "zeros"),
+        "wo": ParamDef((R, D), ("ffn", "embed")),
+    }
+
+
+def _conv_full(u, w):
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    return sum(pad[:, j:j + u.shape[1]] * w[j][None, None] for j in range(K))
+
+
+def _block_gate(u, w, b, nh, bh):
+    """u: [..., R]; w: [nh, bh, bh] block-diagonal projection."""
+    shp = u.shape
+    ub = u.reshape(*shp[:-1], nh, bh)
+    g = jnp.einsum("...hi,hij->...hj", ub, w.astype(u.dtype))
+    return g.reshape(*shp) + b.astype(u.dtype)
+
+
+def rec_forward(cfg: ModelConfig, p, x, *, impl=None):
+    """x: [B,S,D] -> [B,S,D]."""
+    R, nh, bh = _dims(cfg)
+    dt = x.dtype
+    u = x @ p["wx"].astype(dt)
+    g = jax.nn.gelu(x @ p["wg"].astype(dt), approximate=True)
+    u = _conv_full(u, p["conv_w"].astype(dt))
+    ga = _block_gate(u, p["w_ga"], p["b_ga"], nh, bh)
+    gx = _block_gate(u, p["w_gx"], p["b_gx"], nh, bh)
+    y, _ = ops.rglru(u, p["a_log"], ga, gx, c=cfg.rglru_c, impl=impl)
+    return (y * g) @ p["wo"].astype(dt)
+
+
+def rec_cache_def(cfg: ModelConfig, batch, dtype):
+    R, _, _ = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.rnn_conv - 1, R), dtype),
+        "h": jax.ShapeDtypeStruct((batch, R), jnp.float32),
+    }
+
+
+def rec_cache_axes(cfg: ModelConfig):
+    return {"conv": ("batch", None, "ffn"), "h": ("batch", "ffn")}
+
+
+def rec_decode(cfg: ModelConfig, p, x, cache):
+    """x: [B,1,D] -> (y, cache)."""
+    R, nh, bh = _dims(cfg)
+    dt = x.dtype
+    u = (x[:, 0] @ p["wx"].astype(dt))
+    g = jax.nn.gelu(x[:, 0] @ p["wg"].astype(dt), approximate=True)
+    w = p["conv_w"].astype(dt)
+    hist = jnp.concatenate([cache["conv"], u[:, None]], 1)
+    conv = jnp.einsum("bkc,kc->bc", hist, w)
+    ga = _block_gate(conv, p["w_ga"], p["b_ga"], nh, bh)
+    gx = _block_gate(conv, p["w_gx"], p["b_gx"], nh, bh)
+    y, h = ops.rglru_decode(cache["h"], conv, p["a_log"], ga, gx,
+                            c=cfg.rglru_c)
+    out = ((y * g) @ p["wo"].astype(dt))[:, None]
+    return out, {"conv": hist[:, 1:], "h": h}

@@ -1,0 +1,111 @@
+"""Mamba-2 block (SSD mixer): in_proj -> causal depthwise conv -> SSD ->
+gated RMSNorm -> out_proj. Full-sequence path uses the chunked SSD kernel;
+decode keeps (conv window, SSD state) as the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels import ops
+from repro.models.layers import ParamDef
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    H = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.ngroups * s.d_state
+    return s, d_inner, H, conv_dim
+
+
+def ssm_def(cfg: ModelConfig):
+    s, d_inner, H, conv_dim = _dims(cfg)
+    D = cfg.d_model
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.d_state + H
+    return {
+        "in_proj": ParamDef((D, d_in_proj), ("embed", "ffn")),
+        "conv_w": ParamDef((s.d_conv, conv_dim), (None, "ffn"), scale=1.0),
+        "dt_bias": ParamDef((H,), (None,), "zeros"),
+        "A_log": ParamDef((H,), (None,), "zeros"),
+        "D": ParamDef((H,), (None,), "ones"),
+        "norm": ParamDef((d_inner,), ("norm",), "zeros"),
+        "out_proj": ParamDef((d_inner, D), ("ffn", "embed")),
+    }
+
+
+def _split(cfg, zxbcdt):
+    s, d_inner, H, conv_dim = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt = zxbcdt[..., d_inner + conv_dim:]
+    return z, xBC, dt, (s, d_inner, H, gn)
+
+
+def _conv_full(xBC, w):
+    """Causal depthwise conv over time. xBC: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    y = sum(pad[:, j:j + xBC.shape[1]] * w[j][None, None] for j in range(K))
+    return jax.nn.silu(y)
+
+
+def _gated_norm(y, z, scale, eps):
+    yf = (y * jax.nn.silu(z)).astype(jnp.float32)
+    o = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + eps)
+    return (o * (1.0 + scale.astype(jnp.float32))).astype(y.dtype)
+
+
+def ssm_forward(cfg: ModelConfig, p, x, *, impl=None):
+    """x: [B,S,D] -> [B,S,D]."""
+    B, S, D = x.shape
+    dt_ = x.dtype
+    z, xBC, dt, (s, d_inner, H, gn) = _split(cfg, x @ p["in_proj"].astype(dt_))
+    xBC = _conv_full(xBC, p["conv_w"].astype(dt_))
+    xs = xBC[..., :d_inner].reshape(B, S, H, s.head_dim)
+    Bm = xBC[..., d_inner:d_inner + gn].reshape(B, S, s.ngroups, s.d_state)
+    Cm = xBC[..., d_inner + gn:].reshape(B, S, s.ngroups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    y, _ = ops.ssd(xs, dt, p["A_log"], Bm, Cm, D=p["D"],
+                   chunk=s.chunk_size, impl=impl)
+    y = _gated_norm(y.reshape(B, S, d_inner), z, p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(dt_)
+
+
+def ssm_cache_def(cfg: ModelConfig, batch, dtype):
+    s, d_inner, H, conv_dim = _dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_dim), dtype),
+        "h": jax.ShapeDtypeStruct((batch, H, s.head_dim, s.d_state),
+                                  jnp.float32),
+    }
+
+
+def ssm_cache_axes(cfg: ModelConfig):
+    return {"conv": ("batch", None, "ffn"),
+            "h": ("batch", "heads", None, None)}
+
+
+def ssm_decode(cfg: ModelConfig, p, x, cache):
+    """x: [B,1,D] -> (y [B,1,D], cache)."""
+    B = x.shape[0]
+    dt_ = x.dtype
+    z, xBC, dt, (s, d_inner, H, gn) = _split(
+        cfg, x[:, 0] @ p["in_proj"].astype(dt_))
+    # conv over (stored window ++ new input)
+    w = p["conv_w"].astype(dt_)
+    hist = jnp.concatenate([cache["conv"], xBC[:, None]], 1)  # [B,K,C]
+    conv = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w))
+    new_conv = hist[:, 1:]
+    xs = conv[..., :d_inner].reshape(B, H, s.head_dim)
+    Bm = conv[..., d_inner:d_inner + gn].reshape(B, s.ngroups, s.d_state)
+    Cm = conv[..., d_inner + gn:].reshape(B, s.ngroups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) +
+                          p["dt_bias"].astype(jnp.float32))
+    y, h = ops.ssd_decode(cache["h"], xs, dtv, p["A_log"], Bm, Cm, D=p["D"])
+    y = _gated_norm(y.reshape(B, 1, d_inner), z[:, None], p["norm"],
+                    cfg.norm_eps)
+    return y @ p["out_proj"].astype(dt_), {"conv": new_conv, "h": h}

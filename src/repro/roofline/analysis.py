@@ -1,0 +1,106 @@
+"""Roofline terms from dry-run artifacts (TPU v5e targets).
+
+    compute    = HLO_FLOPs/dev ÷ peak FLOP/s
+    memory     = HLO_bytes/dev ÷ HBM bandwidth
+    collective = collective_bytes/dev ÷ ICI link bandwidth
+
+``cost_analysis()`` on a post-SPMD executable reports *per-device* flops and
+bytes (verified empirically: reported = total/N). MODEL_FLOPS follows the
+assignment: 6·N·D for dense training, 6·N_active·D for MoE; forward-only
+shapes use the 2·N·D forward term; decode adds the attention cache-read
+term (2·2·L·S·kv_dim per sequence) since that dominates real decode work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # bytes/s / chip
+ICI_BW = 50e9            # bytes/s / link
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_total: float
+    useful_ratio: float           # MODEL_FLOPS/chips ÷ HLO_FLOPs/dev
+    bottleneck: str
+    step_s: float                 # max of the three (no-overlap bound)
+    roofline_frac: float          # compute_s / step_s (how compute-bound)
+
+    def as_dict(self):
+        return dict(self.__dict__)
+
+
+def analyze(*, flops_per_dev: float, bytes_per_dev: float,
+            coll_bytes_per_dev: float, model_flops_total: float,
+            n_devices: int) -> Roofline:
+    c = flops_per_dev / PEAK_FLOPS
+    m = bytes_per_dev / HBM_BW
+    k = coll_bytes_per_dev / ICI_BW
+    terms = {"compute": c, "memory": m, "collective": k}
+    bn = max(terms, key=terms.get)
+    step = max(c, m, k)
+    useful = (model_flops_total / n_devices) / max(flops_per_dev, 1.0)
+    return Roofline(compute_s=c, memory_s=m, collective_s=k,
+                    model_flops_total=model_flops_total,
+                    useful_ratio=useful, bottleneck=bn, step_s=step,
+                    roofline_frac=c / step if step > 0 else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+
+def count_params(lm) -> Dict[str, float]:
+    """Total and active (MoE-discounted) parameter counts."""
+    import jax
+    from repro.models.layers import ParamDef
+
+    cfg = lm.cfg
+    total = routed = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(
+            lm.defs(), is_leaf=lambda x: isinstance(x, ParamDef)):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+        if "experts" in leaf.axes:
+            routed += n
+    active = total - routed
+    if cfg.moe is not None and routed:
+        active += routed * cfg.moe.top_k / cfg.moe.num_experts
+    return {"total": float(total), "active": float(active)}
+
+
+def model_flops(lm, shape, counts: Optional[Dict[str, float]] = None
+                ) -> float:
+    cfg = lm.cfg
+    counts = counts or count_params(lm)
+    n = counts["active"] if cfg.moe is not None else counts["total"]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n * B * S
+    if shape.kind == "prefill":
+        return 2.0 * n * B * S
+    # decode: one token per sequence + attention reads over the cache
+    flops = 2.0 * n * B
+    has_attn = any(k in ("attn", "local", "mla", "xdec")
+                   for k in cfg.layer_kinds)
+    if has_attn:
+        for k in cfg.layer_kinds:
+            if k == "local":
+                eff, per_head = min(cfg.local_window, S), cfg.head_dim
+            elif k in ("attn", "xdec"):
+                eff, per_head = S, cfg.head_dim
+            elif k == "mla":
+                eff = S
+                per_head = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+            else:
+                continue
+            flops += 4.0 * B * eff * cfg.num_heads * per_head
+    return flops

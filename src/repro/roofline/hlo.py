@@ -1,0 +1,345 @@
+"""Loop-aware post-SPMD HLO static analysis.
+
+``compiled.cost_analysis()`` counts each ``while`` (scan) body exactly once,
+which silently undercounts every layer-scanned model by ~num_layers×. This
+module parses the post-optimisation HLO text into its computation graph,
+extracts loop trip counts from the condition computations, and produces:
+
+  * flops        — dot/convolution flops, loop bodies multiplied by trips
+  * bytes        — HBM traffic estimate: operand+output bytes of top-level
+                   instructions (fusion internals excluded, matching XLA's
+                   fusion-aware accounting), loop-scaled
+  * collectives  — per-op operand bytes and counts, loop-scaled
+
+All shapes in post-SPMD HLO are per-shard, so results are per-device.
+Validated against cost_analysis() on loop-free modules (see
+tests/test_roofline.py).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_TOK = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+# `%name = <result> opcode(...)` ; result may be a tuple
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)\(")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND = re.compile(r"condition=%?([\w.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_bits(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOK.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+    operands: List[str] = field(default_factory=list)
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr] = field(default_factory=dict)
+    order: List[Instr] = field(default_factory=list)
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry = None
+    for line in text.splitlines():
+        if "= " not in line and "{" in line and "->" in line:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, shape, opcode = m.groups()
+        # operand names appear inside the first (...) after the opcode
+        rest = line[m.end():]
+        depth, end = 1, len(rest)
+        for i, ch in enumerate(rest):
+            depth += (ch == "(") - (ch == ")")
+            if depth == 0:
+                end = i
+                break
+        ops = _OPERANDS.findall(rest[:end])
+        ins = Instr(name, shape, opcode, line, ops,
+                    is_root="ROOT " in line)
+        cur.instrs[name] = ins
+        cur.order.append(ins)
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_elems = 0
+    m = _SHAPE_TOK.findall(ins.shape)
+    n = 1
+    for dt, dims in m[:1]:
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        out_elems = n
+    # contracting size from lhs operand shape and contracting dims
+    cd = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    lhs = comp.instrs.get(ins.operands[0]) if ins.operands else None
+    if not cd or lhs is None:
+        return 2.0 * out_elems  # fallback
+    lhs_dims = []
+    mm = _SHAPE_TOK.findall(lhs.shape)
+    if mm:
+        lhs_dims = [int(d) for d in mm[0][1].split(",") if d]
+    contract = 1
+    for i in (int(x) for x in cd.group(1).split(",") if x):
+        if i < len(lhs_dims):
+            contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop bound from the condition computation (jax scans: i < N)."""
+    consts = [int(m.group(1)) for i in cond.order
+              for m in [re.search(r"constant\((\d+)\)", i.line)] if m]
+    for i in cond.order:
+        if i.opcode == "compare":
+            for opn in i.operands:
+                src = cond.instrs.get(opn)
+                if src is not None and src.opcode == "constant":
+                    m = re.search(r"constant\((\d+)\)", src.line)
+                    if m:
+                        return max(int(m.group(1)), 1)
+    return max(consts) if consts else 1
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "copy", "after-all", "partition-id", "replica-id"}
+
+
+def comp_or(comp: Computation, name: str) -> Optional[Instr]:
+    return comp.instrs.get(name)
+
+
+class Analyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: Dict[str, Tuple[float, float, dict]] = {}
+
+    def _called(self, ins: Instr) -> List[str]:
+        out = []
+        for m in _CALLS.finditer(ins.line):
+            if m.group(1) in self.comps:
+                out.append(m.group(1))
+        mb = _BRANCHES.search(ins.line)
+        if mb:
+            for nm in _OPERANDS.findall(mb.group(1)):
+                if nm in self.comps:
+                    out.append(nm)
+        return out
+
+    def analyze_comp(self, name: str) -> Tuple[float, float, dict]:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps[name]
+        flops = 0.0
+        bts = 0.0
+        colls: Dict[str, dict] = defaultdict(lambda: {"bytes": 0.0,
+                                                      "count": 0.0})
+        self._memo[name] = (0.0, 0.0, {})  # cycle guard
+        for ins in comp.order:
+            op = ins.opcode
+            if op == "dot":
+                flops += _dot_flops(ins, comp)
+            if op == "while":
+                cond_m = _COND.search(ins.line)
+                body_m = re.search(r"body=%?([\w.\-]+)", ins.line)
+                trips = 1
+                if cond_m and cond_m.group(1) in self.comps:
+                    trips = _trip_count(self.comps[cond_m.group(1)])
+                if body_m and body_m.group(1) in self.comps:
+                    bf, bb, bc = self.analyze_comp(body_m.group(1))
+                    flops += trips * bf
+                    bts += trips * bb
+                    for k, v in bc.items():
+                        colls[k]["bytes"] += trips * v["bytes"]
+                        colls[k]["count"] += trips * v["count"]
+                continue
+            if op in ("fusion", "call", "conditional", "custom-call",
+                      "reduce", "sort", "scatter", "map", "reduce-window",
+                      "select-and-scatter"):
+                for sub in self._called(ins):
+                    sf, sb, sc = self.analyze_comp(sub)
+                    # reducers/comparators are elementwise-trivial; fusion
+                    # and call bodies carry real dots.
+                    if op in ("fusion", "call", "conditional"):
+                        flops += sf
+                        for k, v in sc.items():
+                            colls[k]["bytes"] += v["bytes"]
+                            colls[k]["count"] += v["count"]
+                # bytes at the call site: operands + output
+                bts += self._site_bytes(ins, comp)
+            elif op in COLLECTIVE_OPS or any(
+                    ins.opcode == c + "-start" for c in COLLECTIVE_OPS):
+                base = op.replace("-start", "")
+                b = self._operand_bytes(ins, comp)
+                colls[base]["bytes"] += b
+                colls[base]["count"] += 1
+                bts += self._site_bytes(ins, comp)
+            elif op not in _SKIP_BYTES and not op.endswith("-done"):
+                bts += self._site_bytes(ins, comp)
+        res = (flops, bts, {k: dict(v) for k, v in colls.items()})
+        self._memo[name] = res
+        return res
+
+    def _operand_bytes(self, ins: Instr, comp: Computation) -> float:
+        total = 0.0
+        for opn in ins.operands:
+            src = comp.instrs.get(opn)
+            if src is not None:
+                total += _shape_bits(src.shape)
+        return total
+
+    # Ops that touch only a slice of their big operand: charging the full
+    # operand would overcount by the slice ratio (XLA uses utilization-based
+    # accounting here). Approximate with bytes actually read/written.
+    def _site_bytes(self, ins: Instr, comp: Computation) -> float:
+        op = ins.opcode
+        out = _shape_bits(ins.shape)
+        if op in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * out
+        if op in ("dynamic-update-slice", "scatter"):
+            upd = 0.0
+            for opn in ins.operands[1:]:
+                src = comp.instrs.get(opn)
+                if src is not None:
+                    upd += _shape_bits(src.shape)
+            return 2.0 * upd + out * 0.0
+        if op == "fusion":
+            # in-place fusion: DUS root writes only the update slice
+            called = self._called(ins)
+            fused = self.comps.get(called[0]) if called else None
+            if fused is not None:
+                roots = [fi for fi in fused.order if fi.is_root]
+                root = roots[0] if roots else (
+                    fused.order[-1] if fused.order else None)
+                # follow unary wrappers (convert/bitcast/copy/reshape)
+                seen = 0
+                while (root is not None and seen < 8 and
+                       root.opcode in ("convert", "bitcast", "copy",
+                                       "reshape", "transpose")
+                       and root.operands):
+                    root = fused.instrs.get(root.operands[0])
+                    seen += 1
+                if root is not None and root.opcode == "dynamic-update-slice":
+                    upd = fused.instrs.get(root.operands[1]) \
+                        if len(root.operands) > 1 else None
+                    out = 2.0 * _shape_bits(upd.shape) if upd else out * 0.1
+            return out + self._fusion_operand_bytes(ins, comp)
+        return out + self._operand_bytes(ins, comp)
+
+    def _fusion_operand_bytes(self, ins: Instr, comp: Computation) -> float:
+        """Operand bytes with slice-utilization awareness: a fusion param
+        consumed only by (dynamic-)slice/gather ops contributes the slice
+        bytes, not the full array."""
+        called = self._called(ins)
+        fused = self.comps.get(called[0]) if called else None
+        if fused is None:
+            return self._operand_bytes(ins, comp)
+        # parameter index -> instruction name in fused computation
+        params: Dict[int, str] = {}
+        for fi in fused.order:
+            if fi.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", fi.line)
+                if m:
+                    params[int(m.group(1))] = fi.name
+        total = 0.0
+        for idx, opn in enumerate(ins.operands):
+            src = comp.instrs.get(opn)
+            if src is None:
+                continue
+            full = _shape_bits(src.shape)
+            pname = params.get(idx)
+            if pname is None:
+                total += full
+                continue
+            users = [fi for fi in fused.order if pname in fi.operands]
+            if users and all(u.opcode in ("dynamic-slice", "slice", "gather")
+                             and u.operands and u.operands[0] == pname
+                             for u in users):
+                total += sum(_shape_bits(u.shape) for u in users)
+            elif users and all(u.opcode == "dynamic-update-slice"
+                               for u in users):
+                # in-place update fusion: charge the update size
+                total += sum(
+                    sum(_shape_bits(comp_or(fused, o).shape)
+                        for o in u.operands[1:2] if comp_or(fused, o))
+                    for u in users)
+            else:
+                total += full
+        return total
+
+    def totals(self) -> dict:
+        assert self.entry, "no ENTRY computation found"
+        f, b, c = self.analyze_comp(self.entry)
+        return {"flops": f, "bytes": b,
+                "collective_bytes": sum(v["bytes"] for v in c.values()),
+                "by_op": c}
+
+
+def analyze_text(text: str) -> dict:
+    return Analyzer(text).totals()
+
+
+def collective_bytes(text: str) -> Tuple[float, Dict[str, dict]]:
+    t = analyze_text(text)
+    return t["collective_bytes"], t["by_op"]
+
+
+def op_histogram(hlo_text: str, top: int = 12) -> Dict[str, int]:
+    """Opcode frequency (duplicate-op smell test for remat waste)."""
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _INSTR.match(line)
+        if m:
+            counts[m.group(3)] += 1
+    return dict(sorted(counts.items(), key=lambda kv: -kv[1])[:top])

@@ -1,0 +1,187 @@
+"""Containerised applications for the simulated cluster.
+
+* ``SendBwApp``   — ib_send_bw-style streaming benchmark (paper Fig. 11):
+                    keeps a window of sends in flight, continuously.
+* ``DPTrainerApp``— data-parallel trainer rank: local grads (numpy model) +
+                    ring all-reduce over verbs channels. Fully
+                    checkpointable; migration must not perturb the loss
+                    trajectory bit-for-bit.
+
+Apps speak verbs only (via number-based handles); they contain zero
+migration logic — transparency is the whole point.
+"""
+from __future__ import annotations
+
+import io
+from typing import Dict, List, Optional
+
+import msgpack
+import numpy as np
+
+from repro.runtime.collectives import Channel, Handles
+
+
+class SendBwApp:
+    """Streams fixed-size messages to a peer, window-limited."""
+
+    def __init__(self, msg_size: int = 4096, window: int = 16,
+                 n_qps: int = 1, buf_size: Optional[int] = None):
+        self.msg_size = msg_size
+        self.window = window
+        self.n_qps = n_qps
+        self.buf_size = buf_size or max(msg_size, 4096)
+        self.channels: List[Channel] = []
+        self.sent = 0
+        self.completed = 0
+        self.received = 0
+        self.inflight = 0
+        self.container = None
+        self.is_sender = True
+
+    def attach(self, container, *, sender: bool):
+        self.container = container
+        self.is_sender = sender
+        for _ in range(self.n_qps):
+            self.channels.append(Channel(container.ctx, self.buf_size))
+
+    def rebind(self, container, session):
+        for ch in self.channels:
+            ch.h.ctx = container.ctx
+
+    def step(self):
+        for ch in self.channels:
+            if self.is_sender:
+                while self.inflight < self.window:
+                    ch.post_send_bytes(b"x" * self.msg_size)
+                    self.inflight += 1
+                    self.sent += 1
+                for wc in ch.poll(64):
+                    if wc.opcode == "SEND":
+                        self.inflight -= 1
+                        self.completed += 1
+            else:
+                # keep receives posted
+                posted = getattr(ch, "_posted", 0)
+                while posted < self.window:
+                    ch.post_recv(self.msg_size)
+                    posted += 1
+                for wc in ch.poll(64):
+                    if wc.opcode == "RECV":
+                        posted -= 1
+                        self.received += 1
+                ch._posted = posted
+
+    # -- checkpoint ----------------------------------------------------------
+    def checkpoint(self) -> bytes:
+        return msgpack.packb({
+            "sent": self.sent, "completed": self.completed,
+            "received": self.received, "inflight": self.inflight,
+            "is_sender": self.is_sender,
+            "posted": [getattr(ch, "_posted", 0) for ch in self.channels]})
+
+    def restore(self, blob: bytes):
+        d = msgpack.unpackb(blob, raw=False)
+        self.sent = d["sent"]
+        self.completed = d["completed"]
+        self.received = d["received"]
+        self.inflight = d["inflight"]
+        self.is_sender = d["is_sender"]
+        for ch, p in zip(self.channels, d["posted"]):
+            ch._posted = p
+
+
+class TinyMLP:
+    """Deterministic numpy MLP used by the DP trainer demo."""
+
+    def __init__(self, d_in=32, d_h=64, d_out=8, seed=0):
+        r = np.random.RandomState(seed)
+        self.w1 = (r.randn(d_in, d_h) / np.sqrt(d_in)).astype(np.float32)
+        self.w2 = (r.randn(d_h, d_out) / np.sqrt(d_h)).astype(np.float32)
+
+    def loss_and_grads(self, x, y):
+        h = np.maximum(x @ self.w1, 0.0)
+        logits = h @ self.w2
+        z = logits - logits.max(-1, keepdims=True)
+        p = np.exp(z)
+        p /= p.sum(-1, keepdims=True)
+        n = x.shape[0]
+        loss = -np.mean(np.log(p[np.arange(n), y] + 1e-12))
+        dlogits = p
+        dlogits[np.arange(n), y] -= 1.0
+        dlogits /= n
+        dw2 = h.T @ dlogits
+        dh = dlogits @ self.w2.T
+        dh[h <= 0] = 0.0
+        dw1 = x.T @ dh
+        return loss, [dw1.astype(np.float32), dw2.astype(np.float32)]
+
+    def apply(self, grads, lr):
+        self.w1 -= lr * grads[0]
+        self.w2 -= lr * grads[1]
+
+    def flat(self):
+        return np.concatenate([self.w1.ravel(), self.w2.ravel()])
+
+    def unflat(self, v):
+        n1 = self.w1.size
+        self.w1 = v[:n1].reshape(self.w1.shape).copy()
+        self.w2 = v[n1:].reshape(self.w2.shape).copy()
+
+
+class DPTrainerApp:
+    """One data-parallel rank. Gradient sync via external RingAllreduce."""
+
+    def __init__(self, rank: int, world: int, seed: int = 0, lr=0.1,
+                 batch: int = 32, d_h: int = 64):
+        self.rank = rank
+        self.world = world
+        self.lr = lr
+        self.batch = batch
+        self.model = TinyMLP(d_h=d_h, seed=seed)
+        self.step_no = 0
+        self.losses: List[float] = []
+        self.left: Optional[Channel] = None
+        self.right: Optional[Channel] = None
+        self.container = None
+
+    def attach(self, container, buf_size: int = 0):
+        if not buf_size:
+            # ring all-reduce moves ceil(model/world)-sized chunks
+            need = (self.model.flat().size * 4) // max(self.world, 1) + 4096
+            buf_size = max(1 << 16, 1 << (need - 1).bit_length())
+        self.container = container
+        self.left = Channel(container.ctx, buf_size)
+        self.right = Channel(container.ctx, buf_size)
+
+    def rebind(self, container, session):
+        self.left.h.ctx = container.ctx
+        self.right.h.ctx = container.ctx
+
+    def local_grads(self):
+        r = np.random.RandomState(1000 + 17 * self.step_no + self.rank)
+        x = r.randn(self.batch, 32).astype(np.float32)
+        y = r.randint(0, 8, self.batch)
+        loss, grads = self.model.loss_and_grads(x, y)
+        return loss, np.concatenate([g.ravel() for g in grads])
+
+    def apply_flat(self, flat):
+        n1 = self.model.w1.size
+        g1 = flat[:n1].reshape(self.model.w1.shape)
+        g2 = flat[n1:].reshape(self.model.w2.shape)
+        self.model.apply([g1, g2], self.lr)
+        self.step_no += 1
+
+    def step(self):
+        pass  # training is driven by the cluster trainer loop
+
+    def checkpoint(self) -> bytes:
+        return msgpack.packb({
+            "rank": self.rank, "step": self.step_no,
+            "w": self.model.flat().tobytes(),
+            "losses": self.losses})
+
+    def restore(self, blob: bytes):
+        d = msgpack.unpackb(blob, raw=False)
+        self.step_no = d["step"]
+        self.model.unflat(np.frombuffer(d["w"], np.float32))
+        self.losses = list(d["losses"])

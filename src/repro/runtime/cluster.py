@@ -1,0 +1,98 @@
+"""Simulated cluster: nodes, devices, containers (paper Fig. 3).
+
+A Container owns a verbs Context plus opaque user state, and cooperates via
+``step()`` (the containerised application's main-loop iteration). Crucially
+— mirroring the paper — the application code inside the container is
+completely unaware of migration: it talks plain verbs; MigrOS machinery
+(dump/restore/resume) lives entirely outside.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional
+
+import msgpack
+
+from repro.core.migration import MigrationController
+from repro.core.namespace import GlobalNamespace
+from repro.core.transport import Fabric
+from repro.core.verbs import Context, RdmaDevice
+
+
+class Node:
+    def __init__(self, cluster: "SimCluster", gid: int):
+        self.cluster = cluster
+        self.gid = gid
+        base = cluster.namespace.range_for(gid)
+        self.device = RdmaDevice(cluster.fabric, gid, qpn_base=base)
+        self.containers: List["Container"] = []
+
+    def __repr__(self):
+        return f"Node(gid={self.gid}, containers={len(self.containers)})"
+
+
+class Container:
+    """A containerised application with checkpointable user state."""
+
+    def __init__(self, name: str, node: Node, app=None):
+        self.name = name
+        self.node = node
+        self.app = app                 # object with step()/state accessors
+        self.alive = True
+        self.ctx: Context = node.device.open_context()
+        node.containers.append(self)
+        self.restore_session = None
+
+    # -- hooks used by the MigrationController --------------------------------
+    def checkpoint_user(self) -> bytes:
+        if self.app is None:
+            return b""
+        return self.app.checkpoint()
+
+    def restore_user(self, blob: bytes):
+        if self.app is not None and blob:
+            self.app.restore(blob)
+
+    def adopt(self, node: Node, ctx: Context, session):
+        if self in self.node.containers:
+            self.node.containers.remove(self)
+        self.node = node
+        self.ctx = ctx
+        self.restore_session = session
+        node.containers.append(self)
+        if self.app is not None:
+            self.app.rebind(self, session)
+
+    def step(self):
+        if self.app is not None and self.alive:
+            self.app.step()
+
+
+class SimCluster:
+    def __init__(self, n_nodes: int, *, loss_prob: float = 0.0,
+                 seed: int = 0):
+        self.fabric = Fabric(loss_prob=loss_prob, seed=seed)
+        self.namespace = GlobalNamespace()
+        self.nodes = [Node(self, gid) for gid in range(n_nodes)]
+        self.migrator = MigrationController(self.fabric)
+        self.containers: Dict[str, Container] = {}
+
+    def launch(self, name: str, node_idx: int, app=None) -> Container:
+        c = Container(name, self.nodes[node_idx], app)
+        self.containers[name] = c
+        return c
+
+    def migrate(self, name: str, dest_idx: int, **kw):
+        c = self.containers[name]
+        return self.migrator.migrate(c, self.nodes[dest_idx], **kw)
+
+    def pump(self, steps: int = 1):
+        self.fabric.pump(steps)
+
+    def run_until_idle(self, max_steps: int = 100_000):
+        return self.fabric.run_until_idle(max_steps)
+
+    def step_all(self):
+        for c in self.containers.values():
+            c.step()
+        self.pump()

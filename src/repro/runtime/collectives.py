@@ -1,0 +1,164 @@
+"""Collectives over verbs QPs: rank-to-rank channels + ring all-reduce.
+
+Applications hold *numbers* (QPN/MRN), never raw object pointers — numbers
+survive migration by design (the paper's ID-preservation requirement), so a
+channel keeps working after its peer (or itself) moves nodes.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.packets import Op
+from repro.core.verbs import Context, RecvWR, SendWR, SGE
+from repro.core.states import QPState
+
+
+class Handles:
+    """Number-based handle table resolving through the current context."""
+
+    def __init__(self, ctx: Context):
+        self.ctx = ctx
+
+    def qp(self, qpn: int):
+        for q in self.ctx.qps:
+            if q.qpn == qpn:
+                return q
+        raise KeyError(f"QPN {qpn}")
+
+    def mr(self, mrn: int):
+        for m in self.ctx.mrs:
+            if m.mrn == mrn:
+                return m
+        raise KeyError(f"MRN {mrn}")
+
+    def cq(self, cqn: int):
+        for c in self.ctx.cqs:
+            if c.cqn == cqn:
+                return c
+        raise KeyError(f"CQN {cqn}")
+
+
+class Channel:
+    """One reliable connection endpoint with send/recv MRs."""
+
+    def __init__(self, ctx: Context, buf_size: int):
+        self.h = Handles(ctx)
+        pd = ctx.alloc_pd()
+        cq = ctx.create_cq()
+        qp = pd.create_qp(cq, cq)
+        self.cqn = cq.cqn
+        self.qpn = qp.qpn
+        self.mrn_send = pd.reg_mr(buf_size).mrn
+        self.mrn_recv = pd.reg_mr(buf_size).mrn
+        self.buf_size = buf_size
+        self._wr = 0
+
+    # -- connection setup (out-of-band exchange, "over TCP") --------------------
+    def local_addr(self):
+        return (self.h.ctx.device.gid, self.qpn)
+
+    def connect(self, remote_gid: int, remote_qpn: int):
+        qp = self.h.qp(self.qpn)
+        qp.modify(QPState.INIT)
+        qp.modify(QPState.RTR, dest_gid=remote_gid, dest_qpn=remote_qpn,
+                  rq_psn=0)
+        qp.modify(QPState.RTS, sq_psn=0)
+
+    # -- data path ---------------------------------------------------------------
+    def post_send_bytes(self, data: bytes, *, offset: int = 0) -> int:
+        mr = self.h.mr(self.mrn_send)
+        mr.write(offset, data)
+        self._wr += 1
+        wr = SendWR(self._wr, Op.SEND, SGE(mr, offset, len(data)))
+        self.h.qp(self.qpn).post_send(wr)
+        return self._wr
+
+    def post_recv(self, length: int, *, offset: int = 0) -> int:
+        mr = self.h.mr(self.mrn_recv)
+        self._wr += 1
+        self.h.qp(self.qpn).post_recv(
+            RecvWR(self._wr, SGE(mr, offset, length)))
+        return self._wr
+
+    def poll(self, n: int = 16):
+        return self.h.cq(self.cqn).poll(n)
+
+    def recv_bytes(self, offset: int, length: int) -> bytes:
+        return self.h.mr(self.mrn_recv).read(offset, length)
+
+
+def connect_pair(a: Channel, b: Channel):
+    b_gid, b_qpn = b.local_addr()
+    a_gid, a_qpn = a.local_addr()
+    a.connect(b_gid, b_qpn)
+    b.connect(a_gid, a_qpn)
+
+
+# ---------------------------------------------------------------------------
+# Ring all-reduce (reduce-scatter + all-gather) over channels
+# ---------------------------------------------------------------------------
+
+
+class RingAllreduce:
+    """Synchronous ring all-reduce for float32 vectors.
+
+    ``run`` drives the fabric until completion; a ``step_hook`` (called once
+    per fabric pump) lets tests inject migrations mid-collective.
+    """
+
+    def __init__(self, fabric, ranks: List[dict]):
+        # ranks: [{"right": Channel to next rank, "left": Channel to prev}]
+        self.fabric = fabric
+        self.ranks = ranks
+        self.n = len(ranks)
+
+    def run(self, vectors: List[np.ndarray], *, step_hook=None,
+            max_steps: int = 2_000_000) -> List[np.ndarray]:
+        n = self.n
+        vecs = [v.astype(np.float32).copy() for v in vectors]
+        length = vecs[0].size
+        chunk = -(-length // n)
+        padded = [np.concatenate([v, np.zeros(chunk * n - length,
+                                              np.float32)]) for v in vecs]
+
+        for phase in range(2):                  # 0: reduce-scatter 1: gather
+            for k in range(n - 1):
+                pending = set()
+                for r in range(n):
+                    send_idx = (r - k + (n if phase == 0 else -1)) % n \
+                        if phase == 0 else (r - k + 1) % n
+                    data = padded[r][send_idx * chunk:(send_idx + 1) *
+                                     chunk].tobytes()
+                    self.ranks[r]["left"].post_recv(len(data))
+                    self.ranks[r]["right"].post_send_bytes(data)
+                    pending.add((r, "s"))
+                    pending.add((r, "r"))
+                steps = 0
+                while pending:
+                    self.fabric.pump()
+                    if step_hook is not None:
+                        step_hook(self.fabric.now)
+                    steps += 1
+                    if steps > max_steps:
+                        raise TimeoutError("allreduce stalled")
+                    for r in range(n):
+                        for wc in self.ranks[r]["right"].poll():
+                            if wc.opcode == "SEND":
+                                pending.discard((r, "s"))
+                        for wc in self.ranks[r]["left"].poll():
+                            if wc.opcode == "RECV":
+                                recv_idx = ((r - 1) - k + n) % n \
+                                    if phase == 0 else (r - k) % n
+                                buf = np.frombuffer(
+                                    self.ranks[r]["left"].recv_bytes(
+                                        0, chunk * 4), np.float32)
+                                seg = slice(recv_idx * chunk,
+                                            (recv_idx + 1) * chunk)
+                                if phase == 0:
+                                    padded[r][seg] += buf
+                                else:
+                                    padded[r][seg] = buf
+                                pending.discard((r, "r"))
+        return [p[:length] for p in padded]

@@ -1,0 +1,32 @@
+"""Elastic re-meshing: move a sharded train state onto a different mesh.
+
+Supports both scale-down (node loss: fewer data shards) and scale-up. The
+re-shard is a pure ``jax.device_put`` with the new shardings; logical-axis
+specs make the state mesh-agnostic, so this works between any two meshes
+whose axes divide the shapes (the resolver drops non-divisible axes).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+
+from repro.sharding import partition as part
+
+
+def remesh_state(state, state_logical, old_mesh, new_mesh, rules=None):
+    """Re-shard `state` (pytree of arrays) from old_mesh to new_mesh."""
+    shardings = jax.tree.map(
+        lambda axes, arr: jax.sharding.NamedSharding(
+            new_mesh, part.resolve(axes, arr.shape, new_mesh, rules)),
+        state_logical, state,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            a is None or isinstance(a, str) for a in t))
+    return jax.device_put(state, shardings)
+
+
+def scaled_batch(global_batch: int, old_world: int, new_world: int) -> int:
+    """Keep per-replica batch constant under rescale (sync SGD semantics:
+    the optimizer's LR schedule is rescaled by the caller if desired)."""
+    per = global_batch // old_world
+    return per * new_world

@@ -1,0 +1,114 @@
+"""Fault tolerance for the production (pjit) path.
+
+The MigrOS insight applied at pod scale: worker state (params/opt shards,
+data cursor, RNG) is always dumpable between steps; pod-level channels are
+modelled with the same Stopped/Paused state machine, so planned migrations
+(maintenance, defrag) pause peers instead of crashing them, and unplanned
+failures fall back to checkpoint-restart with elastic re-meshing.
+
+Heartbeat-based failure detection + straggler-triggered migration policy
+(the paper's motivating use case for HPC schedulers).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.states import QPState
+
+
+@dataclass
+class WorkerHealth:
+    last_heartbeat: float = 0.0
+    step_times: List[float] = field(default_factory=list)
+    alive: bool = True
+
+    def ema_step(self, window: int = 16) -> float:
+        ts = self.step_times[-window:]
+        return sum(ts) / len(ts) if ts else 0.0
+
+
+class FailureDetector:
+    def __init__(self, timeout_s: float = 5.0):
+        self.timeout = timeout_s
+        self.health: Dict[int, WorkerHealth] = {}
+
+    def heartbeat(self, worker: int, step_time: Optional[float] = None,
+                  now: Optional[float] = None):
+        h = self.health.setdefault(worker, WorkerHealth())
+        h.last_heartbeat = now if now is not None else time.monotonic()
+        if step_time is not None:
+            h.step_times.append(step_time)
+
+    def failed(self, now: Optional[float] = None) -> List[int]:
+        now = now if now is not None else time.monotonic()
+        out = []
+        for w, h in self.health.items():
+            if h.alive and now - h.last_heartbeat > self.timeout:
+                h.alive = False
+                out.append(w)
+        return out
+
+
+class CheckpointRestartManager:
+    """Coordinates periodic checkpoints + restart-on-failure.
+
+    ``save_fn(step) -> checkpoint_id`` and ``restore_fn(checkpoint_id,
+    world)`` are provided by the trainer (see repro.checkpoint). On failure
+    the manager restores the latest checkpoint onto the surviving world
+    (elastic re-mesh happens inside restore_fn).
+    """
+
+    def __init__(self, save_fn: Callable, restore_fn: Callable,
+                 interval_steps: int = 100):
+        self.save_fn = save_fn
+        self.restore_fn = restore_fn
+        self.interval = interval_steps
+        self.last_ckpt = None
+        self.last_ckpt_step = -1
+        self.restarts = 0
+
+    def maybe_checkpoint(self, step: int):
+        if step % self.interval == 0 and step != self.last_ckpt_step:
+            self.last_ckpt = self.save_fn(step)
+            self.last_ckpt_step = step
+        return self.last_ckpt
+
+    def restart(self, surviving_world: int):
+        if self.last_ckpt is None:
+            raise RuntimeError("no checkpoint to restart from")
+        self.restarts += 1
+        return self.restore_fn(self.last_ckpt, surviving_world)
+
+
+class MigrationPolicy:
+    """Decides when to live-migrate a container (straggler/maintenance).
+
+    Straggler rule: worker whose EMA step time exceeds ``factor`` × the
+    cluster median for ``patience`` consecutive checks.
+    """
+
+    def __init__(self, detector: FailureDetector, *, factor: float = 1.5,
+                 patience: int = 3):
+        self.detector = detector
+        self.factor = factor
+        self.patience = patience
+        self._strikes: Dict[int, int] = {}
+
+    def stragglers(self) -> List[int]:
+        emas = {w: h.ema_step() for w, h in self.detector.health.items()
+                if h.alive and h.step_times}
+        if len(emas) < 2:
+            return []
+        med = sorted(emas.values())[len(emas) // 2]
+        out = []
+        for w, e in emas.items():
+            if med > 0 and e > self.factor * med:
+                self._strikes[w] = self._strikes.get(w, 0) + 1
+                if self._strikes[w] >= self.patience:
+                    out.append(w)
+                    self._strikes[w] = 0
+            else:
+                self._strikes[w] = 0
+        return out

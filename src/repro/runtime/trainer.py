@@ -1,0 +1,72 @@
+"""Data-parallel training over the verbs fabric (the paper's MPI-app role).
+
+``FabricTrainer`` drives N containerised ``DPTrainerApp`` ranks connected
+in a ring; each step computes local grads and ring-all-reduces them over
+verbs QPs. A live migration can be injected at any step boundary (or
+mid-all-reduce via the step hook) — the loss trajectory must be bitwise
+identical to an unmigrated run, which is what "transparent" means.
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.runtime.apps import DPTrainerApp
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import RingAllreduce, connect_pair
+
+
+class FabricTrainer:
+    def __init__(self, n_ranks: int, n_nodes: Optional[int] = None,
+                 seed: int = 0, lr: float = 0.1, loss_prob: float = 0.0,
+                 d_h: int = 64):
+        n_nodes = n_nodes or n_ranks + 1          # spare node for migration
+        self.cluster = SimCluster(n_nodes, loss_prob=loss_prob, seed=seed)
+        self.apps: List[DPTrainerApp] = []
+        for r in range(n_ranks):
+            app = DPTrainerApp(r, n_ranks, seed=seed, lr=lr, d_h=d_h)
+            c = self.cluster.launch(f"rank{r}", r % n_nodes, app)
+            app.attach(c)
+            c.app = app
+            self.apps.append(app)
+        # ring: rank r's "right" connects to rank (r+1)'s "left"
+        for r in range(n_ranks):
+            nxt = (r + 1) % n_ranks
+            connect_pair(self.apps[r].right, self.apps[nxt].left)
+        self.allreduce = RingAllreduce(
+            self.cluster.fabric,
+            [{"right": a.right, "left": a.left} for a in self.apps])
+        self.n = n_ranks
+
+    def step(self, *, step_hook=None) -> float:
+        locs = [a.local_grads() for a in self.apps]
+        grads = [g for (_, g) in locs]
+        losses = [l for (l, _) in locs]
+        if self.n > 1:
+            reduced = self.allreduce.run(grads, step_hook=step_hook)
+        else:
+            reduced = grads
+        for a, g in zip(self.apps, reduced):
+            a.apply_flat(g / self.n)
+        mean_loss = float(np.mean(losses))
+        for a in self.apps:
+            a.losses.append(mean_loss)
+        return mean_loss
+
+    def train(self, steps: int, *, migrate_at=None,
+              migrate_rank: int = 0, migrate_to: Optional[int] = None
+              ) -> List[float]:
+        """Run `steps`; optionally live-migrate `migrate_rank` at step
+        boundary `migrate_at` to node `migrate_to` (default: spare)."""
+        out = []
+        for s in range(steps):
+            if migrate_at is not None and s == migrate_at:
+                dest = (migrate_to if migrate_to is not None
+                        else len(self.cluster.nodes) - 1)
+                self.cluster.migrate(f"rank{migrate_rank}", dest)
+            out.append(self.step())
+        return out
+
+    def weights(self, rank: int = 0) -> np.ndarray:
+        return self.apps[rank].model.flat()

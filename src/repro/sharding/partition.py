@@ -1,0 +1,131 @@
+"""Logical-axis sharding: rules mapping logical names -> mesh axes,
+spec resolution with divisibility checks, and activation constraints.
+
+The model code annotates parameters/activations with *logical* axis names
+(``vocab``, ``embed``, ``ffn``, ``heads``, ``experts``, ``batch`` ...).
+``resolve()`` turns those into ``PartitionSpec``s for the active mesh,
+dropping any assignment that does not divide the actual dimension (e.g. a
+single KV head can't shard 16-way). ``activate(mesh, rules)`` installs the
+mesh for ``constrain`` so model code stays mesh-agnostic; without an active
+mesh, ``constrain`` is the identity (smoke tests, single-device runs).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+# Default rules: FSDP over "data" (weights' embed dim), TP/EP over "model".
+DEFAULT_RULES: Dict[str, Axis] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "vocab": "model",
+    "embed": "data",          # FSDP shard dim of 2-D weights
+    "ffn": "model",           # TP shard dim (mlp hidden, heads*hd, rnn width)
+    "heads": "model",
+    "experts": "model",       # EP
+    "lora": None,
+    "norm": None,
+    "layers": None,
+    "stage": None,
+    # decode-cache axes
+    "seq_kv": ("data", "model"),   # falls back to unused subset
+    "seq_data": "data",
+}
+
+_state = threading.local()
+
+
+def _active() -> Tuple[Optional[Mesh], Dict[str, Axis]]:
+    return (getattr(_state, "mesh", None),
+            getattr(_state, "rules", DEFAULT_RULES))
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: Optional[Dict[str, Axis]] = None):
+    prev = _active()
+    _state.mesh = mesh
+    _state.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _state.mesh, _state.rules = prev
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis] if axis in mesh.shape else 0
+    n = 1
+    for a in axis:
+        s = mesh.shape.get(a, 0) if hasattr(mesh.shape, "get") else (
+            mesh.shape[a] if a in mesh.shape else 0)
+        if s == 0:
+            return 0
+        n *= s
+    return n
+
+
+def resolve(logical: Sequence[Optional[str]],
+            shape: Optional[Sequence[int]] = None,
+            mesh: Optional[Mesh] = None,
+            rules: Optional[Dict[str, Axis]] = None) -> P:
+    """Logical axes (+ concrete shape for divisibility checks) -> spec."""
+    m, r = _active()
+    mesh = mesh or m
+    rules = dict(DEFAULT_RULES, **(rules or {})) if rules else r
+    out, used = [], set()
+    for i, name in enumerate(logical):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            out.append(None)
+            continue
+        flat = (axis,) if isinstance(axis, str) else tuple(axis)
+        # keep only axes that exist in the mesh and are not already used
+        flat = tuple(a for a in flat if a not in used and
+                     (mesh is None or a in mesh.shape))
+        if not flat:
+            out.append(None)
+            continue
+        if mesh is not None:
+            sz = _axis_size(mesh, flat)
+            if sz <= 1 or (shape is not None and shape[i] % max(sz, 1)):
+                out.append(None)
+                continue
+        used.update(flat)
+        out.append(flat[0] if len(flat) == 1 else flat)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """with_sharding_constraint against the active mesh (identity if none)."""
+    mesh, rules = _active()
+    if mesh is None:
+        return x
+    spec = resolve(logical, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def param_shardings(spec_tree, shape_tree, mesh: Mesh,
+                    rules: Optional[Dict[str, Axis]] = None):
+    """Tree of logical-axes tuples + shapes -> tree of NamedShardings."""
+    return jax.tree.map(
+        lambda axes, arr: NamedSharding(
+            mesh, resolve(axes, arr.shape, mesh, rules)),
+        spec_tree, shape_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            a is None or isinstance(a, str) for a in t))
+
+
+def batch_spec(mesh: Mesh, ndim: int,
+               rules: Optional[Dict[str, Axis]] = None) -> P:
+    axes = ["batch"] + [None] * (ndim - 1)
+    return resolve(axes, None, mesh, rules)

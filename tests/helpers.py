@@ -1,0 +1,28 @@
+"""Shared test fixtures for the fabric/migration tests."""
+from __future__ import annotations
+
+from repro.runtime.apps import SendBwApp
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import Channel, connect_pair
+
+
+def make_sendbw_pair(cl: SimCluster, msg_size=2048, window=8):
+    A = cl.launch("send", 0)
+    B = cl.launch("recv", 1)
+    aa = SendBwApp(msg_size=msg_size, window=window)
+    aa.attach(A, sender=True)
+    A.app = aa
+    ab = SendBwApp(msg_size=msg_size, window=window)
+    ab.attach(B, sender=False)
+    B.app = ab
+    connect_pair(aa.channels[0], ab.channels[0])
+    return aa, ab
+
+
+def make_channel_pair(cl: SimCluster, size=1 << 16):
+    ca = cl.launch("a", 0)
+    cb = cl.launch("b", 1)
+    c1 = Channel(ca.ctx, size)
+    c2 = Channel(cb.ctx, size)
+    connect_pair(c1, c2)
+    return c1, c2, ca, cb

@@ -1,0 +1,101 @@
+"""dump_context / restore_object round-trip tests (paper §3.2, Table 2)."""
+import msgpack
+import pytest
+
+from repro.core import dump as dumplib
+from repro.core.states import QPState
+from repro.runtime.cluster import SimCluster
+from tests.helpers import make_channel_pair
+
+
+def _ctx_with_traffic():
+    cl = SimCluster(2)
+    c1, c2, ca, cb = make_channel_pair(cl)
+    c2.post_recv(4096)
+    c1.post_send_bytes(b"y" * 4096)
+    cl.pump(3)    # leave packets in flight
+    return cl, c1, c2, ca, cb
+
+
+def test_dump_stops_all_qps():
+    cl, c1, c2, ca, cb = _ctx_with_traffic()
+    dumplib.dump_context(ca.ctx)
+    for qp in ca.ctx.qps:
+        assert qp.state == QPState.STOPPED
+
+
+def test_dump_covers_all_object_types():
+    cl, c1, c2, ca, cb = _ctx_with_traffic()
+    srq = ca.ctx.create_srq()
+    img = msgpack.unpackb(dumplib.dump_context(ca.ctx), raw=False)
+    assert img["pds"] and img["mrs"] and img["cqs"] and img["qps"]
+    assert img["srqs"][0]["type"] == "SRQ"
+    qp = img["qps"][0]
+    for f in ("sq_psn", "una", "epsn", "inflight", "sq", "rq",
+              "pending_comp", "cur_wqe"):
+        assert f in qp
+
+
+def test_restore_roundtrip_preserves_everything():
+    cl, c1, c2, ca, cb = _ctx_with_traffic()
+    src = ca.ctx
+    qp0 = src.qps[0]
+    snap = (qp0.qpn, qp0.sq_psn, qp0.una, qp0.epsn, len(qp0.inflight),
+            [(m.mrn, m.lkey, m.rkey) for m in src.mrs])
+    blob = dumplib.dump_context(src)
+
+    ctx2 = cl.nodes[1].device.open_context()
+    # free the numbers on the source device first (container destroyed)
+    for qp in list(src.qps):
+        src.device.destroy_qp(qp.qpn)
+    s = dumplib.restore_context(ctx2, blob)
+    qp1 = ctx2.qps[0]
+    assert (qp1.qpn, qp1.sq_psn, qp1.una, qp1.epsn,
+            len(qp1.inflight)) == snap[:5]
+    assert [(m.mrn, m.lkey, m.rkey) for m in ctx2.mrs] == snap[5]
+    assert qp1.state == QPState.RTS
+    assert qp1.resume_pending     # REFILL queued the resume message
+
+
+def test_qpn_collision_detected():
+    cl = SimCluster(2)
+    dev = cl.nodes[0].device
+    ctx = dev.open_context()
+    pd = ctx.alloc_pd()
+    cq = ctx.create_cq()
+    qp = pd.create_qp(cq, cq)
+    dev.last_qpn = qp.qpn - 1     # force reuse of an occupied QPN
+    with pytest.raises(RuntimeError, match="collision"):
+        pd.create_qp(cq, cq)
+
+
+def test_mrn_collision_detected():
+    cl = SimCluster(2)
+    dev = cl.nodes[0].device
+    ctx = dev.open_context()
+    pd = ctx.alloc_pd()
+    mr = pd.reg_mr(64)
+    dev.last_mrn = mr.mrn - 1
+    with pytest.raises(RuntimeError, match="collision"):
+        pd.reg_mr(64)
+
+
+def test_namespace_partitioning_gives_disjoint_ranges():
+    from repro.core.namespace import GlobalNamespace, RANGE
+    ns = GlobalNamespace()
+    bases = [ns.range_for(g) for g in range(8)]
+    assert len(set(bases)) == 8
+    assert GlobalNamespace.owner_of(bases[3] + 17) == 3
+
+
+def test_object_dump_sizes_are_small():
+    """Paper Table 2: per-object dumps are tens to hundreds of bytes."""
+    cl, c1, c2, ca, cb = _ctx_with_traffic()
+    img = msgpack.unpackb(dumplib.dump_context(ca.ctx, stop=False),
+                          raw=False)
+    pd_size = len(msgpack.packb(img["pds"][0]))
+    mr_size = len(msgpack.packb(img["mrs"][0]))
+    cq_size = len(msgpack.packb(img["cqs"][0]))
+    assert pd_size < 64
+    assert mr_size < 128
+    assert cq_size < 256          # empty ring

@@ -1,0 +1,136 @@
+"""Live-migration scenario tests (paper §3.4, §5.3-5.4)."""
+import pytest
+
+from repro.core.states import QPState
+from repro.runtime.cluster import SimCluster
+from tests.helpers import make_sendbw_pair
+
+
+def _run(cl, n):
+    for _ in range(n):
+        cl.step_all()
+
+
+def test_migrate_receiver_mid_stream():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    before = ab.received
+    rep = cl.migrate("recv", 2)
+    assert rep.ok and rep.image_bytes > 0
+    _run(cl, 400)
+    assert ab.received > before
+    # receiver really lives on node 2 now
+    assert ab.channels[0].h.ctx.device.gid == 2
+
+
+def test_migrate_sender_mid_stream():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    before = ab.received
+    cl.migrate("send", 2)
+    _run(cl, 400)
+    assert ab.received > before
+
+
+def test_peer_pauses_on_nak_stopped_and_resumes():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    qa = aa.channels[0].h.qp(aa.channels[0].qpn)
+    saw_paused = {"v": False}
+    orig_pump = cl.fabric.pump
+
+    rep = cl.migrate("recv", 2)
+    # sender may pause transiently during the stop window
+    _run(cl, 400)
+    assert qa.state == QPState.RTS            # resumed after RESUME msg
+    assert qa.dest_gid == 2                   # address rewritten
+
+
+def test_failed_migration_leaves_peer_paused():
+    """Paper §3.4: on failure, paused QPs remain stuck forever."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    rep = cl.migrate("recv", 2, fail_at="transfer")
+    assert not rep.ok
+    _run(cl, 600)
+    qa = aa.channels[0].h.qp(aa.channels[0].qpn)
+    assert qa.state == QPState.PAUSED
+    _run(cl, 600)
+    assert qa.state == QPState.PAUSED         # still stuck
+
+
+def test_migration_under_packet_loss():
+    cl = SimCluster(3, loss_prob=0.05, seed=7)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 100)
+    before = ab.received
+    cl.migrate("recv", 2)
+    _run(cl, 3000)
+    assert ab.received > before
+
+
+def test_simultaneous_migration_of_both_endpoints():
+    """Paper §3.4: simultaneous migrations must not confuse addressing."""
+    cl = SimCluster(4)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    before = ab.received
+    cl.migrate("send", 2)
+    cl.migrate("recv", 3)
+    _run(cl, 1500)
+    assert ab.received > before
+
+
+def test_docker_runtime_interoperability():
+    """Paper §5.4/Fig.12: slower runtime, same end result."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    before = ab.received
+    rep = cl.migrate("recv", 2, runtime="docker")
+    assert rep.ok
+    assert rep.simulated_transfer_s > 0
+    _run(cl, 400)
+    assert ab.received > before
+
+
+def test_migrate_back_and_forth():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    for dest in (2, 1, 2, 1):
+        cl.migrate("recv", dest)
+        _run(cl, 400)
+    before = ab.received
+    _run(cl, 200)
+    assert ab.received > before
+
+
+def test_migration_preserves_ids():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    ch = ab.channels[0]
+    qpn, mrn_s, mrn_r, cqn = ch.qpn, ch.mrn_send, ch.mrn_recv, ch.cqn
+    cl.migrate("recv", 2)
+    _run(cl, 200)
+    # handles still resolve — numbers preserved across restore (§4.1)
+    assert ch.h.qp(qpn).qpn == qpn
+    assert ch.h.mr(mrn_s).mrn == mrn_s
+    assert ch.h.mr(mrn_r).mrn == mrn_r
+    assert ch.h.cq(cqn).cqn == cqn
+
+
+def test_mr_keys_survive_migration():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    ch = ab.channels[0]
+    keys = (ch.h.mr(ch.mrn_recv).lkey, ch.h.mr(ch.mrn_recv).rkey)
+    cl.migrate("recv", 2)
+    _run(cl, 100)
+    assert (ch.h.mr(ch.mrn_recv).lkey, ch.h.mr(ch.mrn_recv).rkey) == keys

@@ -1,0 +1,96 @@
+"""Property-style randomized sweeps (hypothesis is unavailable offline;
+seeded sweeps cover the same invariant space).
+
+Invariants:
+  P1  reliable channels deliver every message exactly once, in order,
+      under any (loss_prob, msg sizes, migration time) combination;
+  P2  dump->restore is the identity on all verbs object state;
+  P3  training with k migrations at random steps == training with none.
+"""
+import msgpack
+import numpy as np
+import pytest
+
+from repro.core import dump as dumplib
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import Channel, connect_pair
+from repro.runtime.trainer import FabricTrainer
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_p1_exactly_once_under_chaos(seed):
+    rng = np.random.RandomState(seed)
+    loss = float(rng.choice([0.0, 0.02, 0.1]))
+    cl = SimCluster(3, loss_prob=loss, seed=seed)
+    ca = cl.launch("a", 0)
+    cb = cl.launch("b", 1)
+    c1 = Channel(ca.ctx, 1 << 18)
+    c2 = Channel(cb.ctx, 1 << 18)
+    connect_pair(c1, c2)
+    n_msgs = int(rng.randint(3, 9))
+    sizes = [int(rng.randint(1, 6000)) for _ in range(n_msgs)]
+    off = 0
+    for sz in sizes:
+        c2.post_recv(sz, offset=off)
+        off += sz
+    off = 0
+    payloads = []
+    for i, sz in enumerate(sizes):
+        p = bytes([i % 251] * sz)
+        payloads.append(p)
+        c1.post_send_bytes(p, offset=off)
+        off += sz
+    migrate_at = int(rng.randint(1, 60))
+    wcs = []
+    for step in range(60_000):
+        cl.pump()
+        if step == migrate_at:
+            cl.migrate("b", 2)
+            c2.h.ctx = cl.containers["b"].ctx   # rebind (apps do this)
+        wcs.extend(w for w in c2.poll(8) if w.opcode == "RECV")
+        if len(wcs) == n_msgs:
+            break
+    assert len(wcs) == n_msgs, (loss, sizes, len(wcs))
+    off = 0
+    for p in payloads:
+        assert c2.recv_bytes(off, len(p)) == p
+        off += len(p)
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_p2_dump_restore_identity(seed):
+    rng = np.random.RandomState(seed)
+    cl = SimCluster(2, loss_prob=float(rng.choice([0.0, 0.1])), seed=seed)
+    ca = cl.launch("a", 0)
+    cb = cl.launch("b", 1)
+    c1 = Channel(ca.ctx, 1 << 16)
+    c2 = Channel(cb.ctx, 1 << 16)
+    connect_pair(c1, c2)
+    for i in range(int(rng.randint(1, 4))):
+        c2.post_recv(512, offset=i * 512)
+        c1.post_send_bytes(bytes([i]) * 512, offset=i * 512)
+    cl.pump(int(rng.randint(1, 10)))
+    img1 = dumplib.dump_context(ca.ctx, stop=True)
+    # dumping a stopped context twice is a fixed point
+    img2 = dumplib.dump_context(ca.ctx, stop=False)
+    assert msgpack.unpackb(img1, raw=False) == \
+        msgpack.unpackb(img2, raw=False)
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_p3_random_migrations_are_transparent(seed):
+    rng = np.random.RandomState(100 + seed)
+    steps = 8
+    ref = FabricTrainer(3, n_nodes=6, seed=seed)
+    l_ref = ref.train(steps)
+    mig = FabricTrainer(3, n_nodes=6, seed=seed)
+    when = sorted(rng.choice(range(1, steps), size=2, replace=False))
+    ranks = rng.randint(0, 3, size=2)
+    out = []
+    for s in range(steps):
+        for w, r in zip(when, ranks):
+            if s == w:
+                mig.cluster.migrate(f"rank{r}",
+                                    int(rng.randint(3, 6)))
+        out.append(mig.step())
+    assert out == l_ref

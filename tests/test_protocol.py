@@ -1,0 +1,105 @@
+"""Wire-protocol tests: reliable delivery, framing, loss recovery, rkeys."""
+import numpy as np
+import pytest
+
+from repro.core.packets import Op
+from repro.core.states import QPState
+from repro.core.verbs import SGE, SendWR
+from repro.runtime.cluster import SimCluster
+from tests.helpers import make_channel_pair
+
+
+def test_single_packet_send_recv():
+    cl = SimCluster(2)
+    c1, c2, *_ = make_channel_pair(cl)
+    c2.post_recv(11)
+    c1.post_send_bytes(b"hello world")
+    cl.run_until_idle()
+    wcs = c2.poll(4)
+    assert [w.opcode for w in wcs] == ["RECV"]
+    assert c2.recv_bytes(0, 11) == b"hello world"
+    assert [w.opcode for w in c1.poll(4)] == ["SEND"]
+
+
+def test_multi_packet_message_framing():
+    cl = SimCluster(2)
+    c1, c2, *_ = make_channel_pair(cl)
+    data = bytes(range(256)) * 40     # ~10 KiB => 10+ MTU packets
+    c2.post_recv(len(data))
+    c1.post_send_bytes(data)
+    cl.run_until_idle()
+    wcs = c2.poll(4)
+    assert len(wcs) == 1 and wcs[0].byte_len == len(data)
+    assert c2.recv_bytes(0, len(data)) == data
+
+
+@pytest.mark.parametrize("loss,seed", [(0.05, 1), (0.2, 42), (0.4, 7)])
+def test_loss_recovery_exactly_once(loss, seed):
+    cl = SimCluster(2, loss_prob=loss, seed=seed)
+    c1, c2, *_ = make_channel_pair(cl, size=1 << 20)
+    rng = np.random.RandomState(seed)
+    blobs = [bytes(rng.randint(0, 256, 1 + rng.randint(5000), dtype=np.uint8))
+             for _ in range(5)]
+    off = 0
+    for b in blobs:
+        c2.post_recv(len(b), offset=off)
+        off += len(b)
+    off = 0
+    for b in blobs:
+        # zero-copy semantics: each WR owns its buffer region until its
+        # completion, so distinct messages need distinct send offsets
+        c1.post_send_bytes(b, offset=off)
+        off += len(b)
+    cl.run_until_idle(max_steps=500_000)
+    wcs = c2.poll(16)
+    assert len(wcs) == 5                       # exactly once, in order
+    off = 0
+    for b in blobs:
+        assert c2.recv_bytes(off, len(b)) == b
+        off += len(b)
+    assert cl.fabric.stats["dropped"] > 0      # loss actually happened
+
+
+def test_rdma_write_with_rkey():
+    cl = SimCluster(2)
+    c1, c2, ca, cb = make_channel_pair(cl)
+    target = c2.h.mr(c2.mrn_recv)
+    mr1 = c1.h.mr(c1.mrn_send)
+    mr1.write(0, b"direct-write!")
+    qp = c1.h.qp(c1.qpn)
+    qp.post_send(SendWR(99, Op.WRITE, SGE(mr1, 0, 13), raddr=100,
+                        rkey=target.rkey))
+    cl.run_until_idle()
+    assert target.read(100, 13) == b"direct-write!"
+    assert [w.opcode for w in c1.poll(4)] == ["WRITE"]
+
+
+def test_rdma_write_bad_rkey_rejected():
+    cl = SimCluster(2)
+    c1, c2, *_ = make_channel_pair(cl)
+    mr1 = c1.h.mr(c1.mrn_send)
+    qp = c1.h.qp(c1.qpn)
+    qp.post_send(SendWR(1, Op.WRITE, SGE(mr1, 0, 4), raddr=0,
+                        rkey=0xDEAD))
+    with pytest.raises(TimeoutError):
+        cl.run_until_idle(max_steps=2000)      # NAKed forever; never idle
+    assert c2.h.mr(c2.mrn_recv).read(0, 4) == b"\x00" * 4
+
+
+def test_rnr_retry_when_recv_posted_late():
+    cl = SimCluster(2)
+    c1, c2, *_ = make_channel_pair(cl)
+    c1.post_send_bytes(b"early bird")
+    cl.pump(300)                               # no RR posted yet
+    assert c2.poll(1) == []
+    c2.post_recv(10)
+    cl.run_until_idle()
+    assert c2.recv_bytes(0, 10) == b"early bird"
+
+
+def test_protection_keys_are_random_per_mr():
+    cl = SimCluster(2)
+    c1, c2, *_ = make_channel_pair(cl)
+    keys = {c1.h.mr(c1.mrn_send).rkey, c1.h.mr(c1.mrn_recv).rkey,
+            c2.h.mr(c2.mrn_send).rkey, c2.h.mr(c2.mrn_recv).rkey}
+    assert len(keys) == 4

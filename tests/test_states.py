@@ -1,0 +1,55 @@
+"""QP state machine unit tests (paper Fig. 4)."""
+import pytest
+
+from repro.core.states import (InvalidTransition, QPState, can_receive,
+                               can_send, check_transition)
+
+
+def test_user_happy_path():
+    for cur, new in [(QPState.RESET, QPState.INIT),
+                     (QPState.INIT, QPState.RTR),
+                     (QPState.RTR, QPState.RTS),
+                     (QPState.RTS, QPState.SQD),
+                     (QPState.SQD, QPState.RTS)]:
+        check_transition(cur, new)
+
+
+def test_user_cannot_jump_to_rts():
+    with pytest.raises(InvalidTransition):
+        check_transition(QPState.RESET, QPState.RTS)
+    with pytest.raises(InvalidTransition):
+        check_transition(QPState.INIT, QPState.RTS)
+
+
+def test_user_cannot_enter_migration_states():
+    """Stopped/Paused are invisible to the application (paper §3.3)."""
+    for tgt in (QPState.STOPPED, QPState.PAUSED):
+        with pytest.raises(InvalidTransition):
+            check_transition(QPState.RTS, tgt, system=False)
+
+
+def test_system_migration_transitions():
+    check_transition(QPState.RTS, QPState.STOPPED, system=True)
+    check_transition(QPState.RTS, QPState.PAUSED, system=True)
+    check_transition(QPState.PAUSED, QPState.RTS, system=True)
+    check_transition(QPState.STOPPED, QPState.RESET, system=True)
+
+
+def test_stopped_is_terminal_except_destroy():
+    with pytest.raises(InvalidTransition):
+        check_transition(QPState.STOPPED, QPState.RTS, system=True)
+
+
+def test_send_recv_gates():
+    assert can_send(QPState.RTS)
+    assert not can_send(QPState.PAUSED)
+    assert not can_send(QPState.STOPPED)
+    assert not can_send(QPState.SQD)      # drain: no NEW sends
+    assert can_receive(QPState.RTR)
+    assert can_receive(QPState.SQD)
+    assert not can_receive(QPState.STOPPED)
+
+
+def test_user_teardown_always_allowed():
+    check_transition(QPState.RTS, QPState.ERROR)
+    check_transition(QPState.SQE, QPState.RESET)
