@@ -1,0 +1,78 @@
+"""Downtime vs total migration time across live-migration strategies.
+
+A write-heavy streaming pair (ib_send_bw-style: the receiver's MR is
+continuously written by inbound traffic) is migrated mid-stream under each
+strategy. Stop-and-copy pays the full MR footprint inside the
+stop-the-world window; pre-copy moves the footprint while the app keeps
+running and stops only for the residual dirty set + verbs state; post-copy
+stops only for the verbs image and faults pages in afterwards.
+
+Columns: downtime (wall stop-window + simulated stopped-bytes/bw) vs total
+(downtime + live-phase copy time). The assertion at the bottom is the
+acceptance bar: pre-copy downtime strictly below stop-and-copy's total.
+"""
+from repro.runtime.apps import SendBwApp
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import connect_pair
+
+LINK_BPS = 1e8          # 100 MB/s link: bandwidth dominates, deterministic
+BUF_KIB = 256           # per-MR footprint of the migrated container
+
+
+def _write_heavy_pair(cl):
+    A = cl.launch("send", 0)
+    B = cl.launch("recv", 1)
+    aa = SendBwApp(msg_size=4096, window=16, buf_size=BUF_KIB * 1024)
+    aa.attach(A, sender=True)
+    A.app = aa
+    ab = SendBwApp(msg_size=4096, window=16, buf_size=BUF_KIB * 1024)
+    ab.attach(B, sender=False)
+    B.app = ab
+    connect_pair(aa.channels[0], ab.channels[0])
+    return aa, ab
+
+
+def run_strategy(strategy):
+    cl = SimCluster(3, link_bandwidth_Bps=LINK_BPS)
+    aa, ab = _write_heavy_pair(cl)
+    for _ in range(80):
+        cl.step_all()
+    rep = cl.migrate("recv", 2, strategy=strategy)
+    for _ in range(300):
+        cl.step_all()
+    post_pull_s = 0.0
+    if rep.pager is not None:              # drain post-copy in background
+        while rep.pager.remaining_pages:
+            rep.pager.prefetch(64)
+        post_pull_s = rep.pager.simulated_pull_s
+    downtime = rep.downtime_s + rep.simulated_downtime_s
+    total = (rep.downtime_s + rep.live_s + rep.simulated_transfer_s
+             + post_pull_s)
+    return rep, downtime, total, ab
+
+
+def main():
+    results = {}
+    for name in ("stop_and_copy", "pre_copy", "post_copy"):
+        rep, downtime, total, ab = run_strategy(name)
+        results[name] = (rep, downtime, total)
+        print(f"fig_downtime[{name}],{downtime*1e6:.0f},"
+              f"total_us={total*1e6:.0f},"
+              f"image_KiB={rep.image_bytes/1024:.0f},"
+              f"rounds={len(rep.rounds)},"
+              f"pages_sent={rep.pages_sent},"
+              f"received_after={ab.received}")
+    sc_total = results["stop_and_copy"][2]
+    pre_down = results["pre_copy"][1]
+    post_down = results["post_copy"][1]
+    print(f"# pre_copy downtime {pre_down*1e6:.0f}us vs "
+          f"stop_and_copy total {sc_total*1e6:.0f}us "
+          f"({sc_total/pre_down:.1f}x); post_copy downtime "
+          f"{post_down*1e6:.0f}us")
+    assert pre_down < sc_total, \
+        "pre-copy downtime must beat stop-and-copy total"
+    assert post_down < sc_total
+
+
+if __name__ == "__main__":
+    main()

@@ -51,6 +51,21 @@ def main():
     assert same_losses and same_weights
     print("MigrOS transparency: VERIFIED")
 
+    print("\npre-copy run (orchestrator: dirty-page rounds, short stop):")
+    pre = FabricTrainer(4, seed=11)
+    l_pre = []
+    for s in range(12):
+        if s == 6:
+            rep = pre.cluster.migrate("rank1",
+                                      len(pre.cluster.nodes) - 1,
+                                      strategy="pre_copy")
+            print(f"  [pre-copy: rounds={len(rep.rounds)} "
+                  f"residual={rep.image_bytes/1024:.0f} KiB "
+                  f"downtime={rep.downtime_s*1e3:.2f}ms]")
+        l_pre.append(pre.step())
+    assert l_pre == l_ref
+    print("pre-copy transparency: VERIFIED")
+
 
 if __name__ == "__main__":
     main()

@@ -1,4 +1,5 @@
-"""Sharded checkpointing: msgpack + zstd, per-leaf streaming, async writer.
+"""Sharded checkpointing: msgpack + zstd (zlib fallback), per-leaf
+streaming, async writer.
 
 Layout: <dir>/step_<N>/{manifest.msgpack, leaf_<i>.bin}. Each leaf is the
 full (unsharded) array — on restore, ``jax.device_put`` with the target
@@ -11,23 +12,45 @@ from __future__ import annotations
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Dict, Optional
 
 import jax
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # zlib fallback keeps checkpoints working
+    zstandard = None
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(raw: bytes) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=1).compress(raw)
+    return zlib.compress(raw, 1)
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError("checkpoint is zstd-compressed but the "
+                               "zstandard module is not installed")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _pack_leaf(arr) -> bytes:
     a = np.asarray(arr)
     meta = {"dtype": str(a.dtype), "shape": list(a.shape)}
     raw = msgpack.packb(meta) + bytes(a.tobytes())
-    return zstandard.ZstdCompressor(level=1).compress(raw)
+    return _compress(raw)
 
 
 def _unpack_leaf(blob: bytes) -> np.ndarray:
-    raw = zstandard.ZstdDecompressor().decompress(blob)
+    raw = _decompress(blob)
     up = msgpack.Unpacker()
     up.feed(raw)
     meta = up.unpack()

@@ -188,7 +188,7 @@ def restore_object(session: RestoreSession, cmd: str, entry: dict,
 
     if cmd == "SET_MR_KEYS":                                     # [MIGR]
         mr = session.mr_by_n[entry["mrn"]]
-        mr.lkey, mr.rkey = entry["lkey"], entry["rkey"]
+        dev.set_mr_keys(mr, entry["lkey"], entry["rkey"])
         return mr
 
     if cmd == "REFILL":                                          # [MIGR]

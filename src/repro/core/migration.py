@@ -15,7 +15,7 @@ from __future__ import annotations
 import time
 import zlib
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import msgpack
 
@@ -31,6 +31,22 @@ class MigrationReport:
     image_bytes: int = 0
     simulated_transfer_s: float = 0.0
     ok: bool = True
+    # -- live-migration engine extensions ----------------------------- [MIGR]
+    strategy: str = "stop_and_copy"
+    downtime_s: float = 0.0            # wall time QPs were actually stopped
+    simulated_downtime_s: float = 0.0  # bytes moved while stopped / link bw
+    live_s: float = 0.0                # pre-copy wall time spent still running
+    rounds: List[Dict] = field(default_factory=list)   # per pre-copy round
+    pages_total: int = 0
+    pages_sent: int = 0                # includes re-sent dirty pages
+    stage_failed: Optional[str] = None   # "checkpoint" | "transfer"
+    retries: int = 0
+    rolled_back: bool = False
+    # retry token: strategy-private state (captured image / staged pages)
+    # the orchestrator hands back to resume a failed transfer.
+    attempt: Optional[Dict] = field(default=None, repr=False, compare=False)
+    # post-copy demand pager, still serving faults after migrate() returns
+    pager: Optional[object] = field(default=None, repr=False, compare=False)
 
     @property
     def total_s(self):
@@ -84,6 +100,8 @@ class MigrationController:
             return rep
 
         t0 = time.perf_counter()
+        rep.pages_total = sum(m.n_pages for m in container.ctx.mrs)
+        rep.pages_sent = rep.pages_total   # every page moves while stopped
         image = self._checkpoint(container)
         # QPs are now STOPPED but still attached: while the image is being
         # written/moved, partner packets hit them and draw NAK_STOPPED
@@ -97,6 +115,7 @@ class MigrationController:
         rep.checkpoint_s = time.perf_counter() - t0
         if fail_at == "checkpoint":
             rep.ok = False
+            rep.stage_failed = "checkpoint"                      # [MIGR]
             return rep
 
         t1 = time.perf_counter()
@@ -113,12 +132,18 @@ class MigrationController:
             # (paper §3.4). The container itself is gone.
             container.alive = False
             rep.ok = False
+            rep.stage_failed = "transfer"                        # [MIGR]
+            # the image is complete; an orchestrator may retry the move
+            rep.attempt = {"image": moved, "runtime": runtime}   # [MIGR]
             return rep
 
         t2 = time.perf_counter()
         self._teardown_source(container)
         self._restore(container, moved, dest_node)
         rep.restore_s = time.perf_counter() - t2
+        # stop-and-copy: the whole flow is one stop-the-world window
+        rep.downtime_s = rep.total_s                             # [MIGR]
+        rep.simulated_downtime_s = rep.simulated_transfer_s      # [MIGR]
         return rep
 
     def _teardown_source(self, container):
@@ -131,6 +156,8 @@ class MigrationController:
                 qp.state = QPState.RESET                          # [MIGR]
             dev.destroy_qp(qp.qpn)
         ctx.qps.clear()
+        for mr in list(ctx.mrs):
+            dev.dereg_mr(mr)   # keep the device rkey index coherent
         ctx.mrs.clear()
         if ctx in dev.contexts:
             dev.contexts.remove(ctx)

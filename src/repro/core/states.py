@@ -46,6 +46,11 @@ SYSTEM_TRANSITIONS = {
     (QPState.RTS, QPState.PAUSED),     # [MIGR] partner saw NAK_STOPPED
     (QPState.PAUSED, QPState.RTS),     # [MIGR] resume received
     (QPState.STOPPED, QPState.RESET),  # [MIGR] destroyed with checkpoint
+    (QPState.STOPPED, QPState.RTS),    # [MIGR] orchestrator rollback of an
+                                       #        aborted migration: the QP
+                                       #        was never destroyed, so it
+                                       #        re-arms in place and sends
+                                       #        RESUME to un-pause peers
 }
 
 

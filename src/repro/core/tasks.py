@@ -155,6 +155,9 @@ def responder(qp):
                 _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
                               nak_code=NakCode.INVALID_RKEY))
                 continue
+            # Responder-side delivery dirties the page bitmap (and faults
+            # in post-copy pages) inside MemoryRegion.write — pre-copy sees
+            # remote RDMA WRITEs exactly like local stores.        # [MIGR]
             mr.write(pkt.raddr, pkt.payload)
             qp.epsn += 1
             qp.last_nak_epsn = -1

@@ -18,6 +18,15 @@ from repro.core.packets import NakCode, Op, Packet
 from repro.core.states import QPState, can_send, check_transition
 
 
+PAGE_SIZE = 4096        # dirty-tracking / demand-paging granularity # [MIGR]
+
+
+class CQOverrunError(RuntimeError):
+    """A completion was pushed into a full CQ. The wire already committed
+    to this work (it was ACKed), so silently dropping it would lose
+    acknowledged completions — surface the overrun instead."""
+
+
 class WCStatus(enum.Enum):
     SUCCESS = "SUCCESS"
     LOC_LEN_ERR = "LOC_LEN_ERR"
@@ -70,13 +79,42 @@ class MemoryRegion:
         self.lkey = lkey
         self.rkey = rkey
         self.buf = bytearray(size)
+        # Live-migration hooks. Both stay None outside an active migration
+        # so the fast path pays one predictable branch per access. # [MIGR]
+        self._dirty: Optional[set] = None   # page-granular dirty bitmap
+        self.pager = None                   # post-copy demand pager
+
+    @property
+    def n_pages(self) -> int:
+        return -(-self.size // PAGE_SIZE)
+
+    # -- dirty tracking (pre-copy) ---------------------------------- # [MIGR]
+    def start_dirty_tracking(self):
+        self._dirty = set()
+
+    def stop_dirty_tracking(self):
+        self._dirty = None
+
+    def collect_dirty(self, *, clear: bool = True) -> set:
+        """Pages written since tracking started / was last cleared."""
+        pages = set() if self._dirty is None else set(self._dirty)
+        if clear and self._dirty is not None:
+            self._dirty = set()
+        return pages
 
     def write(self, off: int, data: bytes):
         if off + len(data) > self.size:
             raise IndexError("MR overflow")
+        if self.pager is not None:                               # [MIGR]
+            self.pager.ensure(self, off, len(data))
         self.buf[off:off + len(data)] = data
+        if self._dirty is not None and data:                     # [MIGR]
+            self._dirty.update(range(off // PAGE_SIZE,
+                                     (off + len(data) - 1) // PAGE_SIZE + 1))
 
     def read(self, off: int, length: int) -> bytes:
+        if self.pager is not None:                               # [MIGR]
+            self.pager.ensure(self, off, length)
         return bytes(self.buf[off:off + length])
 
 
@@ -84,11 +122,16 @@ class CompletionQueue:
     def __init__(self, cqn: int, depth: int = 4096):
         self.cqn = cqn
         self.depth = depth
-        self.ring: Deque[WorkCompletion] = deque(maxlen=depth)
+        self.ring: Deque[WorkCompletion] = deque()
         self.head = 0                      # ring-buffer metadata (dumped)
         self.tail = 0
+        self.overruns = 0
 
     def push(self, wc: WorkCompletion):
+        if len(self.ring) >= self.depth:
+            self.overruns += 1
+            raise CQOverrunError(
+                f"CQ {self.cqn} overrun: depth {self.depth} exceeded")
         self.ring.append(wc)
         self.tail += 1
 
@@ -247,6 +290,9 @@ class RdmaDevice:
         self.last_mrn: Optional[int] = None   # [MIGR]
         self.qps: Dict[int, QueuePair] = {}
         self.contexts: List[Context] = []
+        # rkey -> MR index: every inbound RDMA WRITE/READ resolves its rkey
+        # here, so lookup must be O(1), not a scan over contexts × MRs.
+        self.mr_by_rkey: Dict[int, MemoryRegion] = {}
 
     # -- numbering ---------------------------------------------------------------
     def next_pdn(self):
@@ -280,7 +326,22 @@ class RdmaDevice:
                           lkey=self.rng.getrandbits(32),
                           rkey=self.rng.getrandbits(32))
         pd.ctx.mrs.append(mr)
+        self.mr_by_rkey[mr.rkey] = mr
         return mr
+
+    def dereg_mr(self, mr: MemoryRegion):
+        if self.mr_by_rkey.get(mr.rkey) is mr:
+            del self.mr_by_rkey[mr.rkey]
+        for ctx in self.contexts:
+            if mr in ctx.mrs:
+                ctx.mrs.remove(mr)
+
+    def set_mr_keys(self, mr: MemoryRegion, lkey: int, rkey: int):
+        """Rebind MR keys (restore path) keeping the rkey index coherent."""
+        if self.mr_by_rkey.get(mr.rkey) is mr:
+            del self.mr_by_rkey[mr.rkey]
+        mr.lkey, mr.rkey = lkey, rkey
+        self.mr_by_rkey[rkey] = mr
 
     def create_qp(self, pd, send_cq, recv_cq, srq=None) -> QueuePair:
         if self.last_qpn is not None:                        # [MIGR]
@@ -320,8 +381,4 @@ class RdmaDevice:
         return all(qp.idle() for qp in self.qps.values())
 
     def rkey_lookup(self, rkey: int):
-        for ctx in self.contexts:
-            for mr in ctx.mrs:
-                if mr.rkey == rkey:
-                    return mr
-        return None
+        return self.mr_by_rkey.get(rkey)

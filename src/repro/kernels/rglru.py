@@ -18,6 +18,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, al_ref, ga_ref, gx_ref, h0_ref, y_ref, hout_ref, h_scr,
             *, c, bt, nt):
@@ -89,7 +93,7 @@ def rglru_scan(x, a_log, gate_a, gate_x, *, c=8.0, h0=None, block_d=512,
             jax.ShapeDtypeStruct((B, D), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((1, bd), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, al2, gate_a, gate_x, h0)

@@ -16,6 +16,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax renamed TPUCompilerParams -> CompilerParams; support both
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
 
 def _kernel(x_ref, dt_ref, al_ref, b_ref, c_ref, h0_ref, y_ref, hout_ref,
             h_scr, *, Q, nc):
@@ -111,7 +115,7 @@ def ssd_scan(x, dt, A_log, B, C, *, D=None, h0=None, chunk=256,
             jax.ShapeDtypeStruct((b, H, P, N), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xr, dtr, al2, Br, Cr, h0)

@@ -74,6 +74,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
     rec["memory"]["per_device_total"] = (
         rec["memory"]["argument_bytes"] + rec["memory"]["temp_bytes"])
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # older jax wraps the dict in a list
+        ca = ca[0] if ca else {}
     # cost_analysis counts while (scan) bodies once; the loop-aware HLO
     # analyzer is authoritative (see roofline/hlo.py). Raw kept for ref.
     rec["cost_analysis_raw"] = {
@@ -108,8 +110,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
               f"coll={rl.collective_s*1e3:.2f}ms "
               f"bottleneck={rl.bottleneck} useful={rl.useful_ratio:.2f}")
         print(compiled.memory_analysis())
-        print({k: v for k, v in (compiled.cost_analysis() or {}).items()
-               if "{" not in k})
+        print({k: v for k, v in ca.items() if "{" not in k})
     return rec
 
 

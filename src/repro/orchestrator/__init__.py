@@ -1,0 +1,16 @@
+"""Cluster migration orchestrator: control plane + live-migration engine.
+
+Layering (fabric → verbs → dump/migration → **orchestrator** → cluster
+runtime): this package sits above the per-container ``MigrationController``
+and below ``SimCluster``. ``strategies`` holds the pluggable engines
+(stop-and-copy / pre-copy / post-copy), ``orchestrator`` the cluster-wide
+control plane (admission, queueing, retry, rollback).
+"""
+from repro.orchestrator.orchestrator import (AdmissionError,  # noqa: F401
+                                             MigrationPlan,
+                                             MigrationRequest, Orchestrator)
+from repro.orchestrator.strategies import (STRATEGIES,  # noqa: F401
+                                           DemandPager, MigrationStrategy,
+                                           PostCopy, PreCopy, StopAndCopy,
+                                           choose_migration_strategy,
+                                           make_strategy)

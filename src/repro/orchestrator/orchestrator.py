@@ -1,0 +1,218 @@
+"""Cluster-wide migration control plane (admission, queueing, retry,
+rollback).
+
+The seed's control plane was a single dict (``MigrationController
+.relocated``). Production migration needs more: a request is *admitted*
+(destination capacity, QPN/MRN-range collision, link-bandwidth budget)
+before any QP is stopped, concurrent requests are serialised through a
+FIFO queue, failed transfers are retried from the last completed round,
+and a migration that dies mid-flight is *rolled back* — the still-attached
+source QPs leave STOPPED, re-arm, and send RESUME so paused peers recover
+instead of hanging on NAK_STOPPED forever (the failure mode the paper
+accepts in §3.4, and the one ``test_failed_migration_leaves_peer_paused``
+pins for the bare controller).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from repro.core.migration import (MigrationController, MigrationError,
+                                  MigrationReport)
+from repro.core.states import QPState
+from repro.core.verbs import PAGE_SIZE
+from repro.orchestrator.strategies import (MigrationStrategy,
+                                           choose_migration_strategy,
+                                           make_strategy)
+
+# sim-time → wall-time conversion for bandwidth estimates: one fabric
+# pump step models roughly a microsecond of NIC time.
+STEP_S = 1e-6
+
+
+class AdmissionError(MigrationError):
+    """Pre-migration validation failed; nothing was stopped or moved."""
+
+
+@dataclass
+class MigrationPlan:
+    """Outcome of admission: what will move, where, and the cost estimate."""
+    container: str
+    src_gid: int
+    dest_gid: int
+    est_image_bytes: int
+    est_transfer_s: float
+    checks: List[str] = field(default_factory=list)
+
+
+@dataclass
+class MigrationRequest:
+    container: object
+    dest_node: object
+    strategy: object = "stop_and_copy"      # name | class | instance
+    strategy_params: Dict = field(default_factory=dict)
+    runtime: str = "crx"
+    fail_at: Optional[str] = None
+    retries: int = 1
+
+
+class Orchestrator:
+    """Owns the cluster migration state: the ``relocated`` registry (shared
+    with the wrapped controller so bare-controller migrations stay
+    coherent), the request queue, and per-request retry/rollback."""
+
+    def __init__(self, controller: MigrationController, *,
+                 background: Optional[Callable] = None,
+                 max_transfer_s: Optional[float] = None,
+                 max_downtime_s: float = 1e-3):
+        self.controller = controller
+        self.background = background      # steps apps + pumps once (live)
+        self.max_transfer_s = max_transfer_s
+        self.max_downtime_s = max_downtime_s   # budget for strategy="auto"
+        self.queue: deque = deque()
+        self.history: List[MigrationReport] = []
+
+    @property
+    def relocated(self) -> Dict[int, int]:
+        return self.controller.relocated
+
+    # -- admission -----------------------------------------------------------
+    def admit(self, container, dest_node) -> MigrationPlan:
+        if dest_node is container.node:
+            raise AdmissionError("destination is the source node")
+        if not container.alive:
+            raise AdmissionError(f"container {container.name!r} not alive")
+        checks = []
+        cap = getattr(dest_node, "capacity", None)
+        if cap is not None and len(dest_node.containers) >= cap:
+            raise AdmissionError(
+                f"node {dest_node.gid} at capacity ({cap})")
+        checks.append("capacity")
+        dev = dest_node.device
+        for qp in container.ctx.qps:
+            if qp.qpn in dev.qps:
+                raise AdmissionError(
+                    f"QPN {qp.qpn} already allocated on node {dev.gid}")
+        taken_mrns = {m.mrn for c in dev.contexts for m in c.mrs}
+        for mr in container.ctx.mrs:
+            if mr.mrn in taken_mrns:
+                raise AdmissionError(
+                    f"MRN {mr.mrn} already allocated on node {dev.gid}")
+        checks.append("qpn_range")
+        est = sum(mr.size for mr in container.ctx.mrs) + 4096
+        est_s = est / self.controller.bw
+        if self.max_transfer_s is not None and est_s > self.max_transfer_s:
+            raise AdmissionError(
+                f"estimated transfer {est_s:.4f}s exceeds "
+                f"budget {self.max_transfer_s:.4f}s")
+        checks.append("bandwidth")
+        return MigrationPlan(container.name, container.node.gid,
+                             dest_node.gid, est, est_s, checks)
+
+    def estimate_dirty_rate(self, container, probe_steps: int = 20) -> float:
+        """Probe the container's write rate (bytes/s of dirtied pages) by
+        running it briefly under dirty tracking — feeds strategy='auto'.
+        MRs already being tracked keep their accumulated dirty set: it is
+        parked during the probe and merged back (with the probe's pages)
+        afterwards."""
+        mrs = list(container.ctx.mrs)
+        parked = {}
+        for mr in mrs:
+            if mr._dirty is not None:
+                parked[mr.mrn] = mr.collect_dirty(clear=True)
+            else:
+                mr.start_dirty_tracking()
+        for _ in range(probe_steps):
+            if self.background is not None:
+                self.background()
+            else:
+                self.controller.fabric.pump()
+        dirtied = 0
+        for mr in mrs:
+            probed = mr.collect_dirty(clear=True)
+            dirtied += len(probed) * PAGE_SIZE
+            if mr.mrn in parked:
+                mr._dirty = parked[mr.mrn] | probed
+            else:
+                mr.stop_dirty_tracking()
+        return dirtied / (probe_steps * STEP_S)
+
+    # -- queueing ------------------------------------------------------------
+    def submit(self, container, dest_node, *, strategy="stop_and_copy",
+               strategy_params: Optional[Dict] = None, runtime: str = "crx",
+               fail_at: Optional[str] = None,
+               retries: int = 1) -> MigrationRequest:
+        req = MigrationRequest(container, dest_node, strategy,
+                               dict(strategy_params or {}), runtime,
+                               fail_at, retries)
+        self.queue.append(req)
+        return req
+
+    def drain(self) -> List[MigrationReport]:
+        """Execute queued requests one at a time (migrations are
+        serialised; admission re-runs at execution time, so a request
+        invalidated by an earlier one is rejected, not corrupted). A
+        rejected request yields a failed report — it never aborts the
+        rest of the queue."""
+        out = []
+        while self.queue:
+            req = self.queue.popleft()
+            try:
+                out.append(self._execute(req))
+            except AdmissionError as e:
+                rep = MigrationReport(ok=False, stage_failed="admission")
+                rep.admission_error = e
+                self.history.append(rep)
+                out.append(rep)
+        return out
+
+    def migrate(self, container, dest_node, **kw) -> MigrationReport:
+        """Submit + drain. FIFO: earlier queued requests run first; an
+        admission rejection of *this* request re-raises here."""
+        self.submit(container, dest_node, **kw)
+        rep = self.drain()[-1]
+        err = getattr(rep, "admission_error", None)
+        if err is not None:
+            raise err
+        return rep
+
+    # -- execution -----------------------------------------------------------
+    def _execute(self, req: MigrationRequest) -> MigrationReport:
+        self.admit(req.container, req.dest_node)
+        strategy = req.strategy
+        if strategy == "auto":
+            est = sum(mr.size for mr in req.container.ctx.mrs)
+            rate = self.estimate_dirty_rate(req.container)
+            strategy = choose_migration_strategy(
+                est, rate, self.controller.bw, self.max_downtime_s)
+        strat = make_strategy(strategy, **req.strategy_params)
+        rep = strat.run(self.controller, req.container, req.dest_node,
+                        runtime=req.runtime, fail_at=req.fail_at,
+                        background=self.background)
+        while (not rep.ok and rep.stage_failed == "transfer"
+               and rep.attempt is not None and rep.retries < req.retries):
+            rep.retries += 1
+            rep = strat.resume(self.controller, req.container,
+                               req.dest_node, rep.attempt, rep)
+        if not rep.ok:
+            self.rollback(req.container, rep)
+        self.history.append(rep)
+        return rep
+
+    # -- rollback ------------------------------------------------------------
+    def rollback(self, container,
+                 rep: Optional[MigrationReport] = None) -> None:
+        """Abort a mid-flight migration: the source QPs were stopped but
+        never destroyed, so re-arm them in place. ``resume_pending`` makes
+        each QP announce itself (same address) so peers parked in PAUSED
+        leave it via the normal RESUME handshake, and go-back-N recovers
+        whatever was NAK_STOPPED-dropped in the stop window."""
+        for qp in container.ctx.qps:
+            if qp.state == QPState.STOPPED:
+                qp.modify(QPState.RTS, system=True)              # [MIGR]
+                qp.resume_pending = True
+                qp.last_resume_tx = -10 ** 9    # announce immediately
+        container.alive = True
+        if rep is not None:
+            rep.rolled_back = True

@@ -1,0 +1,463 @@
+"""Pluggable live-migration strategies (the engine under the orchestrator).
+
+The seed ``MigrationController`` is a full stop-and-copy: downtime scales
+with total MR footprint. Production live migration bounds downtime instead:
+
+* ``StopAndCopy`` — the seed flow, preserved verbatim (it delegates to the
+  controller, so results stay byte-identical to the seed).
+* ``PreCopy``     — iterative rounds: snapshot all MR pages while the app
+  keeps running and the fabric keeps pumping, then re-send only dirtied
+  pages until the delta converges below a threshold or a round cap, then a
+  short stop-and-copy of the residual + verbs state. Downtime scales with
+  the residual dirty set, not the footprint.
+* ``PostCopy``    — restore verbs state immediately at the destination and
+  fault MR pages in on demand (``DemandPager``); downtime scales with the
+  verbs image alone.
+
+Every strategy produces a ``MigrationReport`` with ``downtime_s`` (wall
+time the QPs were actually stopped) split from ``total_s``, plus
+``simulated_*`` figures derived from the link bandwidth so comparisons are
+deterministic. Failed transfers leave a retry token in ``report.attempt``;
+the orchestrator hands it back to ``resume()`` to redo the move from the
+last completed round.
+"""
+from __future__ import annotations
+
+import time
+import zlib
+from typing import Callable, Dict, Optional
+
+import msgpack
+
+from repro.core import dump as dumplib
+from repro.core.migration import MigrationReport
+from repro.core.verbs import PAGE_SIZE, MemoryRegion
+
+
+def _sim_transfer_s(ctl, attempt: Dict) -> float:
+    """Simulated wire time for (re-)moving an attempt's image, honouring
+    the docker runtime's via-storage double cost."""
+    sim = len(attempt["image"]) / ctl.bw
+    if attempt.get("runtime") == "docker":
+        sim *= 2
+    return sim
+
+
+class MigrationStrategy:
+    """Interface: ``run`` performs a migration end to end; ``resume``
+    retries the transfer+restore half from a captured attempt token."""
+
+    name = "base"
+
+    def run(self, ctl, container, dest_node, *, runtime: str = "crx",
+            fail_at: Optional[str] = None,
+            background: Optional[Callable] = None) -> MigrationReport:
+        raise NotImplementedError
+
+    def resume(self, ctl, container, dest_node, attempt: Dict,
+               rep: MigrationReport) -> MigrationReport:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# stop-and-copy (seed behaviour, preserved)
+# ---------------------------------------------------------------------------
+
+
+class StopAndCopy(MigrationStrategy):
+    name = "stop_and_copy"
+
+    def run(self, ctl, container, dest_node, *, runtime="crx", fail_at=None,
+            background=None):
+        # delegate to the controller so the flow (pump counts, staging,
+        # image layout) is exactly the seed's
+        return ctl.migrate(container, dest_node, runtime=runtime,
+                           fail_at=fail_at)
+
+    def resume(self, ctl, container, dest_node, attempt, rep):
+        t1 = time.perf_counter()
+        image = attempt["image"]
+        rep.simulated_transfer_s += _sim_transfer_s(ctl, attempt)
+        rep.transfer_s += time.perf_counter() - t1
+        t2 = time.perf_counter()
+        ctl._teardown_source(container)
+        ctl._restore(container, image, dest_node)
+        rep.restore_s += time.perf_counter() - t2
+        container.alive = True
+        rep.ok = True
+        rep.stage_failed = None
+        rep.attempt = None
+        rep.downtime_s = rep.total_s
+        rep.simulated_downtime_s = rep.simulated_transfer_s
+        return rep
+
+
+# ---------------------------------------------------------------------------
+# pre-copy
+# ---------------------------------------------------------------------------
+
+
+class PreCopy(MigrationStrategy):
+    name = "pre_copy"
+
+    def __init__(self, *, threshold_bytes: int = 2 * PAGE_SIZE,
+                 max_rounds: int = 8, pump_per_round: int = 40):
+        assert max_rounds >= 1
+        self.threshold_bytes = threshold_bytes
+        self.max_rounds = max_rounds
+        self.pump_per_round = pump_per_round
+
+    # -- live phase helpers -----------------------------------------------
+    def _live(self, ctl, background):
+        """One round's worth of 'the page copy is on the wire': the app
+        keeps running and the fabric keeps pumping, dirtying pages."""
+        for _ in range(self.pump_per_round):
+            if background is not None:
+                background()
+            else:
+                ctl.fabric.pump()
+
+    @staticmethod
+    def _page(mr: MemoryRegion, pg: int) -> bytes:
+        return bytes(mr.buf[pg * PAGE_SIZE:(pg + 1) * PAGE_SIZE])
+
+    def run(self, ctl, container, dest_node, *, runtime="crx", fail_at=None,
+            background=None):
+        rep = MigrationReport(strategy=self.name)
+        if dest_node is container.node:
+            return rep
+        ctx = container.ctx
+        mrs = list(ctx.mrs)
+
+        t_live = time.perf_counter()
+        for mr in mrs:
+            mr.start_dirty_tracking()
+        # staged = the destination's copy of MR memory, page-granular; in
+        # the simulation it simply lives here until restore applies it.
+        staged: Dict = {}
+        for mr in mrs:
+            for pg in range(mr.n_pages):
+                staged[(mr.mrn, pg)] = self._page(mr, pg)
+        rep.pages_total = len(staged)
+        rep.pages_sent = len(staged)
+        r0_bytes = sum(len(v) for v in staged.values())
+        rep.rounds.append({"round": 0, "pages": len(staged),
+                           "bytes": r0_bytes, "sim_s": r0_bytes / ctl.bw})
+        self._live(ctl, background)
+
+        # iterative delta rounds: re-send only what got dirtied while the
+        # previous round's copy was in flight
+        residual = []
+        for rnd in range(1, self.max_rounds + 1):
+            dirty = [(mr, pg) for mr in mrs
+                     for pg in sorted(mr.collect_dirty())]
+            dirty_bytes = sum(len(self._page(mr, pg)) for mr, pg in dirty)
+            if dirty_bytes <= self.threshold_bytes \
+                    or rnd == self.max_rounds:
+                # converged (or round cap): fall back to stop-and-copy of
+                # exactly this residual
+                residual = dirty
+                break
+            for mr, pg in dirty:
+                staged[(mr.mrn, pg)] = self._page(mr, pg)
+            rep.pages_sent += len(dirty)
+            rep.rounds.append({"round": rnd, "pages": len(dirty),
+                               "bytes": dirty_bytes,
+                               "sim_s": dirty_bytes / ctl.bw})
+            self._live(ctl, background)
+        rep.live_s = time.perf_counter() - t_live
+
+        # -- stop-the-world: residual pages + verbs state + user state ----
+        t_stop = time.perf_counter()
+        verbs_image = dumplib.dump_context(ctx, stop=True)       # [MIGR]
+        ctl.fabric.pump(ctl.stop_pump_steps)   # peers see NAK_STOPPED
+        residual_pages: Dict[int, Dict[int, bytes]] = {}
+        for mr, pg in residual:
+            residual_pages.setdefault(mr.mrn, {})[pg] = self._page(mr, pg)
+        for mr in mrs:
+            mr.stop_dirty_tracking()
+        user = container.checkpoint_user()
+        image = msgpack.packb({"verbs": verbs_image,
+                               "residual": residual_pages, "user": user},
+                              use_bin_type=True)
+        if runtime == "docker":
+            image = zlib.decompress(zlib.compress(image, level=1))
+        rep.image_bytes = len(image)
+        rep.checkpoint_s = time.perf_counter() - t_stop
+        if fail_at == "checkpoint":
+            rep.ok = False
+            rep.stage_failed = "checkpoint"
+            return rep
+
+        t1 = time.perf_counter()
+        rep.simulated_downtime_s = len(image) / ctl.bw
+        if runtime == "docker":
+            rep.simulated_downtime_s *= 2
+        rep.simulated_transfer_s = rep.simulated_downtime_s + \
+            sum(r["sim_s"] for r in rep.rounds)
+        moved = bytes(image)
+        rep.transfer_s = time.perf_counter() - t1
+        if fail_at == "transfer":
+            container.alive = False
+            rep.ok = False
+            rep.stage_failed = "transfer"
+            rep.attempt = {"image": moved, "staged": staged,
+                           "runtime": runtime}
+            return rep
+
+        t2 = time.perf_counter()
+        self._install(ctl, container, moved, staged, dest_node)
+        rep.restore_s = time.perf_counter() - t2
+        rep.downtime_s = rep.checkpoint_s + rep.transfer_s + rep.restore_s
+        return rep
+
+    def resume(self, ctl, container, dest_node, attempt, rep):
+        """Retry from the last completed round: every staged page already
+        'arrived'; only the residual image needs to move again."""
+        t1 = time.perf_counter()
+        image = attempt["image"]
+        sim = _sim_transfer_s(ctl, attempt)
+        rep.simulated_transfer_s += sim
+        rep.simulated_downtime_s += sim
+        rep.transfer_s += time.perf_counter() - t1
+        t2 = time.perf_counter()
+        self._install(ctl, container, image, attempt["staged"], dest_node)
+        rep.restore_s += time.perf_counter() - t2
+        container.alive = True
+        rep.ok = True
+        rep.stage_failed = None
+        rep.attempt = None
+        rep.downtime_s = rep.checkpoint_s + rep.transfer_s + rep.restore_s
+        return rep
+
+    def _install(self, ctl, container, image_bytes, staged, dest_node):
+        image = msgpack.unpackb(image_bytes, raw=False,
+                                strict_map_key=False)
+        ctl._teardown_source(container)
+        ctx = dest_node.device.open_context()
+        session = dumplib.restore_context(ctx, image["verbs"],
+                                          relocated=ctl.relocated)
+        for qp in ctx.qps:
+            ctl.relocated[qp.qpn] = dest_node.device.gid
+        for (mrn, pg), data in staged.items():
+            mr = session.mr_by_n[int(mrn)]
+            mr.buf[pg * PAGE_SIZE:pg * PAGE_SIZE + len(data)] = data
+        for mrn, pages in image["residual"].items():
+            mr = session.mr_by_n[int(mrn)]
+            for pg, data in pages.items():
+                off = int(pg) * PAGE_SIZE
+                mr.buf[off:off + len(data)] = data
+        container.adopt(dest_node, ctx, session)
+        container.restore_user(image["user"])
+
+
+# ---------------------------------------------------------------------------
+# post-copy
+# ---------------------------------------------------------------------------
+
+
+class DemandPager:
+    """Serves destination page faults from the source's frozen memory.
+
+    The source node keeps the checkpointed pages in RAM until the
+    destination has pulled them all (demand faults on access + optional
+    background ``prefetch``); once an MR is fully resident its pager hook
+    is detached, restoring the branch-free fast path."""
+
+    def __init__(self, bw_Bps: float, report: Optional[MigrationReport] = None):
+        self.bw = bw_Bps
+        self.report = report          # pages pulled count as pages_sent
+        self.source: Dict[int, bytes] = {}       # mrn -> frozen source buf
+        self.missing: Dict[int, set] = {}        # mrn -> absent page set
+        self.mrs: Dict[int, MemoryRegion] = {}   # mrn -> destination MR
+        self.faults = 0
+        self.fault_bytes = 0
+        self.simulated_pull_s = 0.0
+
+    def capture(self, mrs):
+        for mr in mrs:
+            self.source[mr.mrn] = bytes(mr.buf)
+            self.missing[mr.mrn] = set(range(mr.n_pages))
+
+    def attach(self, mr: MemoryRegion):
+        if self.missing.get(mr.mrn):
+            self.mrs[mr.mrn] = mr
+            mr.pager = self
+
+    def _fill(self, mr: MemoryRegion, pg: int, *, fault: bool):
+        lo = pg * PAGE_SIZE
+        data = self.source[mr.mrn][lo:lo + PAGE_SIZE]
+        mr.buf[lo:lo + len(data)] = data
+        self.missing[mr.mrn].discard(pg)
+        if fault:
+            self.faults += 1
+            self.fault_bytes += len(data)
+        if self.report is not None:
+            self.report.pages_sent += 1
+        self.simulated_pull_s += len(data) / self.bw
+        if not self.missing[mr.mrn]:
+            mr.pager = None                      # fully resident
+            self.mrs.pop(mr.mrn, None)
+
+    def ensure(self, mr: MemoryRegion, off: int, length: int):
+        """Demand fault: pull every absent page the access touches."""
+        if length <= 0:
+            return
+        miss = self.missing.get(mr.mrn)
+        if not miss:
+            mr.pager = None
+            return
+        for pg in range(off // PAGE_SIZE,
+                        (off + length - 1) // PAGE_SIZE + 1):
+            if pg in miss:
+                self._fill(mr, pg, fault=True)
+
+    def prefetch(self, n_pages: int = 1) -> int:
+        """Background pull of up to ``n_pages``; returns pages moved."""
+        moved = 0
+        for mrn in list(self.mrs):
+            mr = self.mrs.get(mrn)
+            while mr is not None and moved < n_pages \
+                    and self.missing.get(mrn):
+                self._fill(mr, min(self.missing[mrn]), fault=False)
+                moved += 1
+                mr = self.mrs.get(mrn)
+            if moved >= n_pages:
+                break
+        return moved
+
+    @property
+    def remaining_pages(self) -> int:
+        return sum(len(s) for s in self.missing.values())
+
+
+class PostCopy(MigrationStrategy):
+    name = "post_copy"
+
+    def run(self, ctl, container, dest_node, *, runtime="crx", fail_at=None,
+            background=None):
+        rep = MigrationReport(strategy=self.name)
+        if dest_node is container.node:
+            return rep
+        ctx = container.ctx
+        rep.pages_total = sum(mr.n_pages for mr in ctx.mrs)
+
+        # -- stop-the-world: verbs + user state only (no MR contents) -----
+        t0 = time.perf_counter()
+        verbs_image = dumplib.dump_context(ctx, stop=True)       # [MIGR]
+        ctl.fabric.pump(ctl.stop_pump_steps)   # peers see NAK_STOPPED
+        user = container.checkpoint_user()
+        image = msgpack.packb({"verbs": verbs_image, "user": user},
+                              use_bin_type=True)
+        if runtime == "docker":
+            image = zlib.decompress(zlib.compress(image, level=1))
+        rep.image_bytes = len(image)
+        rep.checkpoint_s = time.perf_counter() - t0
+        if fail_at == "checkpoint":
+            rep.ok = False
+            rep.stage_failed = "checkpoint"
+            return rep
+
+        # freeze source pages before any teardown can clear them
+        pager = DemandPager(ctl.bw, report=rep)
+        pager.capture(ctx.mrs)
+
+        t1 = time.perf_counter()
+        rep.simulated_downtime_s = len(image) / ctl.bw
+        if runtime == "docker":
+            rep.simulated_downtime_s *= 2
+        rep.simulated_transfer_s = rep.simulated_downtime_s
+        moved = bytes(image)
+        rep.transfer_s = time.perf_counter() - t1
+        if fail_at == "transfer":
+            container.alive = False
+            rep.ok = False
+            rep.stage_failed = "transfer"
+            rep.attempt = {"image": moved, "pager": pager,
+                           "runtime": runtime}
+            return rep
+
+        t2 = time.perf_counter()
+        self._install(ctl, container, moved, pager, dest_node)
+        rep.restore_s = time.perf_counter() - t2
+        rep.downtime_s = rep.total_s
+        rep.pager = pager
+        return rep
+
+    def resume(self, ctl, container, dest_node, attempt, rep):
+        t1 = time.perf_counter()
+        image = attempt["image"]
+        sim = _sim_transfer_s(ctl, attempt)
+        rep.simulated_transfer_s += sim
+        rep.simulated_downtime_s += sim
+        rep.transfer_s += time.perf_counter() - t1
+        t2 = time.perf_counter()
+        self._install(ctl, container, image, attempt["pager"], dest_node)
+        rep.restore_s += time.perf_counter() - t2
+        container.alive = True
+        rep.ok = True
+        rep.stage_failed = None
+        rep.attempt = None
+        rep.downtime_s = rep.total_s
+        rep.pager = attempt["pager"]
+        return rep
+
+    def _install(self, ctl, container, image_bytes, pager, dest_node):
+        image = msgpack.unpackb(image_bytes, raw=False,
+                                strict_map_key=False)
+        ctl._teardown_source(container)
+        ctx = dest_node.device.open_context()
+        session = dumplib.restore_context(ctx, image["verbs"],
+                                          relocated=ctl.relocated)
+        for qp in ctx.qps:
+            ctl.relocated[qp.qpn] = dest_node.device.gid
+        # MR buffers stay empty: every page is faulted in on first touch
+        for mr in session.mr_by_n.values():
+            pager.attach(mr)
+        container.adopt(dest_node, ctx, session)
+        container.restore_user(image["user"])
+
+
+# ---------------------------------------------------------------------------
+# registry / policy helpers
+# ---------------------------------------------------------------------------
+
+
+STRATEGIES = {
+    StopAndCopy.name: StopAndCopy,
+    PreCopy.name: PreCopy,
+    PostCopy.name: PostCopy,
+}
+
+
+def make_strategy(spec, **params) -> MigrationStrategy:
+    """Resolve a strategy name / class / instance to an instance."""
+    if isinstance(spec, MigrationStrategy):
+        return spec
+    if isinstance(spec, type) and issubclass(spec, MigrationStrategy):
+        return spec(**params)
+    try:
+        cls = STRATEGIES[spec]
+    except KeyError:
+        raise ValueError(f"unknown migration strategy {spec!r}; "
+                         f"have {sorted(STRATEGIES)}") from None
+    return cls(**params)
+
+
+def choose_migration_strategy(image_bytes: int, dirty_rate_Bps: float,
+                              bw_Bps: float,
+                              max_downtime_s: float) -> str:
+    """Link-bandwidth-budget strategy selection (used by the orchestrator's
+    ``strategy="auto"`` and by elastic re-mesh planning):
+
+    * whole image moves within the downtime budget -> stop-and-copy;
+    * dirty rate low enough for deltas to converge  -> pre-copy;
+    * otherwise post-copy (stop window bounded by the verbs image alone).
+    """
+    if bw_Bps <= 0:
+        return PostCopy.name
+    if image_bytes / bw_Bps <= max_downtime_s:
+        return StopAndCopy.name
+    if dirty_rate_Bps < 0.5 * bw_Bps:
+        return PreCopy.name
+    return PostCopy.name

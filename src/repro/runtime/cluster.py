@@ -17,12 +17,15 @@ from repro.core.migration import MigrationController
 from repro.core.namespace import GlobalNamespace
 from repro.core.transport import Fabric
 from repro.core.verbs import Context, RdmaDevice
+from repro.orchestrator import Orchestrator
 
 
 class Node:
-    def __init__(self, cluster: "SimCluster", gid: int):
+    def __init__(self, cluster: "SimCluster", gid: int,
+                 capacity: Optional[int] = None):
         self.cluster = cluster
         self.gid = gid
+        self.capacity = capacity        # max containers (None = unlimited)
         base = cluster.namespace.range_for(gid)
         self.device = RdmaDevice(cluster.fabric, gid, qpn_base=base)
         self.containers: List["Container"] = []
@@ -70,21 +73,43 @@ class Container:
 
 class SimCluster:
     def __init__(self, n_nodes: int, *, loss_prob: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, link_bandwidth_Bps: Optional[float] = None,
+                 node_capacity: Optional[int] = None):
         self.fabric = Fabric(loss_prob=loss_prob, seed=seed)
         self.namespace = GlobalNamespace()
-        self.nodes = [Node(self, gid) for gid in range(n_nodes)]
-        self.migrator = MigrationController(self.fabric)
+        self.nodes = [Node(self, gid, capacity=node_capacity)
+                      for gid in range(n_nodes)]
+        mig_kw = {} if link_bandwidth_Bps is None else \
+            {"link_bandwidth_Bps": link_bandwidth_Bps}
+        self.migrator = MigrationController(self.fabric, **mig_kw)
+        # control plane: shares the migrator's `relocated` registry, drives
+        # live strategies with step_all so apps keep running mid-migration
+        self.orchestrator = Orchestrator(self.migrator,
+                                         background=self.step_all)
         self.containers: Dict[str, Container] = {}
 
     def launch(self, name: str, node_idx: int, app=None) -> Container:
-        c = Container(name, self.nodes[node_idx], app)
+        node = self.nodes[node_idx]
+        if node.capacity is not None and \
+                len(node.containers) >= node.capacity:
+            raise ValueError(f"node {node.gid} at capacity "
+                             f"({node.capacity})")
+        c = Container(name, node, app)
         self.containers[name] = c
         return c
 
-    def migrate(self, name: str, dest_idx: int, **kw):
+    def migrate(self, name: str, dest_idx: int, *,
+                strategy: Optional[str] = None, **kw):
+        """Migrate a container. ``strategy=None`` keeps the seed
+        stop-and-copy fast path (bare controller, byte-identical);
+        naming a strategy ("stop_and_copy" / "pre_copy" / "post_copy" /
+        "auto") routes through the orchestrator: admission checks,
+        serialised queueing, retry, and rollback on failure."""
         c = self.containers[name]
-        return self.migrator.migrate(c, self.nodes[dest_idx], **kw)
+        dest = self.nodes[dest_idx]
+        if strategy is None:
+            return self.migrator.migrate(c, dest, **kw)
+        return self.orchestrator.migrate(c, dest, strategy=strategy, **kw)
 
     def pump(self, steps: int = 1):
         self.fabric.pump(steps)

@@ -30,3 +30,19 @@ def scaled_batch(global_batch: int, old_world: int, new_world: int) -> int:
     the optimizer's LR schedule is rescaled by the caller if desired)."""
     per = global_batch // old_world
     return per * new_world
+
+
+def plan_remesh_migrations(shard_bytes: int, moved_ranks, *,
+                           bw_Bps: float, max_downtime_s: float,
+                           dirty_rate_Bps: float = 0.0) -> Dict[int, str]:
+    """Per-rank migration strategy for an elastic re-mesh.
+
+    A rescale moves each displaced rank's container (params/opt shards in
+    its MRs) to a new node; the link-bandwidth budget decides per rank
+    whether plain stop-and-copy fits the downtime budget or whether the
+    move must be a live pre-copy/post-copy (see
+    ``repro.orchestrator.choose_migration_strategy``)."""
+    from repro.orchestrator.strategies import choose_migration_strategy
+    return {int(r): choose_migration_strategy(shard_bytes, dirty_rate_Bps,
+                                              bw_Bps, max_downtime_s)
+            for r in moved_ranks}

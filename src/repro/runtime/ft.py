@@ -15,6 +15,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+from repro.core.migration import MigrationError, MigrationReport
 from repro.core.states import QPState
 
 
@@ -112,3 +113,48 @@ class MigrationPolicy:
             else:
                 self._strikes[w] = 0
         return out
+
+
+class StragglerMigrator:
+    """Closes the loop from policy to orchestrator: each straggler the
+    ``MigrationPolicy`` flags is live-migrated (pre-copy by default, so
+    the rank keeps computing through the copy) to the least-loaded node
+    that passes admission. Rejected/failed requests are skipped — the
+    orchestrator has already rolled the container back."""
+
+    def __init__(self, cluster, policy: MigrationPolicy, *,
+                 strategy: str = "pre_copy",
+                 name_of: Callable[[int], str] = lambda w: f"rank{w}"):
+        self.cluster = cluster
+        self.policy = policy
+        self.strategy = strategy
+        self.name_of = name_of
+        self.migrated: List[tuple] = []    # (worker, dest_gid)
+
+    def _dest_for(self, container):
+        candidates = [n for n in self.cluster.nodes
+                      if n is not container.node
+                      and (n.capacity is None
+                           or len(n.containers) < n.capacity)]
+        if not candidates:
+            return None
+        return min(candidates, key=lambda n: (len(n.containers), n.gid))
+
+    def check(self) -> List[MigrationReport]:
+        reports = []
+        for w in self.policy.stragglers():
+            c = self.cluster.containers.get(self.name_of(w))
+            if c is None or not c.alive:
+                continue
+            dest = self._dest_for(c)
+            if dest is None:
+                continue
+            try:
+                rep = self.cluster.orchestrator.migrate(
+                    c, dest, strategy=self.strategy)
+            except MigrationError:
+                continue
+            reports.append(rep)
+            if rep.ok:
+                self.migrated.append((w, dest.gid))
+        return reports

@@ -1,0 +1,425 @@
+"""Orchestrator + live-migration engine tests: pre-copy convergence and
+round-cap fallback, post-copy demand faulting, admission, queueing,
+retry-after-failed-transfer, and rollback (no leaked stopped QPs)."""
+import pytest
+
+from repro.core.states import QPState
+from repro.core.verbs import (PAGE_SIZE, CompletionQueue, CQOverrunError,
+                              WCStatus, WorkCompletion)
+from repro.orchestrator import (AdmissionError, DemandPager, PreCopy,
+                                choose_migration_strategy)
+from repro.runtime.cluster import SimCluster
+from tests.helpers import make_channel_pair, make_sendbw_pair
+
+
+def _run(cl, n):
+    for _ in range(n):
+        cl.step_all()
+
+
+def _qp(app):
+    ch = app.channels[0]
+    return ch.h.qp(ch.qpn)
+
+
+# ---------------------------------------------------------------------------
+# pre-copy
+# ---------------------------------------------------------------------------
+
+
+def test_precopy_converges_on_quiet_container():
+    """No writes during the live phase -> the very first delta round sees
+    zero dirty bytes and the residual is empty."""
+    cl = SimCluster(3)
+    c1, c2, ca, cb = make_channel_pair(cl)
+    cl.run_until_idle()
+    rep = cl.migrate("b", 2, strategy="pre_copy")
+    assert rep.ok
+    assert len(rep.rounds) == 1            # round 0 only: converged at once
+    assert rep.pages_sent == rep.pages_total
+    assert rep.simulated_downtime_s < rep.rounds[0]["sim_s"]
+    c2.h.ctx = cb.ctx      # appless container: rebind handles by hand
+    # the channel still works end to end after the move
+    c2.post_recv(512)
+    c1.post_send_bytes(b"q" * 512)
+    cl.run_until_idle()
+    assert c2.recv_bytes(0, 512) == b"q" * 512
+
+
+def test_precopy_write_active_keeps_running_and_bounds_downtime():
+    """A write-active receiver migrates with traffic flowing: rounds
+    re-send only dirtied pages and the stop window moves far less than the
+    full footprint."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    received_before = ab.received
+    rep = cl.migrate("recv", 2, strategy="pre_copy")
+    assert rep.ok
+    # messages kept flowing during the live phase (the whole point)
+    assert ab.received > received_before
+    assert rep.pages_sent >= rep.pages_total
+    # residual (stop-window) bytes are a strict subset of the footprint
+    full_bytes = rep.pages_total * PAGE_SIZE
+    assert rep.simulated_downtime_s * cl.migrator.bw < full_bytes
+    _run(cl, 400)
+    assert ab.channels[0].h.ctx.device.gid == 2
+    assert ab.received > received_before + 100
+
+
+def test_precopy_round_cap_falls_back_to_stop_and_copy():
+    """threshold=-1 can never converge; the engine must cut over after
+    exactly max_rounds and finish with a stop-and-copy of the residual."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    rep = cl.migrate("recv", 2, strategy="pre_copy",
+                     strategy_params={"threshold_bytes": -1,
+                                      "max_rounds": 4})
+    assert rep.ok
+    assert len(rep.rounds) == 4            # round 0 + 3 delta rounds
+    before = ab.received
+    _run(cl, 400)
+    assert ab.received > before
+
+
+def test_precopy_transparent_for_trainer():
+    """Loss trajectory is bitwise identical under a pre-copy migration."""
+    from repro.runtime.trainer import FabricTrainer
+    ref = FabricTrainer(2, seed=3)
+    l_ref = ref.train(6)
+    mig = FabricTrainer(2, seed=3)
+    l_mig = [mig.step() for _ in range(3)]
+    rep = mig.cluster.migrate("rank1", len(mig.cluster.nodes) - 1,
+                              strategy="pre_copy")
+    assert rep.ok
+    l_mig += [mig.step() for _ in range(3)]
+    assert l_mig == l_ref
+
+
+# ---------------------------------------------------------------------------
+# post-copy
+# ---------------------------------------------------------------------------
+
+
+def test_postcopy_demand_faults_pages_on_access():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    # plant a pattern the destination can only get by faulting it in
+    mr = ab.channels[0].h.mr(ab.channels[0].mrn_send)
+    mr.write(0, b"\xabPOSTCOPY" * 16)
+    rep = cl.migrate("recv", 2, strategy="post_copy")
+    assert rep.ok and rep.pager is not None
+    assert rep.pager.remaining_pages > 0   # pages NOT moved in stop window
+    faults0 = rep.pager.faults
+    # demand fault via a read through the restored handle table
+    got = ab.channels[0].h.mr(ab.channels[0].mrn_send).read(0, 144)
+    assert got == b"\xabPOSTCOPY" * 16
+    assert rep.pager.faults > faults0
+    # resumed traffic faults the recv MR in as packets land
+    before = ab.received
+    _run(cl, 400)
+    assert ab.received > before
+
+
+def test_postcopy_stop_window_excludes_memory():
+    """The post-copy image is verbs+user state only — orders of magnitude
+    smaller than the stop-and-copy image for the same container."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    full = cl.migrate("recv", 2)           # seed stop-and-copy
+    cl2 = SimCluster(3)
+    aa2, ab2 = make_sendbw_pair(cl2)
+    _run(cl2, 50)
+    post = cl2.migrate("recv", 2, strategy="post_copy")
+    assert post.image_bytes < full.image_bytes / 4
+
+
+def test_postcopy_prefetch_drains_and_detaches_pager():
+    cl = SimCluster(3)
+    c1, c2, ca, cb = make_channel_pair(cl, size=8 * PAGE_SIZE)
+    cl.run_until_idle()
+    rep = cl.migrate("b", 2, strategy="post_copy")
+    pager = rep.pager
+    assert pager.remaining_pages > 0
+    while pager.remaining_pages:
+        assert pager.prefetch(4) > 0
+    # fully resident: the fast-path hook is gone from every MR
+    assert all(m.pager is None for m in cb.ctx.mrs)
+    c2.h.ctx = cb.ctx      # appless container: rebind handles by hand
+    c2.post_recv(256)
+    c1.post_send_bytes(b"z" * 256)
+    cl.run_until_idle()
+    assert c2.recv_bytes(0, 256) == b"z" * 256
+
+
+# ---------------------------------------------------------------------------
+# orchestrator: admission, queueing, retry, rollback
+# ---------------------------------------------------------------------------
+
+
+def test_admission_rejects_full_node():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    cl.nodes[2].capacity = 0
+    _run(cl, 20)
+    with pytest.raises(AdmissionError, match="capacity"):
+        cl.migrate("recv", 2, strategy="stop_and_copy")
+    # nothing was stopped: traffic unaffected
+    before = ab.received
+    _run(cl, 100)
+    assert ab.received > before
+
+
+def test_admission_rejects_qpn_collision():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 20)
+    qpn = ab.channels[0].qpn
+    # occupy the migrating QPN on the destination device
+    dev = cl.nodes[2].device
+    ctx = dev.open_context()
+    pd = ctx.alloc_pd()
+    cq = ctx.create_cq()
+    dev.last_qpn = qpn - 1
+    pd.create_qp(cq, cq)
+    with pytest.raises(AdmissionError, match="QPN"):
+        cl.migrate("recv", 2, strategy="stop_and_copy")
+
+
+def test_admission_rejects_over_bandwidth_budget():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 20)
+    cl.orchestrator.max_transfer_s = 1e-12
+    with pytest.raises(AdmissionError, match="budget"):
+        cl.migrate("recv", 2, strategy="stop_and_copy")
+
+
+def test_queue_serialises_concurrent_requests():
+    cl = SimCluster(4)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    orch = cl.orchestrator
+    orch.submit(cl.containers["send"], cl.nodes[2], strategy="pre_copy")
+    orch.submit(cl.containers["recv"], cl.nodes[3], strategy="pre_copy")
+    reports = orch.drain()
+    assert len(reports) == 2 and all(r.ok for r in reports)
+    before = ab.received
+    _run(cl, 1500)
+    assert ab.received > before
+    assert aa.channels[0].h.ctx.device.gid == 2
+    assert ab.channels[0].h.ctx.device.gid == 3
+
+
+def test_rejected_request_does_not_abort_queue():
+    """An admission failure for one queued request yields a failed report
+    and the remaining requests still execute."""
+    cl = SimCluster(4)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    cl.nodes[3].capacity = 0
+    orch = cl.orchestrator
+    orch.submit(cl.containers["send"], cl.nodes[3])   # will be rejected
+    orch.submit(cl.containers["recv"], cl.nodes[2], strategy="pre_copy")
+    reports = orch.drain()
+    assert len(reports) == 2
+    assert not reports[0].ok and reports[0].stage_failed == "admission"
+    assert reports[1].ok
+    assert ab.channels[0].h.ctx.device.gid == 2
+    assert aa.channels[0].h.ctx.device.gid == 0      # never moved
+
+
+def test_launch_respects_node_capacity():
+    cl = SimCluster(2, node_capacity=1)
+    cl.launch("a", 0)
+    with pytest.raises(ValueError, match="capacity"):
+        cl.launch("b", 0)
+    cl.launch("b", 1)      # other node still has room
+
+
+def test_retry_after_transfer_failure_resumes_peers():
+    """fail_at='transfer' under the orchestrator: the transfer is retried
+    from the captured image, the container lands on the destination, and
+    the paused peer resumes instead of hanging on NAK_STOPPED."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    rep = cl.migrate("recv", 2, strategy="stop_and_copy",
+                     fail_at="transfer", retries=1)
+    assert rep.ok and rep.retries == 1 and not rep.rolled_back
+    assert cl.containers["recv"].alive
+    _run(cl, 600)
+    assert _qp(aa).state == QPState.RTS        # peer resumed
+    assert _qp(aa).dest_gid == 2               # re-addressed
+    before = ab.received
+    _run(cl, 200)
+    assert ab.received > before
+    # no stopped QPs leaked on the source device
+    src_dev = cl.nodes[1].device
+    assert not [q for q in src_dev.qps.values()
+                if q.state == QPState.STOPPED]
+
+
+def test_rollback_after_checkpoint_failure():
+    """fail_at='checkpoint' cannot be retried (no image): the orchestrator
+    rolls back — source QPs leave STOPPED in place and peers resume."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    rep = cl.migrate("recv", 2, strategy="stop_and_copy",
+                     fail_at="checkpoint")
+    assert not rep.ok and rep.rolled_back
+    assert cl.containers["recv"].alive
+    _run(cl, 600)
+    assert _qp(aa).state == QPState.RTS
+    assert _qp(ab).state == QPState.RTS
+    assert ab.channels[0].h.ctx.device.gid == 1   # never moved
+    before = ab.received
+    _run(cl, 200)
+    assert ab.received > before                   # traffic recovered
+
+
+def test_rollback_when_retries_exhausted():
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    rep = cl.migrate("recv", 2, strategy="pre_copy",
+                     fail_at="transfer", retries=0)
+    assert not rep.ok and rep.rolled_back
+    _run(cl, 600)
+    assert _qp(aa).state == QPState.RTS
+    assert not [q for q in cl.containers["recv"].ctx.qps
+                if q.state == QPState.STOPPED]
+    before = ab.received
+    _run(cl, 200)
+    assert ab.received > before
+
+
+def test_stop_and_copy_strategy_matches_seed_controller():
+    """Byte-identical: same deterministic cluster, same image, same
+    delivered message count afterwards."""
+    def scenario(strategy):
+        cl = SimCluster(3)
+        aa, ab = make_sendbw_pair(cl)
+        _run(cl, 50)
+        kw = {} if strategy is None else {"strategy": strategy}
+        rep = cl.migrate("recv", 2, **kw)
+        _run(cl, 400)
+        return rep.image_bytes, ab.received, ab.sent
+
+    assert scenario(None) == scenario("stop_and_copy")
+
+
+# ---------------------------------------------------------------------------
+# policy wiring + substrate fixes
+# ---------------------------------------------------------------------------
+
+
+def test_choose_migration_strategy_budgets():
+    bw = 1e9
+    # fits the downtime budget -> stop-and-copy
+    assert choose_migration_strategy(1000, 0.0, bw, 1.0) == "stop_and_copy"
+    # too big, low dirty rate -> pre-copy converges
+    assert choose_migration_strategy(10 ** 10, 1e6, bw, 1e-3) == "pre_copy"
+    # too big, dirty rate near link speed -> post-copy
+    assert choose_migration_strategy(10 ** 10, 9e8, bw, 1e-3) == "post_copy"
+
+
+def test_straggler_migrator_moves_slow_rank():
+    from repro.runtime.ft import (FailureDetector, MigrationPolicy,
+                                  StragglerMigrator)
+    cl = SimCluster(4)
+    aa, ab = make_sendbw_pair(cl)   # "send" on node 0, "recv" on node 1
+    _run(cl, 50)
+    det = FailureDetector()
+    pol = MigrationPolicy(det, factor=1.5, patience=1)
+    # worker 0 = "send", worker 1 = "recv"; make recv the straggler
+    for w, t in ((0, 0.01), (1, 0.2), (2, 0.011)):
+        for _ in range(4):
+            det.heartbeat(w, step_time=t, now=0.0)
+    names = {0: "send", 1: "recv", 2: "nope"}
+    sm = StragglerMigrator(cl, pol, strategy="pre_copy",
+                           name_of=lambda w: names[w])
+    reports = sm.check()
+    assert len(reports) == 1 and reports[0].ok
+    assert sm.migrated and sm.migrated[0][0] == 1
+    # moved off node 1 to the least-loaded node
+    assert ab.channels[0].h.ctx.device.gid not in (1,)
+    before = ab.received
+    _run(cl, 600)
+    assert ab.received > before
+
+
+def test_cq_overrun_surfaces_instead_of_dropping():
+    cq = CompletionQueue(cqn=1, depth=2)
+    wc = lambda i: WorkCompletion(i, WCStatus.SUCCESS, "SEND", 0, 0)
+    cq.push(wc(1))
+    cq.push(wc(2))
+    with pytest.raises(CQOverrunError):
+        cq.push(wc(3))
+    assert cq.overruns == 1
+    # previously acknowledged completions are still intact, in order
+    assert [w.wr_id for w in cq.poll(4)] == [1, 2]
+
+
+def test_rkey_index_tracks_register_destroy_and_rekey():
+    cl = SimCluster(2)
+    dev = cl.nodes[0].device
+    ctx = dev.open_context()
+    pd = ctx.alloc_pd()
+    mr = pd.reg_mr(PAGE_SIZE)
+    assert dev.rkey_lookup(mr.rkey) is mr
+    old_rkey = mr.rkey
+    dev.set_mr_keys(mr, 111, 222)
+    assert dev.rkey_lookup(old_rkey) is None
+    assert dev.rkey_lookup(222) is mr
+    dev.dereg_mr(mr)
+    assert dev.rkey_lookup(222) is None
+    assert mr not in ctx.mrs
+
+
+def test_rkey_index_coherent_across_migration():
+    """After a migration the stale source rkeys must miss and the restored
+    (identical) rkeys must hit on the destination device."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    ch = ab.channels[0]
+    rkey = ch.h.mr(ch.mrn_recv).rkey
+    cl.migrate("recv", 2)
+    _run(cl, 200)
+    assert cl.nodes[1].device.rkey_lookup(rkey) is None     # source: gone
+    dst_mr = cl.nodes[2].device.rkey_lookup(rkey)           # dest: present
+    assert dst_mr is not None and dst_mr.mrn == ch.mrn_recv
+
+
+def test_fig_downtime_precopy_beats_stop_and_copy_total():
+    """Acceptance bar for the benchmark: under a write-active workload,
+    pre-copy (and post-copy) downtime < stop-and-copy total."""
+    from benchmarks.fig_downtime import run_strategy
+    _, _, sc_total, _ = run_strategy("stop_and_copy")
+    _, pre_down, _, _ = run_strategy("pre_copy")
+    _, post_down, _, _ = run_strategy("post_copy")
+    assert pre_down < sc_total
+    assert post_down < sc_total
+
+
+def test_dirty_tracking_is_page_granular_and_cheap_when_off():
+    cl = SimCluster(2)
+    dev = cl.nodes[0].device
+    ctx = dev.open_context()
+    mr = ctx.alloc_pd().reg_mr(4 * PAGE_SIZE)
+    mr.write(0, b"x")                       # tracking off: nothing recorded
+    assert mr.collect_dirty() == set()
+    mr.start_dirty_tracking()
+    mr.write(10, b"y" * 10)                 # page 0
+    mr.write(PAGE_SIZE - 1, b"zz")          # straddles pages 0-1
+    mr.write(3 * PAGE_SIZE, b"w")           # page 3
+    assert mr.collect_dirty() == {0, 1, 3}
+    assert mr.collect_dirty() == set()      # collect cleared the bitmap
+    mr.stop_dirty_tracking()
+    mr.write(2 * PAGE_SIZE, b"q")
+    assert mr.collect_dirty() == set()

@@ -10,7 +10,10 @@ from repro.sharding import partition as part
 
 
 def _abstract_mesh(shape, axes):
-    return jax.sharding.AbstractMesh(shape, axes)
+    try:   # newer jax: AbstractMesh(axis_sizes, axis_names)
+        return jax.sharding.AbstractMesh(shape, axes)
+    except TypeError:   # older jax: AbstractMesh(((name, size), ...))
+        return jax.sharding.AbstractMesh(tuple(zip(axes, shape)))
 
 
 def test_resolver_basic_rules():

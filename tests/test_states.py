@@ -33,11 +33,18 @@ def test_system_migration_transitions():
     check_transition(QPState.RTS, QPState.PAUSED, system=True)
     check_transition(QPState.PAUSED, QPState.RTS, system=True)
     check_transition(QPState.STOPPED, QPState.RESET, system=True)
+    # orchestrator rollback: an aborted migration re-arms the
+    # still-attached source QPs in place
+    check_transition(QPState.STOPPED, QPState.RTS, system=True)
 
 
-def test_stopped_is_terminal_except_destroy():
+def test_stopped_exits_only_via_system():
+    """Stopped can only be left by the OS (rollback or destroy), never by
+    the user application (paper §3.3: invisible states)."""
     with pytest.raises(InvalidTransition):
-        check_transition(QPState.STOPPED, QPState.RTS, system=True)
+        check_transition(QPState.STOPPED, QPState.RTS, system=False)
+    with pytest.raises(InvalidTransition):
+        check_transition(QPState.STOPPED, QPState.PAUSED, system=True)
 
 
 def test_send_recv_gates():
