@@ -18,10 +18,11 @@ def _requester_stripped(qp):
     now = qp.device.fabric.now
     if not can_send(qp.state):
         return
-    if qp.inflight and now - qp.last_progress > qp.RETRANS_TIMEOUT:
+    if qp.inflight and now - qp.last_progress > qp.rto:
         for pkt in qp.inflight:
             T._retx(qp, pkt)
         qp.last_progress = now
+        qp.rto = min(qp.rto * 2, qp.RETRANS_TIMEOUT * 64)
         return
     budget = qp.WINDOW - len(qp.inflight)
     while budget > 0:

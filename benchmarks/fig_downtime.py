@@ -7,10 +7,13 @@ stop-the-world window; pre-copy moves the footprint while the app keeps
 running and stops only for the residual dirty set + verbs state; post-copy
 stops only for the verbs image and faults pages in afterwards.
 
-Columns: downtime (wall stop-window + simulated stopped-bytes/bw) vs total
-(downtime + live-phase copy time). The assertion at the bottom is the
-acceptance bar: pre-copy downtime strictly below stop-and-copy's total.
+Columns: downtime vs total, both read off the fabric sim clock — the
+stop window and every byte of checkpoint/page traffic is measured as it
+streams over the bandwidth-limited links (deterministic across runs).
+The assertion at the bottom is the acceptance bar: pre-copy downtime
+strictly below stop-and-copy's total.
 """
+from repro.core.transport import STEP_S
 from repro.runtime.apps import SendBwApp
 from repro.runtime.cluster import SimCluster
 from repro.runtime.collectives import connect_pair
@@ -42,12 +45,14 @@ def run_strategy(strategy):
         cl.step_all()
     post_pull_s = 0.0
     if rep.pager is not None:              # drain post-copy in background
+        t0 = cl.fabric.now
         while rep.pager.remaining_pages:
-            rep.pager.prefetch(64)
-        post_pull_s = rep.pager.simulated_pull_s
-    downtime = rep.downtime_s + rep.simulated_downtime_s
-    total = (rep.downtime_s + rep.live_s + rep.simulated_transfer_s
-             + post_pull_s)
+            rep.pager.prefetch(16)
+            cl.fabric.pump()               # pulls serialise on the wire
+        cl.run_until_idle(max_steps=500_000)
+        post_pull_s = (cl.fabric.now - t0) * STEP_S
+    downtime = rep.downtime_s              # sim clock, stop window only
+    total = rep.downtime_s + rep.live_s + post_pull_s
     return rep, downtime, total, ab
 
 

@@ -4,15 +4,22 @@ stop QPs → dump (verbs + MR memory + user state) → transfer → restore at
 destination (CREATE / key restore / state walk / REFILL) → resume messages
 re-address partners → communication continues via normal go-back-N.
 
+The checkpoint image is real traffic: it streams over the device service
+channel (kernel QPs) as ``MIG_STATE`` messages, crossing the same
+bandwidth-limited links as application SEND/WRITE traffic — so transfer
+and downtime figures are read off the fabric sim clock
+(``fabric.now * STEP_S``), never estimated from ``len(image)/bw``
+arithmetic or wall-clock timers.
+
 Two runtime modes reproduce the paper's comparison:
   * "crx"    — image streamed to the destination during checkpoint, held in
                RAM (the paper's CR-X runtime; fast path).
   * "docker" — checkpoint staged to 'local storage' first, then moved,
-               then restored (no overlap; reproduces Fig. 12's gap).
+               then restored (no overlap; reproduces Fig. 12's gap). The
+               image crosses the wire twice: once into storage, once out.
 """
 from __future__ import annotations
 
-import time
 import zlib
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -20,7 +27,10 @@ from typing import Dict, List, Optional
 import msgpack
 
 from repro.core import dump as dumplib
+from repro.core.packets import Op
+from repro.core.service import ServiceError
 from repro.core.states import QPState
+from repro.core.transport import STEP_S
 
 
 @dataclass
@@ -33,9 +43,9 @@ class MigrationReport:
     ok: bool = True
     # -- live-migration engine extensions ----------------------------- [MIGR]
     strategy: str = "stop_and_copy"
-    downtime_s: float = 0.0            # wall time QPs were actually stopped
-    simulated_downtime_s: float = 0.0  # bytes moved while stopped / link bw
-    live_s: float = 0.0                # pre-copy wall time spent still running
+    downtime_s: float = 0.0            # sim time QPs were actually stopped
+    simulated_downtime_s: float = 0.0  # analytic: stopped-bytes / link bw
+    live_s: float = 0.0                # pre-copy sim time spent still running
     rounds: List[Dict] = field(default_factory=list)   # per pre-copy round
     pages_total: int = 0
     pages_sent: int = 0                # includes re-sent dirty pages
@@ -60,14 +70,40 @@ class MigrationError(RuntimeError):
 class MigrationController:
     """Migrates a container between nodes over the fabric."""
 
-    def __init__(self, fabric, *, link_bandwidth_Bps: float = 40e9 / 8,
+    def __init__(self, fabric, *, link_bandwidth_Bps: Optional[float] = None,
                  stop_pump_steps: int = 50):
         self.fabric = fabric
-        self.bw = link_bandwidth_Bps
+        if link_bandwidth_Bps is not None:
+            # single source of truth: the fabric's link model
+            fabric.set_bandwidth(link_bandwidth_Bps)
         self.stop_pump_steps = stop_pump_steps
         # control-plane registry: cluster-unique QPN -> current gid.
         # Lets simultaneous migrations re-address each other.     # [MIGR]
         self.relocated = {}
+        # data-plane cleanup tokens, registered by strategies as soon as
+        # they park state in a service channel (staged pre-copy pages at
+        # the destination, the post-copy frozen store at the source).
+        # A failed attempt — including one that died by exception before
+        # it could build a retry token — releases them via run_cleanups;
+        # a successful one discards them via clear_cleanups. Strategies
+        # also drain stale tokens at run() entry, so a later successful
+        # attempt never silently discards a dead attempt's pending
+        # cleanup.
+        self._cleanups: Dict[object, List] = {}
+
+    def register_cleanup(self, container, fn):
+        self._cleanups.setdefault(container, []).append(fn)
+
+    def clear_cleanups(self, container):
+        self._cleanups.pop(container, None)
+
+    def run_cleanups(self, container):
+        for fn in self._cleanups.pop(container, []):
+            fn()
+
+    @property
+    def bw(self) -> float:
+        return self.fabric.bandwidth
 
     # -- image ------------------------------------------------------------------
     def _checkpoint(self, container) -> bytes:
@@ -91,40 +127,63 @@ class MigrationController:
         container.adopt(dest_node, ctx, session)
         container.restore_user(image["user"])
 
+    # -- data plane -------------------------------------------------------------
+    def stream_image(self, src_dev, dest_gid: int, image: bytes, *,
+                     runtime: str = "crx") -> bytes:
+        """Move a checkpoint image over the service channel and return the
+        bytes that actually arrived at the destination. The call pumps the
+        bare fabric until delivery, so the elapsed sim steps ARE the
+        transfer time, contention and retransmissions included; QPs of
+        every node keep draining, but applications are not stepped (the
+        stop window freezes app progress, as in the seed flow — external
+        drivers see only the fabric advance). The docker runtime crosses
+        the wire twice (into 'storage', then out)."""
+        svc = src_dev.service
+        dest_svc = self.fabric.device(dest_gid).service
+        delivered = bytes(image)
+        for _hop in range(2 if runtime == "docker" else 1):
+            xid = svc.transfer(dest_gid, Op.MIG_STATE, {"kind": "image"},
+                               delivered)
+            delivered = dest_svc.take_image(xid)
+        if delivered != image:
+            raise MigrationError("image corrupted in transit")
+        return delivered
+
     # -- flow -------------------------------------------------------------------
     def migrate(self, container, dest_node, *, runtime: str = "crx",
                 fail_at: Optional[str] = None) -> MigrationReport:
-        rep = MigrationReport()
         src_node = container.node
         if dest_node is src_node:
-            return rep
+            # explicit no-op: nothing was dumped, moved, or restored
+            return MigrationReport(strategy="noop")
+        rep = MigrationReport()
 
-        t0 = time.perf_counter()
+        fab = self.fabric
+        t0 = fab.now
         rep.pages_total = sum(m.n_pages for m in container.ctx.mrs)
-        rep.pages_sent = rep.pages_total   # every page moves while stopped
+        src_dev = container.ctx.device
         image = self._checkpoint(container)
         # QPs are now STOPPED but still attached: while the image is being
         # written/moved, partner packets hit them and draw NAK_STOPPED
         # (this is where peers transition to PAUSED).             # [MIGR]
-        self.fabric.pump(self.stop_pump_steps)
+        fab.pump(self.stop_pump_steps)
         if runtime == "docker":
             # stage to local storage: extra serialise+copy round trip
             staged = zlib.compress(image, level=1)
             image = zlib.decompress(staged)
         rep.image_bytes = len(image)
-        rep.checkpoint_s = time.perf_counter() - t0
+        rep.checkpoint_s = (fab.now - t0) * STEP_S
         if fail_at == "checkpoint":
             rep.ok = False
             rep.stage_failed = "checkpoint"                      # [MIGR]
             return rep
 
-        t1 = time.perf_counter()
-        # the image moves over the same links the benchmark traffic uses
+        t1 = fab.now
+        # analytic figure kept for comparisons; the *measured* cost is the
+        # sim-clock delta around the stream below
         rep.simulated_transfer_s = len(image) / self.bw
         if runtime == "docker":
             rep.simulated_transfer_s *= 2  # via storage, no streaming
-        moved = bytes(image)               # actual byte movement
-        rep.transfer_s = time.perf_counter() - t1
         if fail_at == "transfer":
             # Failed migration: the stopped source QPs are NOT destroyed —
             # they keep answering NAK_STOPPED, so peers pause and stay
@@ -134,13 +193,31 @@ class MigrationController:
             rep.ok = False
             rep.stage_failed = "transfer"                        # [MIGR]
             # the image is complete; an orchestrator may retry the move
-            rep.attempt = {"image": moved, "runtime": runtime}   # [MIGR]
+            rep.attempt = {"image": bytes(image),                # [MIGR]
+                           "runtime": runtime}
             return rep
+        try:
+            moved = self.stream_image(src_dev, dest_node.device.gid, image,
+                                      runtime=runtime)
+        except (MigrationError, ServiceError) as e:
+            # a real wire failure (stream timeout, corruption) lands in
+            # the same state as fail_at="transfer": source QPs STOPPED,
+            # peers paused, the complete image held as a retry token —
+            # reported, not raised, so callers aren't left mid-migration
+            container.alive = False
+            rep.ok = False
+            rep.stage_failed = "transfer"
+            rep.transfer_error = e
+            rep.attempt = {"image": bytes(image), "runtime": runtime}
+            rep.transfer_s = (fab.now - t1) * STEP_S
+            return rep
+        rep.transfer_s = (fab.now - t1) * STEP_S
+        rep.pages_sent = rep.pages_total   # every page moved while stopped
 
-        t2 = time.perf_counter()
+        t2 = fab.now
         self._teardown_source(container)
         self._restore(container, moved, dest_node)
-        rep.restore_s = time.perf_counter() - t2
+        rep.restore_s = (fab.now - t2) * STEP_S
         # stop-and-copy: the whole flow is one stop-the-world window
         rep.downtime_s = rep.total_s                             # [MIGR]
         rep.simulated_downtime_s = rep.simulated_transfer_s      # [MIGR]

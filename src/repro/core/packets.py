@@ -23,6 +23,17 @@ class Op(enum.Enum):
     NAK = "NAK"
     RESUME = "RESUME"                # [MIGR]
     RESUME_ACK = "RESUME_ACK"        # [MIGR]
+    # service-channel (kernel QP) data plane: checkpoint images, pre-copy
+    # page rounds, and post-copy demand pulls are streamed as ordinary
+    # PSN-sequenced traffic and contend with app SEND/WRITE for links.
+    MIG_PAGE = "MIG_PAGE"            # [MIGR] page batch (pre/post-copy)
+    MIG_STATE = "MIG_STATE"          # [MIGR] checkpoint image chunk
+    MIG_ACK = "MIG_ACK"              # [MIGR] stream-level receipt
+
+
+# ops carried by the migration data plane (service channel); the fabric
+# accounts these separately so migration bandwidth use is observable
+MIG_OPS = frozenset({Op.MIG_PAGE, Op.MIG_STATE, Op.MIG_ACK})
 
 
 class NakCode(enum.Enum):

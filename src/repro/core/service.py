@@ -1,0 +1,211 @@
+"""Device-owned migration service channel (kernel QPs, paper §4.2).
+
+SoftRoCE keeps kernel-owned QPs alongside user QPs; MigrOS rides them for
+its control messages. This module gives every ``RdmaDevice`` the same
+thing for the migration *data* plane: one kernel QP per peer node,
+invisible to container contexts (never dumped, never migrated), through
+which checkpoint images (``MIG_STATE``), pre-copy page rounds and
+post-copy pulls (``MIG_PAGE``) are streamed as ordinary PSN-sequenced
+traffic. The packets reuse the requester/responder/completer go-back-N
+machinery verbatim — loss on a migration stream is retransmitted exactly
+like loss on application traffic, and both contend for the same
+per-(src,dest) link bandwidth in the fabric.
+
+Each logical message is one WQE (chunked over the MTU by the requester,
+reassembled by first/last framing on the receive side); the receiver
+answers with a stream-level ``MIG_ACK`` receipt carrying the message's
+``xid`` so a sender can pump the fabric until the bytes have really
+crossed the wire.
+"""
+from __future__ import annotations
+
+import msgpack
+from collections import deque
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.packets import Op
+from repro.core.states import QPState
+from repro.core.verbs import Context, MemoryRegion, QueuePair, SGE, SendWR
+
+
+class ServiceError(RuntimeError):
+    pass
+
+
+class ServiceChannel:
+    """Kernel-owned migration endpoint of one device."""
+
+    def __init__(self, device):
+        self.device = device
+        # kernel context: holds the service PD/CQ/QPs/MRs but is NOT
+        # registered in device.contexts, so dump_context never sees it and
+        # admission's per-container scans skip it.
+        self.ctx = Context(device, ctx_id=-1)
+        self.pd = self.ctx.alloc_pd()
+        self.cq = self.ctx.create_cq(depth=1 << 16)
+        self._peers: Dict[int, QueuePair] = {}     # peer gid -> kernel QP
+        self._wr = 0
+        self._xid = 0
+        self._stream = 0
+        self._tx_mrs: Dict[int, Tuple[int, MemoryRegion]] = {}
+        #   ^ wr_id -> (peer_gid, scratch MR), held until send completes
+        # receive side
+        self.acked: set = set()                    # xids receipt-acked
+        self.images: Dict[int, bytes] = {}         # xid -> MIG_STATE blob
+        self.staging: Dict[int, Dict[Tuple[int, int], bytes]] = {}
+        #   ^ stream -> {(mrn, page): bytes}: pre-copy pages that arrived
+        self.page_store: Dict[int, Dict[int, bytes]] = {}
+        #   ^ stream -> {mrn: frozen buf}: post-copy source-side store
+
+    # -- identifiers ---------------------------------------------------------
+    def next_xid(self) -> int:
+        self._xid += 1
+        return self.device.gid * 1_000_000_000 + self._xid
+
+    def next_stream(self) -> int:
+        self._stream += 1
+        return self.device.gid * 1_000_000_000 + self._stream
+
+    # -- kernel QP rendezvous ------------------------------------------------
+    def qp_for(self, peer_gid: int) -> QueuePair:
+        """Kernel QP toward ``peer_gid``; first use performs the two-sided
+        rendezvous (both devices create and connect their kernel QPs —
+        the out-of-band exchange ordinary channels do 'over TCP')."""
+        qp = self._peers.get(peer_gid)
+        if qp is not None:
+            return qp
+        peer_dev = self.device.fabric.device(peer_gid)
+        if peer_dev is None:
+            raise ServiceError(f"no device at gid {peer_gid}")
+        peer_svc = peer_dev.service
+        mine = self.pd.create_qp(self.cq, self.cq)
+        theirs = peer_svc.pd.create_qp(peer_svc.cq, peer_svc.cq)
+        for qp_, dst_dev, dst_qp in ((mine, peer_dev, theirs),
+                                     (theirs, self.device, mine)):
+            qp_.modify(QPState.INIT)
+            qp_.modify(QPState.RTR, dest_gid=dst_dev.gid,
+                       dest_qpn=dst_qp.qpn, rq_psn=0)
+            qp_.modify(QPState.RTS, sq_psn=0)
+        self._peers[peer_gid] = mine
+        peer_svc._peers[self.device.gid] = theirs
+        return mine
+
+    # -- transmit ------------------------------------------------------------
+    def post(self, peer_gid: int, op: Op, meta: dict,
+             data: bytes = b"") -> int:
+        """Queue one service message (fire-and-forget); returns its xid."""
+        xid = meta.setdefault("xid", self.next_xid())
+        blob = msgpack.packb({"meta": meta, "data": data},
+                             use_bin_type=True)
+        # kernel-private scratch MR: built directly (never registered with
+        # the device) so per-message buffers don't consume the node's
+        # finite MRN namespace range or pollute the rkey index — it is
+        # only ever read as a local SGE source
+        mr = MemoryRegion(self.pd, len(blob), mrn=-1, lkey=0, rkey=0)
+        mr.buf[:] = blob
+        self._wr += 1
+        wr = SendWR(self._wr, op, SGE(mr, 0, len(blob)))
+        self._tx_mrs[self._wr] = (peer_gid, mr)
+        self.qp_for(peer_gid).post_send(wr)
+        return xid
+
+    def transfer(self, peer_gid: int, op: Op, meta: dict, data: bytes,
+                 *, tick: Optional[Callable] = None,
+                 max_steps: Optional[int] = None) -> int:
+        """Stream one message and pump the fabric until the receiver's
+        MIG_ACK receipt arrives — i.e. until the bytes have actually been
+        serialised over the shared links, retransmissions included. The
+        elapsed pump steps ARE the transfer time (``fabric.now`` delta)."""
+        fabric = self.device.fabric
+        xid = self.post(peer_gid, op, meta, data)
+        if tick is None:
+            tick = fabric.pump
+        if max_steps is None:
+            # generous: 20x the no-contention serialisation time
+            ser = (len(data) + 4096) / max(fabric.bytes_per_step, 1e-9)
+            max_steps = int(20 * ser) + 100_000
+        for _ in range(max_steps):
+            if xid in self.acked:
+                self.acked.discard(xid)
+                return xid
+            tick()
+        # the stream is hopeless: abort it. Leaving the WQE in place would
+        # retransmit the image forever (the device never goes idle) and a
+        # late delivery would orphan the blob in the receiver's inbox.
+        self.reset_peer(peer_gid)
+        peer_dev = fabric.device(peer_gid)
+        if peer_dev is not None and peer_dev._service is not None:
+            peer_dev._service.images.pop(xid, None)
+        self.acked.discard(xid)
+        raise ServiceError(
+            f"service transfer xid={xid} not acked in {max_steps} steps")
+
+    # -- receive (called from the responder via the device) ------------------
+    def on_message(self, op: Op, blob: bytes, src_gid: int):
+        msg = msgpack.unpackb(blob, raw=False, strict_map_key=False)
+        meta, data = msg["meta"], msg["data"]
+        if op == Op.MIG_ACK:
+            self.acked.add(meta["ack"])
+            return
+        if op == Op.MIG_STATE:
+            self.images[meta["xid"]] = data
+        elif op == Op.MIG_PAGE:
+            if not meta.get("postcopy"):
+                # pre-copy staging: pages accumulate at the destination
+                # until install applies them
+                stage = self.staging.setdefault(meta["stream"], {})
+                off = 0
+                for mrn, pg, ln in meta["pages"]:
+                    stage[(mrn, pg)] = data[off:off + ln]
+                    off += ln
+            # post-copy pulls were already applied synchronously at the
+            # destination MR; the stream only accounts for the wire cost
+        if not meta.get("noack"):
+            self.post(src_gid, Op.MIG_ACK, {"ack": meta["xid"]})
+
+    def take_image(self, xid: int) -> bytes:
+        try:
+            return self.images.pop(xid)
+        except KeyError:
+            raise ServiceError(f"no delivered image for xid {xid}") from None
+
+    def take_staging(self, stream: int) -> Dict[Tuple[int, int], bytes]:
+        return self.staging.pop(stream, {})
+
+    def discard_stream(self, stream: int):
+        """Release any staged pages / frozen stores a dead migration
+        attempt left behind (rollback path)."""
+        self.staging.pop(stream, None)
+        self.page_store.pop(stream, None)
+
+    def reset_peer(self, peer_gid: int):
+        """Tear down the kernel QP pair toward a peer (both ends) after a
+        dead stream; the next message performs a fresh rendezvous. PSN
+        state is abandoned with the QPs, so no go-back-N gap survives."""
+        sides = [(self, peer_gid)]
+        peer_dev = self.device.fabric.device(peer_gid)
+        if peer_dev is not None and peer_dev._service is not None:
+            sides.append((peer_dev._service, self.device.gid))
+        for svc, gid in sides:
+            qp = svc._peers.pop(gid, None)
+            if qp is not None:
+                qp.sq.clear()
+                qp.inflight.clear()
+                qp.pending_comp.clear()
+                qp.rx.clear()
+                qp.cur_wqe = None
+                svc.device.destroy_qp(qp.qpn)
+            svc._tx_mrs = {w: (g, mr) for w, (g, mr)
+                           in svc._tx_mrs.items() if g != gid}
+
+    # -- housekeeping --------------------------------------------------------
+    def reap(self):
+        """Drop scratch MRs whose send completed (runs every pump); the
+        buffers were never device-registered, so releasing the reference
+        is the whole teardown."""
+        for wc in self.cq.poll(64):
+            self._tx_mrs.pop(wc.wr_id, None)
+
+    @property
+    def tx_backlog(self) -> int:
+        return len(self._tx_mrs)

@@ -9,7 +9,7 @@ actually migrating — mirroring the paper's minimal-changes claim, which
 """
 from __future__ import annotations
 
-from repro.core.packets import NakCode, Op, Packet
+from repro.core.packets import MIG_OPS, NakCode, Op, Packet
 from repro.core.states import QPState, can_receive, can_send
 
 
@@ -58,11 +58,13 @@ def requester(qp):
         return                                                  # [MIGR]
     if not can_send(qp.state):
         return
-    # retransmit on timeout (go-back-N)
-    if qp.inflight and now - qp.last_progress > qp.RETRANS_TIMEOUT:
+    # retransmit on timeout (go-back-N); back the timer off so a slow,
+    # contended link is not flooded with duplicate windows
+    if qp.inflight and now - qp.last_progress > qp.rto:
         for pkt in qp.inflight:
             _retx(qp, pkt)
         qp.last_progress = now
+        qp.rto = min(qp.rto * 2, qp.RETRANS_TIMEOUT * 64)
         return
     budget = qp.WINDOW - len(qp.inflight)
     while budget > 0:
@@ -131,7 +133,22 @@ def responder(qp):
                 _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
                               nak_code=NakCode.PSN_SEQ_ERR))
             continue
-        if pkt.op == Op.SEND:
+        if pkt.op in MIG_OPS:
+            # service-channel message (kernel QPs only): same PSN/ACK
+            # discipline as SEND, but the payload reassembles into the
+            # device's service inbox instead of consuming an RR.  # [MIGR]
+            if pkt.first:
+                qp.svc_assembly = bytearray()
+            qp.svc_assembly += pkt.payload
+            qp.epsn += 1
+            qp.last_nak_epsn = -1
+            _emit(qp, _mk(qp, Op.ACK, psn=pkt.psn))
+            if pkt.last:
+                qp.device.on_service_message(pkt.op,
+                                             bytes(qp.svc_assembly),
+                                             pkt.src_gid)
+                qp.svc_assembly = bytearray()
+        elif pkt.op == Op.SEND:
             if pkt.first and qp.cur_rr is None:
                 qp.cur_rr = qp.next_rr()
             rr = qp.cur_rr
@@ -185,6 +202,7 @@ def _ack_up_to(qp, psn: int):
     if psn >= qp.una:
         qp.una = psn + 1
         qp.last_progress = qp.device.fabric.now
+        qp.rto = qp.RETRANS_TIMEOUT        # progress: reset the backoff
     while qp.pending_comp and qp.pending_comp[0][0] <= psn:
         _, wr_id, opcode, blen = qp.pending_comp.popleft()
         qp.send_cq.push(_wc(wr_id, _success(), opcode, blen, qp.qpn))

@@ -6,14 +6,68 @@ fabric is synchronous and step-driven (no threads): ``pump()`` delivers
 in-flight packets and runs every QP's requester/responder/completer tasks
 once; determinism makes protocol tests exact. Loss injection exercises the
 go-back-N retransmission path that migration relies on.
+
+Time model: one pump step is ``STEP_S`` seconds of NIC time. Every
+(src_gid, dest_gid) pair is a link with finite bandwidth — each packet
+occupies the link for ``nbytes()/bytes_per_step`` steps before the
+propagation latency starts, and packets on one link serialise FIFO behind
+each other. Migration traffic (service-channel MIG_* packets) crosses the
+same links as application traffic, so checkpoint streams and demand-paging
+pulls contend for bandwidth instead of being free, and ``now`` is the
+single source of truth for every ``transfer_s``/``downtime_s`` figure.
 """
 from __future__ import annotations
 
 import random
 from collections import defaultdict, deque
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
-from repro.core.packets import Packet
+from repro.core.packets import MIG_OPS, Packet
+
+# sim-time -> wall-time conversion: one fabric pump step models roughly a
+# microsecond of NIC time. All MigrationReport second-figures derive from
+# (fabric.now delta) * STEP_S, never from wall-clock timers.
+STEP_S = 1e-6
+
+# window (in steps) over which link_utilization() measures traffic
+UTILIZATION_WINDOW = 1000
+
+
+class Link:
+    """One directed (src_gid, dest_gid) link: a shared FIFO with finite
+    bandwidth. ``busy_until`` is the (fractional-step) time the last queued
+    byte finishes serialising; the windowed byte counter feeds measured
+    utilization for orchestrator admission."""
+
+    __slots__ = ("busy_until", "queue", "tx_bytes", "tx_packets",
+                 "_window", "_win_bytes")
+
+    def __init__(self):
+        self.busy_until = 0.0
+        self.queue: deque = deque()            # (deliver_at, packet), FIFO
+        self.tx_bytes = 0
+        self.tx_packets = 0
+        self._window: deque = deque()          # (sent_at, nbytes)
+        self._win_bytes = 0
+
+    def record(self, now: int, nbytes: int):
+        self.tx_bytes += nbytes
+        self.tx_packets += 1
+        self._window.append((now, nbytes))
+        self._win_bytes += nbytes
+        self._trim(now)
+
+    def _trim(self, now: int):
+        # retention is capped at UTILIZATION_WINDOW so the deque stays
+        # bounded on workloads that never query utilization
+        while self._window and \
+                self._window[0][0] <= now - UTILIZATION_WINDOW:
+            self._win_bytes -= self._window.popleft()[1]
+
+    def window_bytes(self, now: int) -> int:
+        """Bytes enqueued over the last UTILIZATION_WINDOW steps."""
+        self._trim(now)
+        return self._win_bytes
 
 
 class Fabric:
@@ -22,12 +76,24 @@ class Fabric:
         self.loss_prob = loss_prob
         self.rng = random.Random(seed)
         self.latency = max(1, latency_steps)
-        self.bandwidth = bandwidth_Bps
         self.now = 0
-        self._wire: deque = deque()           # (deliver_at, packet)
+        self._links: Dict[Tuple[int, int], Link] = {}
         self._devices: Dict[int, "RdmaDevice"] = {}   # gid -> device
         self.stats = defaultdict(int)
         self.trace: Optional[List[Packet]] = None
+        self.set_bandwidth(bandwidth_Bps)
+
+    # -- bandwidth -----------------------------------------------------------
+    def set_bandwidth(self, bandwidth_Bps: float):
+        self.bandwidth = bandwidth_Bps
+        # bytes one link can serialise per pump step
+        self.bytes_per_step = bandwidth_Bps * STEP_S
+
+    @property
+    def time_s(self) -> float:
+        """Sim-clock seconds — the single source of truth for migration
+        timing figures."""
+        return self.now * STEP_S
 
     # -- topology ------------------------------------------------------------
     def attach(self, gid: int, device):
@@ -40,33 +106,64 @@ class Fabric:
     def device(self, gid: int):
         return self._devices.get(gid)
 
+    def link(self, src_gid: int, dest_gid: int) -> Link:
+        key = (src_gid, dest_gid)
+        ln = self._links.get(key)
+        if ln is None:
+            ln = self._links[key] = Link()
+        return ln
+
+    def link_utilization(self, src_gid: int, dest_gid: int) -> float:
+        """Measured fraction of the link's capacity committed over the
+        UTILIZATION_WINDOW horizon (admission reads this, not an analytic
+        guess). Two signals, whichever is worse: bytes enqueued over the
+        trailing window (offered load), and the standing backlog still
+        serialising (a drained-but-booked link is not free capacity)."""
+        ln = self._links.get((src_gid, dest_gid))
+        if ln is None or self.bytes_per_step <= 0:
+            return 0.0
+        cap = UTILIZATION_WINDOW * self.bytes_per_step
+        offered = ln.window_bytes(self.now) / cap
+        backlog = max(0.0, ln.busy_until - self.now) / UTILIZATION_WINDOW
+        return min(1.0, max(offered, backlog))
+
     # -- wire ----------------------------------------------------------------
     def send(self, pkt: Packet):
+        n = pkt.nbytes()
         self.stats["tx_packets"] += 1
-        self.stats["tx_bytes"] += pkt.nbytes()
+        self.stats["tx_bytes"] += n
+        if pkt.op in MIG_OPS:
+            self.stats["mig_tx_packets"] += 1
+            self.stats["mig_tx_bytes"] += n
         if self.trace is not None:
             self.trace.append(pkt)
+        ln = self.link(pkt.src_gid, pkt.dest_gid)
+        # the packet occupies the link whether or not it is then lost —
+        # serialisation time is spent before the wire can drop anything
+        start = max(float(self.now), ln.busy_until)
+        ln.busy_until = start + n / self.bytes_per_step
+        ln.record(self.now, n)
         if self.rng.random() < self.loss_prob:
             self.stats["dropped"] += 1
             return
-        self._wire.append((self.now + self.latency, pkt))
+        ln.queue.append((ln.busy_until + self.latency, pkt))
+
+    def in_flight(self) -> int:
+        return sum(len(ln.queue) for ln in self._links.values())
 
     def pump(self, steps: int = 1):
         """Advance time: deliver due packets, then run all QP tasks."""
         for _ in range(steps):
             self.now += 1
-            undelivered = deque()
-            while self._wire:
-                at, pkt = self._wire.popleft()
-                if at > self.now:
-                    undelivered.append((at, pkt))
-                    continue
-                dev = self._devices.get(pkt.dest_gid)
-                if dev is None:
-                    self.stats["unroutable"] += 1   # [MIGR] old address
-                    continue
-                dev.receive(pkt)
-            self._wire = undelivered
+            for ln in self._links.values():
+                q = ln.queue
+                while q and q[0][0] <= self.now:
+                    pkt = q.popleft()[1]
+                    dev = self._devices.get(pkt.dest_gid)
+                    if dev is None:
+                        self.stats["unroutable"] += 1   # [MIGR] old address
+                        continue
+                    dev.receive(pkt)
             for dev in list(self._devices.values()):
                 dev.run_tasks()
 
@@ -74,7 +171,7 @@ class Fabric:
         """Pump until no packets are in flight and all QPs are quiescent."""
         for i in range(max_steps):
             self.pump()
-            if not self._wire and all(d.idle() for d in
-                                      self._devices.values()):
+            if not self.in_flight() and all(d.idle() for d in
+                                            self._devices.values()):
                 return i + 1
         raise TimeoutError("fabric did not quiesce")

@@ -74,6 +74,7 @@ class MemoryRegion:
     def __init__(self, pd: "ProtectionDomain", size: int, mrn: int,
                  lkey: int, rkey: int):
         self.pd = pd
+        self.ctx = pd.ctx           # owner back-pointer: O(1) teardown
         self.size = size
         self.mrn = mrn
         self.lkey = lkey
@@ -161,6 +162,7 @@ class QueuePair:
                  send_cq: CompletionQueue, recv_cq: CompletionQueue,
                  srq: Optional[SharedReceiveQueue] = None):
         self.pd = pd
+        self.ctx = pd.ctx           # owner back-pointer: O(1) teardown
         self.device: "RdmaDevice" = pd.ctx.device
         self.qpn = qpn
         self.send_cq = send_cq
@@ -177,6 +179,12 @@ class QueuePair:
         self.una = 0                    # oldest unacknowledged PSN
         self.inflight: Deque[Packet] = deque()
         self.last_progress = 0
+        # adaptive retransmission timeout: starts at RETRANS_TIMEOUT,
+        # doubles on every timeout-triggered retransmit (bounded), resets
+        # when an ACK advances una. Without backoff, queueing delay on a
+        # bandwidth-contended link exceeds the fixed timer and go-back-N
+        # floods the link with duplicates (congestion collapse).
+        self.rto = self.RETRANS_TIMEOUT
         self.pending_comp: Deque = deque()   # (last_psn, wr_id, opcode, len)
         # responder
         self.rq: Deque[RecvWR] = deque()
@@ -187,6 +195,7 @@ class QueuePair:
         # migration                                              # [MIGR]
         self.resume_pending = False     # REFILL queues a resume  # [MIGR]
         self.last_resume_tx = -10**9    # resume retry timer      # [MIGR]
+        self.svc_assembly = bytearray() # service-msg reassembly  # [MIGR]
 
     # -- user API --------------------------------------------------------------
     def modify(self, new_state: QPState, *, dest_gid: int = None,
@@ -281,6 +290,7 @@ class RdmaDevice:
         # Cluster-wide QPN/MRN partitioning (paper §4.1): each node owns a
         # disjoint range so restored IDs never collide.          # [MIGR]
         base = qpn_base if qpn_base is not None else gid * 1_000_000
+        self.qpn_base = base
         self._qpn = base
         self._mrn = base
         self._pdn = base
@@ -290,6 +300,7 @@ class RdmaDevice:
         self.last_mrn: Optional[int] = None   # [MIGR]
         self.qps: Dict[int, QueuePair] = {}
         self.contexts: List[Context] = []
+        self._service = None        # kernel migration channel     # [MIGR]
         # rkey -> MR index: every inbound RDMA WRITE/READ resolves its rkey
         # here, so lookup must be O(1), not a scan over contexts × MRs.
         self.mr_by_rkey: Dict[int, MemoryRegion] = {}
@@ -332,9 +343,12 @@ class RdmaDevice:
     def dereg_mr(self, mr: MemoryRegion):
         if self.mr_by_rkey.get(mr.rkey) is mr:
             del self.mr_by_rkey[mr.rkey]
-        for ctx in self.contexts:
-            if mr in ctx.mrs:
-                ctx.mrs.remove(mr)
+        # owner back-pointer instead of a contexts x objects scan:
+        # teardown happens per-migration, so it must not be O(cluster)
+        try:
+            mr.ctx.mrs.remove(mr)
+        except ValueError:
+            pass
 
     def set_mr_keys(self, mr: MemoryRegion, lkey: int, rkey: int):
         """Rebind MR keys (restore path) keeping the rkey index coherent."""
@@ -360,15 +374,32 @@ class RdmaDevice:
     def destroy_qp(self, qpn: int):
         qp = self.qps.pop(qpn, None)
         if qp is not None:
-            for ctx in self.contexts:
-                if qp in ctx.qps:
-                    ctx.qps.remove(qp)
+            try:
+                qp.ctx.qps.remove(qp)
+            except ValueError:
+                pass
+
+    # -- service channel (kernel migration data plane) ----------------- # [MIGR]
+    @property
+    def service(self):
+        """Kernel-owned migration channel, created on first use (the
+        import is deferred: service.py builds on the verbs objects)."""
+        if self._service is None:
+            from repro.core.service import ServiceChannel
+            self._service = ServiceChannel(self)
+        return self._service
+
+    def on_service_message(self, op, blob: bytes, src_gid: int):
+        self.service.on_message(op, blob, src_gid)
 
     # -- fabric interface ------------------------------------------------------------
     def receive(self, pkt: Packet):
         qp = self.qps.get(pkt.dest_qpn)
         if qp is None:
-            return  # dropped; sender's go-back-N recovers after migration
+            # dropped; sender's go-back-N recovers after migration — but
+            # count it so migration bugs (stale QPNs) are observable
+            self.fabric.stats["unknown_qpn"] += 1
+            return
         qp.rx.append(pkt)
 
     def run_tasks(self):
@@ -376,6 +407,8 @@ class RdmaDevice:
             qptasks.responder(qp)
             qptasks.completer(qp)
             qptasks.requester(qp)
+        if self._service is not None:
+            self._service.reap()
 
     def idle(self) -> bool:
         return all(qp.idle() for qp in self.qps.values())

@@ -21,14 +21,11 @@ from typing import Callable, Dict, List, Optional
 from repro.core.migration import (MigrationController, MigrationError,
                                   MigrationReport)
 from repro.core.states import QPState
+from repro.core.transport import STEP_S
 from repro.core.verbs import PAGE_SIZE
 from repro.orchestrator.strategies import (MigrationStrategy,
                                            choose_migration_strategy,
                                            make_strategy)
-
-# sim-time → wall-time conversion for bandwidth estimates: one fabric
-# pump step models roughly a microsecond of NIC time.
-STEP_S = 1e-6
 
 
 class AdmissionError(MigrationError):
@@ -101,11 +98,17 @@ class Orchestrator:
                     f"MRN {mr.mrn} already allocated on node {dev.gid}")
         checks.append("qpn_range")
         est = sum(mr.size for mr in container.ctx.mrs) + 4096
-        est_s = est / self.controller.bw
+        # the migration stream shares the (src, dest) link with whatever
+        # traffic is already on it: budget against the *measured* headroom
+        # from the fabric's utilization window, not the raw link rate
+        fabric = self.controller.fabric
+        util = fabric.link_utilization(container.node.gid, dest_node.gid)
+        effective_bw = self.controller.bw * max(1e-6, 1.0 - util)
+        est_s = est / effective_bw
         if self.max_transfer_s is not None and est_s > self.max_transfer_s:
             raise AdmissionError(
-                f"estimated transfer {est_s:.4f}s exceeds "
-                f"budget {self.max_transfer_s:.4f}s")
+                f"estimated transfer {est_s:.4f}s (link util {util:.0%}) "
+                f"exceeds budget {self.max_transfer_s:.4f}s")
         checks.append("bandwidth")
         return MigrationPlan(container.name, container.node.gid,
                              dest_node.gid, est, est_s, checks)
@@ -186,15 +189,32 @@ class Orchestrator:
             rate = self.estimate_dirty_rate(req.container)
             strategy = choose_migration_strategy(
                 est, rate, self.controller.bw, self.max_downtime_s)
-        strat = make_strategy(strategy, **req.strategy_params)
-        rep = strat.run(self.controller, req.container, req.dest_node,
-                        runtime=req.runtime, fail_at=req.fail_at,
-                        background=self.background)
-        while (not rep.ok and rep.stage_failed == "transfer"
-               and rep.attempt is not None and rep.retries < req.retries):
-            rep.retries += 1
-            rep = strat.resume(self.controller, req.container,
-                               req.dest_node, rep.attempt, rep)
+        try:
+            strat = make_strategy(strategy, **req.strategy_params)
+        except (ValueError, TypeError) as e:
+            # bad strategy name/params: nothing was stopped or moved, so
+            # classify as admission — drain() converts it to a failed
+            # report and keeps the queue moving; migrate() re-raises
+            raise AdmissionError(f"strategy rejected: {e}") from e
+        # the data plane can fail for real (stream timeout on a dead or
+        # hopelessly contended link, corrupted image): convert to a failed
+        # report so rollback still runs and the queue keeps draining
+        from repro.core.service import ServiceError
+        rep = MigrationReport(ok=False, strategy=strat.name,
+                              stage_failed="transfer")
+        try:
+            rep = strat.run(self.controller, req.container, req.dest_node,
+                            runtime=req.runtime, fail_at=req.fail_at,
+                            background=self.background)
+            while (not rep.ok and rep.stage_failed == "transfer"
+                   and rep.attempt is not None
+                   and rep.retries < req.retries):
+                rep.retries += 1
+                rep = strat.resume(self.controller, req.container,
+                                   req.dest_node, rep.attempt, rep)
+        except (MigrationError, ServiceError) as e:
+            rep.ok = False
+            rep.transfer_error = e
         if not rep.ok:
             self.rollback(req.container, rep)
         self.history.append(rep)
@@ -207,12 +227,22 @@ class Orchestrator:
         never destroyed, so re-arm them in place. ``resume_pending`` makes
         each QP announce itself (same address) so peers parked in PAUSED
         leave it via the normal RESUME handshake, and go-back-N recovers
-        whatever was NAK_STOPPED-dropped in the stop window."""
+        whatever was NAK_STOPPED-dropped in the stop window. Data-plane
+        state the dead attempt parked in service channels (staged pre-copy
+        pages at the destination, the post-copy frozen store at the
+        source) is released so repeated failures don't leak footprints."""
         for qp in container.ctx.qps:
             if qp.state == QPState.STOPPED:
                 qp.modify(QPState.RTS, system=True)              # [MIGR]
                 qp.resume_pending = True
                 qp.last_resume_tx = -10 ** 9    # announce immediately
+        for mr in container.ctx.mrs:
+            mr.stop_dirty_tracking()      # a mid-round abort leaves it on
+        # release whatever the dead attempt parked in service channels —
+        # strategies register these tokens before any step that can fail
+        # (or raise), so even an exception mid-stream cannot leak them
+        self.controller.run_cleanups(container)
         container.alive = True
         if rep is not None:
             rep.rolled_back = True
+            rep.attempt = None            # the token is dead with the QPs

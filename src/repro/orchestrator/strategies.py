@@ -5,42 +5,79 @@ with total MR footprint. Production live migration bounds downtime instead:
 
 * ``StopAndCopy`` — the seed flow, preserved verbatim (it delegates to the
   controller, so results stay byte-identical to the seed).
-* ``PreCopy``     — iterative rounds: snapshot all MR pages while the app
-  keeps running and the fabric keeps pumping, then re-send only dirtied
-  pages until the delta converges below a threshold or a round cap, then a
-  short stop-and-copy of the residual + verbs state. Downtime scales with
-  the residual dirty set, not the footprint.
+* ``PreCopy``     — iterative rounds: stream all MR pages over the service
+  channel while the app keeps running (the page stream and the app's own
+  traffic share link bandwidth), then re-send only dirtied pages until the
+  delta converges below a threshold or a round cap, then a short
+  stop-and-copy of the residual + verbs state. Downtime scales with the
+  residual dirty set, not the footprint.
 * ``PostCopy``    — restore verbs state immediately at the destination and
   fault MR pages in on demand (``DemandPager``); downtime scales with the
-  verbs image alone.
+  verbs image alone. Every pulled page is charged to the wire as a
+  ``MIG_PAGE`` message from the source's service channel.
 
-Every strategy produces a ``MigrationReport`` with ``downtime_s`` (wall
-time the QPs were actually stopped) split from ``total_s``, plus
-``simulated_*`` figures derived from the link bandwidth so comparisons are
-deterministic. Failed transfers leave a retry token in ``report.attempt``;
+Every strategy produces a ``MigrationReport`` whose ``downtime_s`` /
+``transfer_s`` / ``live_s`` are sim-clock deltas (``fabric.now * STEP_S``)
+measured around the actual streams — deterministic across runs. The
+``simulated_*`` figures remain the analytic bytes/bandwidth estimates for
+comparison. Failed transfers leave a retry token in ``report.attempt``;
 the orchestrator hands it back to ``resume()`` to redo the move from the
-last completed round.
+last completed round (staged pages already live at the destination's
+service channel and are not re-sent).
 """
 from __future__ import annotations
 
-import time
 import zlib
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 import msgpack
 
 from repro.core import dump as dumplib
 from repro.core.migration import MigrationReport
+from repro.core.packets import Op
+from repro.core.transport import STEP_S
 from repro.core.verbs import PAGE_SIZE, MemoryRegion
+
+# pages per MIG_PAGE message: bounds the service scratch MR while keeping
+# per-message overhead small (64 pages = 256 KiB per WQE)
+PAGE_BATCH = 64
 
 
 def _sim_transfer_s(ctl, attempt: Dict) -> float:
-    """Simulated wire time for (re-)moving an attempt's image, honouring
+    """Analytic wire time for (re-)moving an attempt's image, honouring
     the docker runtime's via-storage double cost."""
     sim = len(attempt["image"]) / ctl.bw
     if attempt.get("runtime") == "docker":
         sim *= 2
     return sim
+
+
+def _page(mr: MemoryRegion, pg: int) -> bytes:
+    return bytes(mr.buf[pg * PAGE_SIZE:(pg + 1) * PAGE_SIZE])
+
+
+def _page_len(mr: MemoryRegion, pg: int) -> int:
+    return min(PAGE_SIZE, mr.size - pg * PAGE_SIZE)
+
+
+def _stream_pages(ctl, src_dev, dest_gid: int, stream: int,
+                  pages: List[Tuple[MemoryRegion, int]], tick) -> int:
+    """Stream a page set over the service channel in MIG_PAGE batches;
+    blocks (pumping via ``tick``) until each batch is receipt-acked.
+    Returns the number of payload bytes that crossed the wire."""
+    svc = src_dev.service
+    total = 0
+    for lo in range(0, len(pages), PAGE_BATCH):
+        metas, datas = [], []
+        for mr, pg in pages[lo:lo + PAGE_BATCH]:
+            data = _page(mr, pg)
+            metas.append((mr.mrn, pg, len(data)))
+            datas.append(data)
+            total += len(data)
+        svc.transfer(dest_gid, Op.MIG_PAGE,
+                     {"stream": stream, "pages": metas},
+                     b"".join(datas), tick=tick)
+    return total
 
 
 class MigrationStrategy:
@@ -57,6 +94,28 @@ class MigrationStrategy:
     def resume(self, ctl, container, dest_node, attempt: Dict,
                rep: MigrationReport) -> MigrationReport:
         raise NotImplementedError
+
+    def _stream_and_install(self, ctl, container, dest_node, attempt,
+                            rep: MigrationReport, install) -> MigrationReport:
+        """Shared resume() core: re-stream the attempt's image over the
+        wire (sim-clock accounted), hand the delivered bytes to the
+        strategy's ``install`` callback, and revive the container."""
+        fab = ctl.fabric
+        t1 = fab.now
+        moved = ctl.stream_image(container.ctx.device,
+                                 dest_node.device.gid, attempt["image"],
+                                 runtime=attempt.get("runtime", "crx"))
+        rep.simulated_transfer_s += _sim_transfer_s(ctl, attempt)
+        rep.transfer_s += (fab.now - t1) * STEP_S
+        t2 = fab.now
+        install(moved)
+        rep.restore_s += (fab.now - t2) * STEP_S
+        ctl.clear_cleanups(container)
+        container.alive = True
+        rep.ok = True
+        rep.stage_failed = None
+        rep.attempt = None
+        return rep
 
 
 # ---------------------------------------------------------------------------
@@ -75,18 +134,13 @@ class StopAndCopy(MigrationStrategy):
                            fail_at=fail_at)
 
     def resume(self, ctl, container, dest_node, attempt, rep):
-        t1 = time.perf_counter()
-        image = attempt["image"]
-        rep.simulated_transfer_s += _sim_transfer_s(ctl, attempt)
-        rep.transfer_s += time.perf_counter() - t1
-        t2 = time.perf_counter()
-        ctl._teardown_source(container)
-        ctl._restore(container, image, dest_node)
-        rep.restore_s += time.perf_counter() - t2
-        container.alive = True
-        rep.ok = True
-        rep.stage_failed = None
-        rep.attempt = None
+        def install(moved):
+            ctl._teardown_source(container)
+            ctl._restore(container, moved, dest_node)
+
+        rep = self._stream_and_install(ctl, container, dest_node, attempt,
+                                       rep, install)
+        rep.pages_sent = rep.pages_total   # the retry moved every page
         rep.downtime_s = rep.total_s
         rep.simulated_downtime_s = rep.simulated_transfer_s
         return rep
@@ -109,40 +163,50 @@ class PreCopy(MigrationStrategy):
 
     # -- live phase helpers -----------------------------------------------
     def _live(self, ctl, background):
-        """One round's worth of 'the page copy is on the wire': the app
-        keeps running and the fabric keeps pumping, dirtying pages."""
+        """Settle window between rounds: the app keeps running and the
+        fabric keeps pumping, dirtying pages (the page streams themselves
+        also run under ``background``, so the app dirties pages *while*
+        each round is on the wire)."""
         for _ in range(self.pump_per_round):
             if background is not None:
                 background()
             else:
                 ctl.fabric.pump()
 
-    @staticmethod
-    def _page(mr: MemoryRegion, pg: int) -> bytes:
-        return bytes(mr.buf[pg * PAGE_SIZE:(pg + 1) * PAGE_SIZE])
-
     def run(self, ctl, container, dest_node, *, runtime="crx", fail_at=None,
             background=None):
-        rep = MigrationReport(strategy=self.name)
         if dest_node is container.node:
-            return rep
+            return MigrationReport(strategy="noop")
+        rep = MigrationReport(strategy=self.name)
+        fab = ctl.fabric
         ctx = container.ctx
+        src_dev = ctx.device
+        dest_gid = dest_node.device.gid
         mrs = list(ctx.mrs)
+        live_tick = background if background is not None else fab.pump
+        ctl.run_cleanups(container)     # release any earlier dead attempt
+        stream = src_dev.service.next_stream()
+        # from the first streamed page on, the destination service holds
+        # state that must be released if this attempt dies at ANY stage
+        dest_svc = dest_node.device.service
+        ctl.register_cleanup(container,
+                             lambda: dest_svc.discard_stream(stream))
 
-        t_live = time.perf_counter()
+        t_live = fab.now
         for mr in mrs:
             mr.start_dirty_tracking()
-        # staged = the destination's copy of MR memory, page-granular; in
-        # the simulation it simply lives here until restore applies it.
-        staged: Dict = {}
-        for mr in mrs:
-            for pg in range(mr.n_pages):
-                staged[(mr.mrn, pg)] = self._page(mr, pg)
-        rep.pages_total = len(staged)
-        rep.pages_sent = len(staged)
-        r0_bytes = sum(len(v) for v in staged.values())
-        rep.rounds.append({"round": 0, "pages": len(staged),
-                           "bytes": r0_bytes, "sim_s": r0_bytes / ctl.bw})
+        # round 0: the full footprint streams to the destination's service
+        # channel while the app keeps running — dirty tracking records
+        # exactly the pages touched while the copy was on the wire
+        all_pages = [(mr, pg) for mr in mrs for pg in range(mr.n_pages)]
+        rep.pages_total = len(all_pages)
+        r0 = fab.now
+        r0_bytes = _stream_pages(ctl, src_dev, dest_gid, stream, all_pages,
+                                 live_tick)
+        rep.pages_sent = len(all_pages)
+        rep.rounds.append({"round": 0, "pages": len(all_pages),
+                           "bytes": r0_bytes, "sim_s": r0_bytes / ctl.bw,
+                           "wire_s": (fab.now - r0) * STEP_S})
         self._live(ctl, background)
 
         # iterative delta rounds: re-send only what got dirtied while the
@@ -151,29 +215,30 @@ class PreCopy(MigrationStrategy):
         for rnd in range(1, self.max_rounds + 1):
             dirty = [(mr, pg) for mr in mrs
                      for pg in sorted(mr.collect_dirty())]
-            dirty_bytes = sum(len(self._page(mr, pg)) for mr, pg in dirty)
+            dirty_bytes = sum(_page_len(mr, pg) for mr, pg in dirty)
             if dirty_bytes <= self.threshold_bytes \
                     or rnd == self.max_rounds:
                 # converged (or round cap): fall back to stop-and-copy of
                 # exactly this residual
                 residual = dirty
                 break
-            for mr, pg in dirty:
-                staged[(mr.mrn, pg)] = self._page(mr, pg)
+            rt = fab.now
+            _stream_pages(ctl, src_dev, dest_gid, stream, dirty, live_tick)
             rep.pages_sent += len(dirty)
             rep.rounds.append({"round": rnd, "pages": len(dirty),
                                "bytes": dirty_bytes,
-                               "sim_s": dirty_bytes / ctl.bw})
+                               "sim_s": dirty_bytes / ctl.bw,
+                               "wire_s": (fab.now - rt) * STEP_S})
             self._live(ctl, background)
-        rep.live_s = time.perf_counter() - t_live
+        rep.live_s = (fab.now - t_live) * STEP_S
 
         # -- stop-the-world: residual pages + verbs state + user state ----
-        t_stop = time.perf_counter()
+        t_stop = fab.now
         verbs_image = dumplib.dump_context(ctx, stop=True)       # [MIGR]
-        ctl.fabric.pump(ctl.stop_pump_steps)   # peers see NAK_STOPPED
+        fab.pump(ctl.stop_pump_steps)   # peers see NAK_STOPPED
         residual_pages: Dict[int, Dict[int, bytes]] = {}
         for mr, pg in residual:
-            residual_pages.setdefault(mr.mrn, {})[pg] = self._page(mr, pg)
+            residual_pages.setdefault(mr.mrn, {})[pg] = _page(mr, pg)
         for mr in mrs:
             mr.stop_dirty_tracking()
         user = container.checkpoint_user()
@@ -183,52 +248,55 @@ class PreCopy(MigrationStrategy):
         if runtime == "docker":
             image = zlib.decompress(zlib.compress(image, level=1))
         rep.image_bytes = len(image)
-        rep.checkpoint_s = time.perf_counter() - t_stop
+        rep.checkpoint_s = (fab.now - t_stop) * STEP_S
         if fail_at == "checkpoint":
             rep.ok = False
             rep.stage_failed = "checkpoint"
             return rep
 
-        t1 = time.perf_counter()
+        t1 = fab.now
         rep.simulated_downtime_s = len(image) / ctl.bw
         if runtime == "docker":
             rep.simulated_downtime_s *= 2
         rep.simulated_transfer_s = rep.simulated_downtime_s + \
             sum(r["sim_s"] for r in rep.rounds)
-        moved = bytes(image)
-        rep.transfer_s = time.perf_counter() - t1
         if fail_at == "transfer":
+            # the staged pages already arrived at the destination's
+            # service channel; only the residual image is lost
             container.alive = False
             rep.ok = False
             rep.stage_failed = "transfer"
-            rep.attempt = {"image": moved, "staged": staged,
+            rep.attempt = {"image": bytes(image), "stream": stream,
                            "runtime": runtime}
             return rep
+        moved = ctl.stream_image(src_dev, dest_gid, image, runtime=runtime)
+        rep.transfer_s = (fab.now - t1) * STEP_S
 
-        t2 = time.perf_counter()
+        t2 = fab.now
+        staged = self._claim_staging(dest_node, stream)
         self._install(ctl, container, moved, staged, dest_node)
-        rep.restore_s = time.perf_counter() - t2
+        rep.restore_s = (fab.now - t2) * STEP_S
         rep.downtime_s = rep.checkpoint_s + rep.transfer_s + rep.restore_s
+        ctl.clear_cleanups(container)
         return rep
 
     def resume(self, ctl, container, dest_node, attempt, rep):
         """Retry from the last completed round: every staged page already
-        'arrived'; only the residual image needs to move again."""
-        t1 = time.perf_counter()
-        image = attempt["image"]
-        sim = _sim_transfer_s(ctl, attempt)
-        rep.simulated_transfer_s += sim
-        rep.simulated_downtime_s += sim
-        rep.transfer_s += time.perf_counter() - t1
-        t2 = time.perf_counter()
-        self._install(ctl, container, image, attempt["staged"], dest_node)
-        rep.restore_s += time.perf_counter() - t2
-        container.alive = True
-        rep.ok = True
-        rep.stage_failed = None
-        rep.attempt = None
+        arrived at the destination service channel; only the residual
+        image needs to move again."""
+        def install(moved):
+            staged = self._claim_staging(dest_node, attempt["stream"])
+            self._install(ctl, container, moved, staged, dest_node)
+
+        rep = self._stream_and_install(ctl, container, dest_node, attempt,
+                                       rep, install)
+        rep.simulated_downtime_s += _sim_transfer_s(ctl, attempt)
         rep.downtime_s = rep.checkpoint_s + rep.transfer_s + rep.restore_s
         return rep
+
+    @staticmethod
+    def _claim_staging(dest_node, stream):
+        return dest_node.device.service.take_staging(stream)
 
     def _install(self, ctl, container, image_bytes, staged, dest_node):
         image = msgpack.unpackb(image_bytes, raw=False,
@@ -259,14 +327,26 @@ class PreCopy(MigrationStrategy):
 class DemandPager:
     """Serves destination page faults from the source's frozen memory.
 
-    The source node keeps the checkpointed pages in RAM until the
-    destination has pulled them all (demand faults on access + optional
-    background ``prefetch``); once an MR is fully resident its pager hook
-    is detached, restoring the branch-free fast path."""
+    The frozen pages live in the *source* device's service channel
+    (``page_store``) until the destination has pulled them all (demand
+    faults on access + optional background ``prefetch``). Each pulled
+    page is charged to the wire as a fire-and-forget ``MIG_PAGE`` message
+    from the source's service QP — the bytes really cross the shared link
+    and contend with application traffic, while the fill itself is applied
+    synchronously (the sim clock only advances on pump, so "instant fill +
+    link charge" is the step-accurate model of a kernel-served fault).
+    Once an MR is fully resident its pager hook is detached, restoring the
+    branch-free fast path."""
 
-    def __init__(self, bw_Bps: float, report: Optional[MigrationReport] = None):
+    def __init__(self, bw_Bps: float,
+                 report: Optional[MigrationReport] = None, *,
+                 service=None, dest_gid: Optional[int] = None,
+                 stream: Optional[int] = None):
         self.bw = bw_Bps
         self.report = report          # pages pulled count as pages_sent
+        self.service = service        # SOURCE device's service channel
+        self.dest_gid = dest_gid
+        self.stream = stream
         self.source: Dict[int, bytes] = {}       # mrn -> frozen source buf
         self.missing: Dict[int, set] = {}        # mrn -> absent page set
         self.mrs: Dict[int, MemoryRegion] = {}   # mrn -> destination MR
@@ -278,11 +358,23 @@ class DemandPager:
         for mr in mrs:
             self.source[mr.mrn] = bytes(mr.buf)
             self.missing[mr.mrn] = set(range(mr.n_pages))
+        if self.service is not None and self.stream is not None:
+            # the frozen store outlives the source container's teardown:
+            # it is kernel-owned until the destination drains it
+            self.service.page_store[self.stream] = self.source
 
     def attach(self, mr: MemoryRegion):
         if self.missing.get(mr.mrn):
             self.mrs[mr.mrn] = mr
             mr.pager = self
+
+    def _charge_wire(self, mr: MemoryRegion, pg: int, data: bytes):
+        if self.service is None or self.dest_gid is None:
+            return
+        self.service.post(self.dest_gid, Op.MIG_PAGE,
+                          {"stream": self.stream, "postcopy": True,
+                           "noack": True,
+                           "pages": [(mr.mrn, pg, len(data))]}, data)
 
     def _fill(self, mr: MemoryRegion, pg: int, *, fault: bool):
         lo = pg * PAGE_SIZE
@@ -295,9 +387,12 @@ class DemandPager:
         if self.report is not None:
             self.report.pages_sent += 1
         self.simulated_pull_s += len(data) / self.bw
+        self._charge_wire(mr, pg, data)
         if not self.missing[mr.mrn]:
             mr.pager = None                      # fully resident
             self.mrs.pop(mr.mrn, None)
+            if not any(self.missing.values()) and self.service is not None:
+                self.service.page_store.pop(self.stream, None)
 
     def ensure(self, mr: MemoryRegion, off: int, length: int):
         """Demand fault: pull every absent page the access touches."""
@@ -330,74 +425,92 @@ class DemandPager:
     def remaining_pages(self) -> int:
         return sum(len(s) for s in self.missing.values())
 
+    def release(self):
+        """Drop the frozen source store without draining it (rollback of
+        a failed attempt): detach every destination hook and free the
+        kernel-parked copy so repeated failures don't leak footprints."""
+        for mr in self.mrs.values():
+            mr.pager = None
+        self.mrs.clear()
+        self.missing.clear()
+        self.source = {}
+        if self.service is not None and self.stream is not None:
+            self.service.discard_stream(self.stream)
+
 
 class PostCopy(MigrationStrategy):
     name = "post_copy"
 
     def run(self, ctl, container, dest_node, *, runtime="crx", fail_at=None,
             background=None):
-        rep = MigrationReport(strategy=self.name)
         if dest_node is container.node:
-            return rep
+            return MigrationReport(strategy="noop")
+        rep = MigrationReport(strategy=self.name)
+        fab = ctl.fabric
         ctx = container.ctx
+        src_dev = ctx.device
+        dest_gid = dest_node.device.gid
+        ctl.run_cleanups(container)     # release any earlier dead attempt
         rep.pages_total = sum(mr.n_pages for mr in ctx.mrs)
 
         # -- stop-the-world: verbs + user state only (no MR contents) -----
-        t0 = time.perf_counter()
+        t0 = fab.now
         verbs_image = dumplib.dump_context(ctx, stop=True)       # [MIGR]
-        ctl.fabric.pump(ctl.stop_pump_steps)   # peers see NAK_STOPPED
+        fab.pump(ctl.stop_pump_steps)   # peers see NAK_STOPPED
         user = container.checkpoint_user()
         image = msgpack.packb({"verbs": verbs_image, "user": user},
                               use_bin_type=True)
         if runtime == "docker":
             image = zlib.decompress(zlib.compress(image, level=1))
         rep.image_bytes = len(image)
-        rep.checkpoint_s = time.perf_counter() - t0
+        rep.checkpoint_s = (fab.now - t0) * STEP_S
         if fail_at == "checkpoint":
             rep.ok = False
             rep.stage_failed = "checkpoint"
             return rep
 
-        # freeze source pages before any teardown can clear them
-        pager = DemandPager(ctl.bw, report=rep)
+        # freeze source pages before any teardown can clear them; the
+        # store parks in the source service channel until fully drained
+        pager = DemandPager(ctl.bw, report=rep, service=src_dev.service,
+                            dest_gid=dest_gid,
+                            stream=src_dev.service.next_stream())
         pager.capture(ctx.mrs)
+        # the frozen store must be released if this attempt dies at any
+        # stage; a SUCCESSFUL migration clears the token instead (the
+        # pager keeps serving faults until it drains itself)
+        ctl.register_cleanup(container, pager.release)
 
-        t1 = time.perf_counter()
+        t1 = fab.now
         rep.simulated_downtime_s = len(image) / ctl.bw
         if runtime == "docker":
             rep.simulated_downtime_s *= 2
         rep.simulated_transfer_s = rep.simulated_downtime_s
-        moved = bytes(image)
-        rep.transfer_s = time.perf_counter() - t1
         if fail_at == "transfer":
             container.alive = False
             rep.ok = False
             rep.stage_failed = "transfer"
-            rep.attempt = {"image": moved, "pager": pager,
+            rep.attempt = {"image": bytes(image), "pager": pager,
                            "runtime": runtime}
             return rep
+        moved = ctl.stream_image(src_dev, dest_gid, image, runtime=runtime)
+        rep.transfer_s = (fab.now - t1) * STEP_S
 
-        t2 = time.perf_counter()
+        t2 = fab.now
         self._install(ctl, container, moved, pager, dest_node)
-        rep.restore_s = time.perf_counter() - t2
+        rep.restore_s = (fab.now - t2) * STEP_S
         rep.downtime_s = rep.total_s
         rep.pager = pager
+        ctl.clear_cleanups(container)
         return rep
 
     def resume(self, ctl, container, dest_node, attempt, rep):
-        t1 = time.perf_counter()
-        image = attempt["image"]
-        sim = _sim_transfer_s(ctl, attempt)
-        rep.simulated_transfer_s += sim
-        rep.simulated_downtime_s += sim
-        rep.transfer_s += time.perf_counter() - t1
-        t2 = time.perf_counter()
-        self._install(ctl, container, image, attempt["pager"], dest_node)
-        rep.restore_s += time.perf_counter() - t2
-        container.alive = True
-        rep.ok = True
-        rep.stage_failed = None
-        rep.attempt = None
+        def install(moved):
+            self._install(ctl, container, moved, attempt["pager"],
+                          dest_node)
+
+        rep = self._stream_and_install(ctl, container, dest_node, attempt,
+                                       rep, install)
+        rep.simulated_downtime_s += _sim_transfer_s(ctl, attempt)
         rep.downtime_s = rep.total_s
         rep.pager = attempt["pager"]
         return rep

@@ -8,7 +8,6 @@ completely unaware of migration: it talks plain verbs; MigrOS machinery
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Dict, List, Optional
 
 import msgpack
@@ -75,13 +74,13 @@ class SimCluster:
     def __init__(self, n_nodes: int, *, loss_prob: float = 0.0,
                  seed: int = 0, link_bandwidth_Bps: Optional[float] = None,
                  node_capacity: Optional[int] = None):
-        self.fabric = Fabric(loss_prob=loss_prob, seed=seed)
+        fab_kw = {} if link_bandwidth_Bps is None else \
+            {"bandwidth_Bps": link_bandwidth_Bps}
+        self.fabric = Fabric(loss_prob=loss_prob, seed=seed, **fab_kw)
         self.namespace = GlobalNamespace()
         self.nodes = [Node(self, gid, capacity=node_capacity)
                       for gid in range(n_nodes)]
-        mig_kw = {} if link_bandwidth_Bps is None else \
-            {"link_bandwidth_Bps": link_bandwidth_Bps}
-        self.migrator = MigrationController(self.fabric, **mig_kw)
+        self.migrator = MigrationController(self.fabric)
         # control plane: shares the migrator's `relocated` registry, drives
         # live strategies with step_all so apps keep running mid-migration
         self.orchestrator = Orchestrator(self.migrator,

@@ -1,0 +1,293 @@
+"""In-fabric migration data plane tests: service-channel streaming,
+bandwidth-aware links, loss recovery on MIG_PAGE streams, concurrent
+migrations sharing a link, sim-clock determinism, measured-utilization
+admission, and O(1) teardown back-pointers."""
+import hashlib
+
+import pytest
+
+from repro.core.packets import Op, Packet
+from repro.core.transport import STEP_S
+from repro.core.verbs import PAGE_SIZE
+from repro.runtime.cluster import SimCluster
+from tests.helpers import make_channel_pair, make_sendbw_pair
+
+
+def _run(cl, n):
+    for _ in range(n):
+        cl.step_all()
+
+
+def _mr_container(cl, name, node_idx, n_pages):
+    """Container holding one MR of n_pages with a recognisable pattern."""
+    c = cl.launch(name, node_idx)
+    pd = c.ctx.alloc_pd()
+    mr = pd.reg_mr(n_pages * PAGE_SIZE)
+    for pg in range(n_pages):
+        mr.write(pg * PAGE_SIZE, bytes([pg % 251]) * PAGE_SIZE)
+    return c, mr
+
+
+# ---------------------------------------------------------------------------
+# service channel basics
+# ---------------------------------------------------------------------------
+
+
+def test_service_transfer_delivers_exact_bytes():
+    cl = SimCluster(3)
+    data = bytes(range(256)) * 500            # ~125 KiB
+    svc = cl.nodes[0].device.service
+    xid = svc.transfer(1, Op.MIG_STATE, {"kind": "image"}, data)
+    got = cl.nodes[1].device.service.take_image(xid)
+    assert got == data
+    assert cl.fabric.stats["mig_tx_bytes"] > len(data)
+    cl.run_until_idle()
+
+
+def test_service_stream_survives_loss_with_checksum_intact():
+    """MIG_PAGE/MIG_STATE ride the go-back-N machinery: a lossy link
+    retransmits until the image arrives bit-exact."""
+    cl = SimCluster(3, loss_prob=0.25, seed=11)
+    data = bytes((i * 37) % 256 for i in range(80_000))
+    svc = cl.nodes[0].device.service
+    xid = svc.transfer(2, Op.MIG_STATE, {"kind": "image"}, data)
+    got = cl.nodes[2].device.service.take_image(xid)
+    assert hashlib.sha256(got).hexdigest() == \
+        hashlib.sha256(data).hexdigest()
+    assert cl.fabric.stats["dropped"] > 0          # loss really happened
+    cl.run_until_idle(max_steps=500_000)
+
+
+def test_service_qps_are_invisible_to_containers():
+    """Kernel QPs live outside every container context: dumps and
+    admission scans never see them."""
+    cl = SimCluster(2)
+    c = cl.launch("a", 0)
+    dev = cl.nodes[0].device
+    dev.service.qp_for(1)
+    assert dev.service.ctx not in dev.contexts
+    assert all(qp.ctx is not c.ctx for qp in dev.service.ctx.qps)
+    assert c.ctx.qps == []
+
+
+# ---------------------------------------------------------------------------
+# bandwidth-aware links
+# ---------------------------------------------------------------------------
+
+
+def test_link_serialization_bounds_throughput():
+    """A link can carry at most bandwidth * time bytes; the sendbw app
+    offered load is clipped by the wire, not by the app's window."""
+    cl = SimCluster(2, link_bandwidth_Bps=1e8)     # 100 B/step
+    aa, ab = make_sendbw_pair(cl, msg_size=2048, window=16)
+    t0, ln = cl.fabric.now, cl.fabric.link(0, 1)
+    b0 = ln.tx_bytes
+    _run(cl, 2000)
+    # bytes are recorded at enqueue; whatever is still serialising in the
+    # link's standing queue has not been delivered yet
+    backlog = max(0.0, ln.busy_until - cl.fabric.now) * \
+        cl.fabric.bytes_per_step
+    delivered = ln.tx_bytes - b0 - backlog
+    capacity = (cl.fabric.now - t0) * cl.fabric.bytes_per_step
+    assert delivered <= capacity * 1.01 + 2048     # one packet of slack
+    assert delivered > 0.5 * capacity              # and the link is busy
+
+
+def test_migration_bytes_show_up_in_fabric_stats():
+    """Acceptance bar: tx_bytes during a migration > app-only baseline of
+    the identical scenario, and the difference is attributed to MIG ops."""
+    def scenario(migrate):
+        cl = SimCluster(3)
+        aa, ab = make_sendbw_pair(cl)
+        _run(cl, 50)
+        if migrate:
+            assert cl.migrate("recv", 2).ok
+        _run(cl, 200)
+        return dict(cl.fabric.stats)
+
+    base = scenario(migrate=False)
+    mig = scenario(migrate=True)
+    assert mig["tx_bytes"] > base["tx_bytes"]
+    assert base.get("mig_tx_bytes", 0) == 0
+    assert mig["mig_tx_bytes"] > 0
+
+
+def test_migration_timing_is_simclock_deterministic():
+    """downtime_s / transfer_s derive from fabric.now, so two identical
+    runs produce bit-identical figures (no wall-clock anywhere)."""
+    def one():
+        cl = SimCluster(3)
+        aa, ab = make_sendbw_pair(cl)
+        _run(cl, 50)
+        rep = cl.migrate("recv", 2, strategy="pre_copy")
+        return (rep.downtime_s, rep.transfer_s, rep.checkpoint_s,
+                rep.restore_s, rep.live_s,
+                tuple(r["wire_s"] for r in rep.rounds))
+
+    a, b = one(), one()
+    assert a == b
+    steps = a[0] / STEP_S                          # whole sim steps
+    assert a[0] > 0 and abs(steps - round(steps)) < 1e-6
+
+
+def test_admission_reads_measured_link_utilization():
+    """A busy link shrinks the measured headroom, so a transfer budget
+    that admits on an idle link rejects while traffic is flowing."""
+    from repro.orchestrator import AdmissionError
+    cl = SimCluster(3, link_bandwidth_Bps=1e8)
+    aa, ab = make_sendbw_pair(cl, msg_size=4096, window=16)
+    c, _ = _mr_container(cl, "bulk", 0, n_pages=16)
+    # idle link: admission passes with a budget sized for the raw rate
+    est = 16 * PAGE_SIZE + 4096
+    cl.orchestrator.max_transfer_s = est / 1e8 * 2.0
+    plan = cl.orchestrator.admit(c, cl.nodes[1])
+    assert plan.est_transfer_s <= cl.orchestrator.max_transfer_s
+    _run(cl, 2000)                                 # saturate link (0, 1)
+    util = cl.fabric.link_utilization(0, 1)
+    assert util > 0.5
+    with pytest.raises(AdmissionError, match="util"):
+        cl.orchestrator.admit(c, cl.nodes[1])
+
+
+# ---------------------------------------------------------------------------
+# adversity: loss on page streams, concurrent migrations on one link
+# ---------------------------------------------------------------------------
+
+
+def test_precopy_page_stream_recovers_from_loss():
+    """Loss injection on MIG_PAGE streams: go-back-N recovers and the
+    migrated MR contents are checksum-identical to the source."""
+    cl = SimCluster(3, loss_prob=0.1, seed=3)
+    c, mr = _mr_container(cl, "m", 0, n_pages=24)
+    want = hashlib.sha256(bytes(mr.buf)).hexdigest()
+    rep = cl.migrate("m", 2, strategy="pre_copy")
+    assert rep.ok
+    assert cl.fabric.stats["dropped"] > 0
+    got_mr = c.ctx.mrs[0]
+    assert got_mr is not mr                        # really restored
+    assert hashlib.sha256(bytes(got_mr.buf)).hexdigest() == want
+    assert c.node is cl.nodes[2]
+
+
+def test_postcopy_pull_stream_recovers_from_loss():
+    cl = SimCluster(3, loss_prob=0.1, seed=5)
+    c, mr = _mr_container(cl, "m", 0, n_pages=8)
+    want = hashlib.sha256(bytes(mr.buf)).hexdigest()
+    rep = cl.migrate("m", 2, strategy="post_copy")
+    assert rep.ok and rep.pager.remaining_pages > 0
+    while rep.pager.remaining_pages:
+        rep.pager.prefetch(4)
+    cl.run_until_idle(max_steps=500_000)           # drain wire charges
+    assert hashlib.sha256(bytes(c.ctx.mrs[0].buf)).hexdigest() == want
+    assert cl.fabric.stats["mig_tx_bytes"] > 8 * PAGE_SIZE
+
+
+def test_concurrent_migrations_share_one_link():
+    """Two migrations whose streams cross the same (src, dest) link:
+    both complete, and their combined throughput never exceeds the link
+    bandwidth (the shared FIFO serialises them)."""
+    cl = SimCluster(3, link_bandwidth_Bps=1e8)     # 100 B/step
+    ca, _ = _mr_container(cl, "m1", 0, n_pages=32)
+    cb, _ = _mr_container(cl, "m2", 0, n_pages=32)
+    orch = cl.orchestrator
+    orch.submit(ca, cl.nodes[2], strategy="pre_copy")
+    orch.submit(cb, cl.nodes[2], strategy="pre_copy")
+    t0 = cl.fabric.now
+    ln = cl.fabric.link(0, 2)
+    b0 = ln.tx_bytes
+    reports = orch.drain()
+    assert len(reports) == 2 and all(r.ok for r in reports)
+    assert ca.node is cl.nodes[2] and cb.node is cl.nodes[2]
+    backlog = max(0.0, ln.busy_until - cl.fabric.now) * \
+        cl.fabric.bytes_per_step
+    delivered = ln.tx_bytes - b0 - backlog
+    capacity = (cl.fabric.now - t0) * cl.fabric.bytes_per_step
+    assert delivered > 2 * 32 * PAGE_SIZE          # both streams went over
+    assert delivered <= capacity * 1.01 + 2048     # <= link bandwidth
+
+
+def test_transfer_timeout_aborts_stream_and_channel_recovers():
+    """A hopeless stream (here: total loss) times out, the kernel QP pair
+    is torn down (no eternal retransmission — the fabric still reaches
+    idle), and a fresh rendezvous works once the link heals."""
+    from repro.core.service import ServiceError
+    cl = SimCluster(2, loss_prob=1.0, seed=1)
+    svc = cl.nodes[0].device.service
+    with pytest.raises(ServiceError, match="not acked"):
+        svc.transfer(1, Op.MIG_STATE, {"kind": "x"}, b"d" * 20_000,
+                     max_steps=500)
+    cl.fabric.loss_prob = 0.0
+    cl.run_until_idle()                    # no zombie WQE keeps it busy
+    xid = svc.transfer(1, Op.MIG_STATE, {"kind": "x"}, b"d" * 20_000)
+    assert cl.nodes[1].device.service.take_image(xid) == b"d" * 20_000
+    assert not cl.nodes[1].device.service.images     # nothing orphaned
+
+
+def test_bare_controller_wire_failure_reports_instead_of_raising():
+    """A real stream failure on the bare controller path lands in the
+    same observable state as fail_at='transfer': a failed report with a
+    retry token — never an exception thrown mid-migration."""
+    from repro.core.migration import MigrationError
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+
+    def boom(*a, **k):
+        raise MigrationError("link died")
+
+    cl.migrator.stream_image = boom
+    rep = cl.migrate("recv", 2)
+    assert not rep.ok and rep.stage_failed == "transfer"
+    assert rep.attempt is not None and rep.attempt["image"]
+    assert isinstance(rep.transfer_error, MigrationError)
+
+
+def test_failed_attempts_release_service_channel_state():
+    """Rollback frees what a dead attempt parked in service channels —
+    at every failure stage, including ones that never built a retry
+    token (pre-copy checkpoint failure, post-copy transfer failure)."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    # pre-copy dies at checkpoint: round 0 already staged the whole
+    # footprint at the destination's service channel
+    rep = cl.migrate("recv", 2, strategy="pre_copy", fail_at="checkpoint")
+    assert not rep.ok and rep.rolled_back
+    assert not cl.nodes[2].device.service.staging
+    _run(cl, 600)
+    # post-copy dies at transfer with no retries: the frozen page store
+    # parked at the source must not outlive the rollback
+    rep = cl.migrate("recv", 2, strategy="post_copy", fail_at="transfer",
+                     retries=0)
+    assert not rep.ok and rep.rolled_back
+    assert not cl.nodes[1].device.service.page_store
+    assert not any(mr.pager for mr in cl.containers["recv"].ctx.mrs)
+    _run(cl, 600)
+    before = ab.received
+    _run(cl, 200)
+    assert ab.received > before                    # traffic recovered
+
+
+# ---------------------------------------------------------------------------
+# satellites: teardown back-pointers
+# ---------------------------------------------------------------------------
+
+
+def test_teardown_uses_owner_backpointers():
+    """QP/MR carry their owning context: destroy/dereg stay coherent
+    without scanning every context on the device."""
+    cl = SimCluster(2)
+    dev = cl.nodes[0].device
+    ctx1, ctx2 = dev.open_context(), dev.open_context()
+    pd1, pd2 = ctx1.alloc_pd(), ctx2.alloc_pd()
+    cq = ctx1.create_cq()
+    qp = pd1.create_qp(cq, cq)
+    mr = pd2.reg_mr(PAGE_SIZE)
+    assert qp.ctx is ctx1 and mr.ctx is ctx2
+    dev.destroy_qp(qp.qpn)
+    dev.dereg_mr(mr)
+    assert qp not in ctx1.qps and mr not in ctx2.mrs
+    assert dev.rkey_lookup(mr.rkey) is None
+    # double-free is a no-op, not a crash
+    dev.destroy_qp(qp.qpn)
+    dev.dereg_mr(mr)

@@ -125,6 +125,29 @@ def test_migration_preserves_ids():
     assert ch.h.cq(cqn).cqn == cqn
 
 
+def test_migrate_to_same_node_is_explicit_noop():
+    """dest == src returns a clearly-marked noop report, not a default
+    stop-and-copy report that looks like a successful (empty) move."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    before = ab.received
+    for strategy in (None, "pre_copy", "post_copy"):
+        kw = {} if strategy is None else {"strategy": strategy}
+        if strategy is None:
+            rep = cl.migrate("recv", 1, **kw)      # bare controller path
+        else:
+            from repro.orchestrator.strategies import make_strategy
+            rep = make_strategy(strategy).run(
+                cl.migrator, cl.containers["recv"], cl.nodes[1])
+        assert rep.strategy == "noop"
+        assert rep.ok and rep.pages_total == 0 and rep.image_bytes == 0
+    # nothing was stopped: the stream never hiccupped
+    _run(cl, 100)
+    assert ab.received > before
+    assert ab.channels[0].h.ctx.device.gid == 1
+
+
 def test_mr_keys_survive_migration():
     cl = SimCluster(3)
     aa, ab = make_sendbw_pair(cl)

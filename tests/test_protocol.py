@@ -97,6 +97,26 @@ def test_rnr_retry_when_recv_posted_late():
     assert c2.recv_bytes(0, 10) == b"early bird"
 
 
+def test_unknown_qpn_packets_are_counted():
+    """Packets addressed to a QPN the device doesn't know (stale address
+    after a migration, or a plain bug) are dropped — but observably."""
+    from repro.core.packets import Packet
+    cl = SimCluster(2)
+    c1, c2, *_ = make_channel_pair(cl)
+    assert cl.fabric.stats["unknown_qpn"] == 0
+    cl.fabric.send(Packet(op=Op.SEND, src_gid=0, src_qpn=c1.qpn,
+                          dest_gid=1, dest_qpn=999_999_999,
+                          payload=b"lost"))
+    cl.pump(5)
+    assert cl.fabric.stats["unknown_qpn"] == 1
+    # well-addressed traffic is unaffected
+    c2.post_recv(2)
+    c1.post_send_bytes(b"ok")
+    cl.run_until_idle()
+    assert c2.recv_bytes(0, 2) == b"ok"
+    assert cl.fabric.stats["unknown_qpn"] == 1
+
+
 def test_protection_keys_are_random_per_mr():
     cl = SimCluster(2)
     c1, c2, *_ = make_channel_pair(cl)
