@@ -15,8 +15,8 @@ sys.path.insert(0, ROOT)
 
 from benchmarks import (fig7_overhead, fig8_shadow, fig9_creation,  # noqa
                         fig10_mr_reg, fig11_qps, fig13_training_migration,
-                        fig_contention, fig_downtime, roofline_table,
-                        table1_sloc, table2_dump_sizes)
+                        fig_contention, fig_downtime, fig_qos,
+                        roofline_table, table1_sloc, table2_dump_sizes)
 
 MODULES = [
     ("table1_sloc", table1_sloc),
@@ -29,6 +29,7 @@ MODULES = [
     ("fig13_training_migration", fig13_training_migration),
     ("fig_downtime", fig_downtime),
     ("fig_contention", fig_contention),
+    ("fig_qos", fig_qos),
     ("roofline_table", roofline_table),
 ]
 

@@ -227,7 +227,8 @@ def restore_object(session: RestoreSession, cmd: str, entry: dict,
                        psn=p["psn"], payload=p["payload"],
                        raddr=p["raddr"], rkey=p["rkey"],
                        length=p["length"], first=p["first"],
-                       last=p["last"], wr_id=p["wr_id"])
+                       last=p["last"], wr_id=p["wr_id"],
+                       tenant=qp.tenant)
                 for p in entry["inflight"])
             qp.last_progress = dev.fabric.now
             qp.resume_pending = True                             # [MIGR]

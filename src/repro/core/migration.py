@@ -117,7 +117,9 @@ class MigrationController:
     def _restore(self, container, image_bytes: bytes, dest_node):
         image = msgpack.unpackb(image_bytes, raw=False,
                                 strict_map_key=False)
-        ctx = dest_node.device.open_context()
+        # tenant tag BEFORE restore builds QPs: QoS attribution follows
+        # the container to its new node                           # [QOS]
+        ctx = dest_node.device.open_context(tenant=container.name)
         session = dumplib.restore_context(ctx, image["verbs"],
                                           relocated=self.relocated)  # [MIGR]
         for qp in ctx.qps:                                       # [MIGR]

@@ -32,7 +32,9 @@ class Op(enum.Enum):
 
 
 # ops carried by the migration data plane (service channel); the fabric
-# accounts these separately so migration bandwidth use is observable
+# accounts these separately so migration bandwidth use is observable —
+# and the NIC-port QoS scheduler keys its migration traffic class on
+# exactly this set (repro.core.qos.classify)
 MIG_OPS = frozenset({Op.MIG_PAGE, Op.MIG_STATE, Op.MIG_ACK})
 
 
@@ -60,6 +62,10 @@ class Packet:
     wr_id: int = 0
     nak_code: Optional[NakCode] = None
     read_psn: int = 0                # responder PSN for READ_RESP streams
+    # QoS attribution: the container (tenant) whose QP emitted the packet,
+    # stamped at send time. Out-of-band metadata — a real NIC reads the
+    # owning QP's context the same way — so it never counts in nbytes().
+    tenant: Optional[str] = None
 
     @property
     def route(self) -> Tuple[int, int]:

@@ -1,0 +1,490 @@
+"""NIC-port QoS: traffic classes, weighted-fair scheduling, token buckets.
+
+The fabric's wire model (paper §4.2: the SoftRoCE role) used to give every
+(src, dest) pair a private full-bandwidth FIFO. A real NIC has one egress
+port per node whose capacity is *summed over all destinations*, and a
+converged dataplane (migration traffic riding the application fabric, the
+CoRD argument) makes that port a contended resource: one container's burst
+can starve a co-located migration stream or another tenant (the noisy-
+neighbor failure mode). This module is the scheduler that sits on that
+port:
+
+* two **traffic classes** — ``mig`` (service-channel ``MIG_*`` packets,
+  the migration data plane of §3.2/§3.4) and ``app`` (everything else) —
+  arbitrated by weighted deficit-round-robin; operators either *cap*
+  migration bandwidth (hard ceiling, non-work-conserving) or *guarantee*
+  it a minimum share (weight floor, work-conserving);
+* **per-tenant token buckets** keyed by the container that owns the
+  sending QP, so a tenant's sustained rate is bounded while short bursts
+  ride the bucket depth;
+* **work conservation** across everything that is not explicitly capped:
+  bandwidth an idle or bucket-throttled sender cannot use is immediately
+  available to everyone else.
+
+With QoS disabled (the default) every port degenerates to a single
+first-come-first-served queue and no bucket is consulted — scheduling
+adds nothing when it is not asked for, restating the paper's
+"no overhead when migration does not happen" claim for bandwidth
+arbitration.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Deque, Dict, List, Optional, Tuple
+
+from repro.core.packets import MIG_OPS, Packet
+
+# traffic-class names (per-class fabric.stats counters use these keys)
+CLASS_APP = "app"
+CLASS_MIG = "mig"
+
+# tenant key for packets nobody claimed (kernel QPs before tagging, bare
+# test fixtures): they ride the app class unbucketed unless an operator
+# configures a rate for this exact key
+UNATTRIBUTED = "_unattributed"
+
+
+def classify(pkt: Packet) -> str:
+    """Traffic class of one packet: the migration data plane is exactly
+    the service-channel MIG_* ops; everything else is application."""
+    return CLASS_MIG if pkt.op in MIG_OPS else CLASS_APP
+
+
+@dataclass
+class QoSConfig:
+    """Operator knobs for the per-port scheduler (docs/fabric-qos.md is
+    the operator guide; every field is validated at attach time).
+
+    ``enabled=False`` (default) bypasses classes and buckets entirely:
+    one FIFO per port, byte-identical arbitration to a single queue.
+    """
+    enabled: bool = False
+    # weighted-fair class arbitration (shares are weight / sum(weights)
+    # over backlogged classes)
+    app_weight: float = 1.0
+    mig_weight: float = 1.0
+    # hard ceiling on the migration class, as a fraction of port bandwidth
+    # (non-work-conserving: held even when the app class is idle)
+    migration_cap: Optional[float] = None
+    # minimum share guaranteed to a backlogged migration class, as a
+    # fraction of port bandwidth (implemented as a weight floor, so it is
+    # work-conserving: an idle migration class cedes it back)
+    migration_guarantee: Optional[float] = None
+    # per-tenant sustained rate (bytes/s) and burst depth (bytes); tenants
+    # not listed are unthrottled unless default_tenant_rate_Bps is set
+    tenant_rate_Bps: Dict[str, float] = field(default_factory=dict)
+    tenant_burst_bytes: Dict[str, float] = field(default_factory=dict)
+    default_tenant_rate_Bps: Optional[float] = None
+    default_burst_bytes: float = 64 * 1024
+
+    def validate(self) -> "QoSConfig":
+        if self.app_weight <= 0 or self.mig_weight <= 0:
+            raise ValueError("class weights must be > 0")
+        for name, frac in (("migration_cap", self.migration_cap),
+                           ("migration_guarantee",
+                            self.migration_guarantee)):
+            if frac is not None and not (0.0 < frac <= 1.0):
+                raise ValueError(f"{name} must be in (0, 1], got {frac}")
+        if (self.migration_cap is not None
+                and self.migration_guarantee is not None
+                and self.migration_cap < self.migration_guarantee):
+            raise ValueError("migration_cap below migration_guarantee")
+        for t, r in self.tenant_rate_Bps.items():
+            if r <= 0:
+                raise ValueError(f"tenant {t!r} rate must be > 0")
+        return self
+
+    def effective_weights(self) -> Dict[str, float]:
+        """Class weights with the migration guarantee folded in: a
+        guarantee g needs mig/(mig+app) >= g, i.e. a weight floor of
+        g/(1-g) * app_weight (g=1 degenerates to mig-only)."""
+        w_mig = self.mig_weight
+        g = self.migration_guarantee
+        if g is not None:
+            if g >= 1.0:
+                w_mig = float("inf")
+            else:
+                w_mig = max(w_mig, g / (1.0 - g) * self.app_weight)
+        return {CLASS_APP: self.app_weight, CLASS_MIG: w_mig}
+
+    def bucket_for(self, tenant: str) -> Optional[Tuple[float, float]]:
+        """(rate_Bps, burst_bytes) for a tenant, or None (unthrottled).
+
+        The default rate applies to *containers* only: the kernel
+        service tenants (``_kernel@gid``) and unattributed packets are
+        exempt unless an operator names that exact key — a blanket
+        default must not throttle the migration data plane below the
+        class share the cap/guarantee knobs govern."""
+        rate = self.tenant_rate_Bps.get(tenant)
+        if rate is None:
+            if tenant == UNATTRIBUTED or tenant.startswith("_kernel@"):
+                return None
+            rate = self.default_tenant_rate_Bps
+        if rate is None:
+            return None
+        burst = self.tenant_burst_bytes.get(tenant,
+                                            self.default_burst_bytes)
+        # floor: a bucket shallower than one max-size packet could never
+        # pass anything and would wedge the tenant's FIFO forever
+        return rate, max(burst, 4096.0)
+
+
+class TokenBucket:
+    """Deterministic token bucket in fabric-step time: refill is a pure
+    function of the step delta (rate_per_step * elapsed), so identical
+    runs refill identically — no wall clock anywhere."""
+
+    __slots__ = ("rate_per_step", "burst", "tokens", "last")
+
+    def __init__(self, rate_per_step: float, burst: float,
+                 now: int = 0):
+        self.rate_per_step = rate_per_step
+        self.burst = float(burst)
+        self.tokens = float(burst)          # starts full: bursts ride it
+        self.last = now
+
+    def refill(self, now: int):
+        if now > self.last:
+            self.tokens = min(self.burst,
+                              self.tokens
+                              + (now - self.last) * self.rate_per_step)
+            self.last = now
+
+    def peek(self, n: int, now: int) -> bool:
+        self.refill(now)
+        return self.tokens >= n
+
+    def take(self, n: int):
+        self.tokens -= n
+
+
+class _ClassQueue:
+    """One traffic class on one port: per-tenant FIFOs served round-robin
+    plus the class's DRR deficit counter."""
+
+    __slots__ = ("name", "weight", "tenants", "order", "deficit",
+                 "backlog_bytes", "backlog_packets", "bucket",
+                 "tx_bytes", "tx_packets")
+
+    def __init__(self, name: str, weight: float):
+        self.name = name
+        self.weight = weight
+        self.tenants: Dict[str, Deque[Packet]] = {}
+        self.order: Deque[str] = deque()      # round-robin tenant order
+        self.deficit = 0.0
+        self.backlog_bytes = 0
+        self.backlog_packets = 0
+        self.bucket: Optional[TokenBucket] = None   # class cap (mig)
+        self.tx_bytes = 0
+        self.tx_packets = 0
+
+    def push(self, tenant: str, pkt: Packet):
+        q = self.tenants.get(tenant)
+        if q is None:
+            q = self.tenants[tenant] = deque()
+            self.order.append(tenant)
+        q.append(pkt)
+        self.backlog_bytes += pkt.nbytes()
+        self.backlog_packets += 1
+
+    def drain_all(self) -> List[Packet]:
+        """Remove and return every queued packet (tenant-RR order);
+        used when a port is re-built under a new QoS config."""
+        out: List[Packet] = []
+        while self.backlog_packets:
+            for t in list(self.order):
+                q = self.tenants[t]
+                if q:
+                    out.append(q.popleft())
+                    self.backlog_packets -= 1
+                    self.backlog_bytes -= out[-1].nbytes()
+        self.tenants.clear()
+        self.order.clear()
+        self.deficit = 0.0
+        return out
+
+
+class _Flow:
+    """Per-(src, dest) accounting view, kept for observability and test
+    compatibility with the old per-pair Link objects: ``tx_*`` counts at
+    enqueue, ``queued_bytes`` is the not-yet-transmitted backlog, and
+    ``busy_until`` is the step the backlog would clear at port rate."""
+
+    __slots__ = ("port", "tx_bytes", "tx_packets", "queued_bytes")
+
+    def __init__(self, port: "EgressPort"):
+        self.port = port
+        self.tx_bytes = 0
+        self.tx_packets = 0
+        self.queued_bytes = 0
+
+    @property
+    def busy_until(self) -> float:
+        bps = self.port.fabric.bytes_per_step
+        if bps <= 0:
+            return float(self.port.fabric.now)
+        return self.port.fabric.now + self.queued_bytes / bps
+
+
+class EgressPort:
+    """One node's NIC egress port: finite bandwidth shared across every
+    destination, arbitrated by the QoS scheduler above. The port is
+    step-driven like the rest of the fabric: each ``service()`` call
+    spends one step's byte budget (``fabric.bytes_per_step``) on queued
+    packets; budget a class saves toward an oversized head-of-line packet
+    persists in its DRR deficit, budget nobody can use is discarded (an
+    idle wire transmits nothing retroactively)."""
+
+    def __init__(self, fabric, gid: int, cfg: QoSConfig):
+        self.fabric = fabric
+        self.gid = gid
+        self.cfg = cfg
+        self.classes: Dict[str, _ClassQueue] = {}
+        self.buckets: Dict[str, TokenBucket] = {}   # tenant -> bucket
+        self.delivery: Deque[Tuple[int, Packet]] = deque()
+        self.flows: Dict[int, _Flow] = {}           # dest gid -> view
+        self.tx_bytes = 0                           # transmitted (wire)
+        self.tx_packets = 0
+        self._window: Deque[Tuple[int, int]] = deque()  # (enq_at, nbytes)
+        self._win_bytes = 0
+        self._build_classes()
+
+    # -- configuration -------------------------------------------------------
+    def _build_classes(self):
+        queued = []
+        for cq in self.classes.values():
+            queued.extend(cq.drain_all())
+        if self.cfg.enabled:
+            weights = self.cfg.effective_weights()
+            self.classes = {n: _ClassQueue(n, w)
+                            for n, w in weights.items()}
+            cap = self.cfg.migration_cap
+            if cap is not None:
+                rate = cap * self.fabric.bytes_per_step
+                # burst: a handful of steps' worth so the cap is a rate,
+                # not a per-step quantisation artefact
+                self.classes[CLASS_MIG].bucket = TokenBucket(
+                    rate, max(8 * rate, 8192.0), self.fabric.now)
+        else:
+            self.classes = {CLASS_APP: _ClassQueue(CLASS_APP, 1.0)}
+        for pkt in queued:              # re-queue under the new shape
+            self._class_of(pkt).push(self._tenant_of(pkt), pkt)
+
+    def reconfigure(self, cfg: QoSConfig):
+        self.cfg = cfg.validate()
+        self.buckets.clear()            # rebuilt lazily per tenant
+        self._build_classes()
+
+    def on_bandwidth_change(self):
+        """Port rate changed: the mig-cap bucket is priced off it."""
+        self._build_classes()
+
+    def _class_of(self, pkt: Packet) -> _ClassQueue:
+        if not self.cfg.enabled:
+            return self.classes[CLASS_APP]
+        return self.classes[classify(pkt)]
+
+    def _tenant_of(self, pkt: Packet) -> str:
+        if not self.cfg.enabled:
+            # one FIFO per port: strict arrival order, no arbitration —
+            # byte-identical to the pre-QoS shared-queue wire model
+            return UNATTRIBUTED
+        return pkt.tenant if pkt.tenant is not None else UNATTRIBUTED
+
+    def _bucket(self, tenant: str) -> Optional[TokenBucket]:
+        if not self.cfg.enabled:
+            return None
+        b = self.buckets.get(tenant)
+        if b is None and tenant not in self.buckets:
+            spec = self.cfg.bucket_for(tenant)
+            b = None if spec is None else TokenBucket(
+                spec[0] * self.fabric.step_s(), spec[1], self.fabric.now)
+            self.buckets[tenant] = b
+        return b
+
+    def flow(self, dest_gid: int) -> _Flow:
+        fl = self.flows.get(dest_gid)
+        if fl is None:
+            fl = self.flows[dest_gid] = _Flow(self)
+        return fl
+
+    # -- enqueue (called from Fabric.send) -----------------------------------
+    def enqueue(self, pkt: Packet, now: int):
+        n = pkt.nbytes()
+        fl = self.flow(pkt.dest_gid)
+        fl.tx_bytes += n
+        fl.tx_packets += 1
+        fl.queued_bytes += n
+        self._window.append((now, n))
+        self._win_bytes += n
+        self._trim(now)
+        self._class_of(pkt).push(self._tenant_of(pkt), pkt)
+
+    # -- utilization window --------------------------------------------------
+    def _trim(self, now: int):
+        horizon = self.fabric.utilization_window
+        while self._window and self._window[0][0] <= now - horizon:
+            self._win_bytes -= self._window.popleft()[1]
+
+    def window_bytes(self, now: int) -> int:
+        self._trim(now)
+        return self._win_bytes
+
+    @property
+    def backlog_bytes(self) -> int:
+        return sum(cq.backlog_bytes for cq in self.classes.values())
+
+    @property
+    def backlog_packets(self) -> int:
+        return sum(cq.backlog_packets for cq in self.classes.values())
+
+    def in_flight(self) -> int:
+        return self.backlog_packets + len(self.delivery)
+
+    # -- the scheduler -------------------------------------------------------
+    def _eligible_head(self, cq: _ClassQueue, now: int) -> bool:
+        """True iff some tenant FIFO in the class has a head packet the
+        buckets would let on the wire right now."""
+        if not cq.backlog_packets:
+            return False
+        for t in cq.order:
+            q = cq.tenants.get(t)
+            if not q:
+                continue
+            n = q[0].nbytes()
+            if cq.bucket is not None and not cq.bucket.peek(n, now):
+                return False        # class cap gates every tenant in it
+            b = self._bucket(t)
+            if b is None or b.peek(n, now):
+                return True
+        return False
+
+    def _drain_class(self, cq: _ClassQueue, now: int) -> int:
+        """Transmit eligible head packets round-robin across the class's
+        tenants while the DRR deficit covers them; returns packets sent."""
+        sent = 0
+        progress = True
+        while progress and cq.backlog_packets:
+            progress = False
+            for _ in range(len(cq.order)):
+                t = cq.order[0]
+                cq.order.rotate(-1)
+                q = cq.tenants.get(t)
+                if not q:
+                    continue
+                pkt = q[0]
+                n = pkt.nbytes()
+                if cq.deficit < n:
+                    continue
+                if cq.bucket is not None and not cq.bucket.peek(n, now):
+                    continue
+                b = self._bucket(t)
+                if b is not None and not b.peek(n, now):
+                    continue
+                q.popleft()
+                cq.backlog_packets -= 1
+                cq.backlog_bytes -= n
+                cq.deficit -= n
+                if cq.bucket is not None:
+                    cq.bucket.take(n)
+                if b is not None:
+                    b.take(n)
+                self._transmit(cq, pkt, n, now)
+                sent += 1
+                progress = True
+        return sent
+
+    def _transmit(self, cq: _ClassQueue, pkt: Packet, n: int, now: int):
+        self.tx_bytes += n
+        self.tx_packets += 1
+        cq.tx_bytes += n
+        cq.tx_packets += 1
+        fl = self.flows.get(pkt.dest_gid)
+        if fl is not None:
+            fl.queued_bytes -= n
+        fab = self.fabric
+        if fab.rng.random() < fab.loss_prob:
+            # serialisation time was spent before the wire dropped it
+            fab.stats["dropped"] += 1
+            return
+        self.delivery.append((now + fab.latency, pkt))
+
+    def service(self, now: int):
+        """Spend one step's byte budget. Weighted sharing happens by
+        handing each *eligible* class its weight-proportional slice of
+        the remaining budget; a class that empties (or throttles) returns
+        its unusable deficit to the pool, so the port is work-conserving
+        across everything the caps and buckets allow."""
+        if not self.backlog_packets:
+            return
+        # throttling observability: one count per (tenant, step) whose
+        # head packet is waiting on bucket tokens right now
+        for cq in self.classes.values():
+            for t in cq.order:
+                q = cq.tenants.get(t)
+                if not q:
+                    continue
+                b = self._bucket(t)
+                if b is not None and not b.peek(q[0].nbytes(), now):
+                    self.fabric.stats["qos_bucket_deferrals"] += 1
+        budget = self.fabric.bytes_per_step
+        for _ in range(4):              # redistribution rounds
+            elig = [cq for cq in self.classes.values()
+                    if self._eligible_head(cq, now)]
+            if not elig or budget <= 1e-9:
+                break
+            if any(cq.weight == float("inf") for cq in elig):
+                wsum = sum(1.0 for cq in elig
+                           if cq.weight == float("inf"))
+                shares = [(cq, budget / wsum
+                           if cq.weight == float("inf") else 0.0)
+                          for cq in elig]
+            else:
+                wsum = sum(cq.weight for cq in elig)
+                shares = [(cq, budget * cq.weight / wsum) for cq in elig]
+            budget = 0.0
+            sent_any = 0
+            for cq, share in shares:
+                cq.deficit += share
+                sent_any += self._drain_class(cq, now)
+            # reclaim deficit stranded in classes with nothing eligible
+            for cq in self.classes.values():
+                if cq.deficit > 0 and not self._eligible_head(cq, now):
+                    budget += cq.deficit
+                    cq.deficit = 0.0
+            if not sent_any and budget <= 1e-9:
+                break       # every eligible class is saving for a big head
+
+    # -- delivery ------------------------------------------------------------
+    def pop_due(self, now: int):
+        dq = self.delivery
+        while dq and dq[0][0] <= now:
+            yield dq.popleft()[1]
+
+    def drop_to(self, gid: int) -> int:
+        """Drain every undelivered packet destined to ``gid`` (the node
+        departed): scheduler queues and the latency pipe both."""
+        dropped = 0
+        for cq in self.classes.values():
+            for t, q in cq.tenants.items():
+                keep = deque()
+                for pkt in q:
+                    if pkt.dest_gid == gid:
+                        dropped += 1
+                        cq.backlog_packets -= 1
+                        cq.backlog_bytes -= pkt.nbytes()
+                    else:
+                        keep.append(pkt)
+                cq.tenants[t] = keep
+        keep = deque()
+        for at, pkt in self.delivery:
+            if pkt.dest_gid == gid:
+                dropped += 1
+            else:
+                keep.append((at, pkt))
+        self.delivery = keep
+        fl = self.flows.pop(gid, None)
+        if fl is not None:
+            fl.queued_bytes = 0
+        return dropped

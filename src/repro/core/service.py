@@ -39,8 +39,12 @@ class ServiceChannel:
         self.device = device
         # kernel context: holds the service PD/CQ/QPs/MRs but is NOT
         # registered in device.contexts, so dump_context never sees it and
-        # admission's per-container scans skip it.
-        self.ctx = Context(device, ctx_id=-1)
+        # admission's per-container scans skip it. Its tenant key exists
+        # only for QoS observability — migration traffic is classed by op
+        # (MIG_*), not by tenant, and operators would not bucket the
+        # kernel (doing so throttles migration below its class share).
+        self.ctx = Context(device, ctx_id=-1,
+                           tenant=f"_kernel@{device.gid}")
         self.pd = self.ctx.alloc_pd()
         self.cq = self.ctx.create_cq(depth=1 << 16)
         self._peers: Dict[int, QueuePair] = {}     # peer gid -> kernel QP

@@ -33,12 +33,22 @@ def _retx(qp, pkt: Packet):
     resume handshake has updated qp.dest_*."""                 # [MIGR]
     pkt.src_gid, pkt.src_qpn = qp.device.gid, qp.qpn             # [MIGR]
     pkt.dest_gid, pkt.dest_qpn = qp.dest_gid, qp.dest_qpn        # [MIGR]
+    # Karn's algorithm: a retransmitted PSN yields no RTT sample (the
+    # eventual ACK is ambiguous between the two transmissions)
+    qp._send_time.pop(pkt.psn, None)
     qp.device.fabric.send(pkt)
 
 
 def _mk(qp, op, **kw) -> Packet:
     return Packet(op=op, src_gid=qp.device.gid, src_qpn=qp.qpn,
-                  dest_gid=qp.dest_gid, dest_qpn=qp.dest_qpn, **kw)
+                  dest_gid=qp.dest_gid, dest_qpn=qp.dest_qpn,
+                  tenant=qp.tenant, **kw)
+
+
+def _track_send(qp, pkt: Packet):
+    """First transmission of a new PSN: record its send step so the ACK
+    can produce an RTT sample (RFC 6298 §3)."""
+    qp._send_time[pkt.psn] = qp.device.fabric.now
 
 
 # ---------------------------------------------------------------------------
@@ -64,7 +74,7 @@ def requester(qp):
         for pkt in qp.inflight:
             _retx(qp, pkt)
         qp.last_progress = now
-        qp.rto = min(qp.rto * 2, qp.RETRANS_TIMEOUT * 64)
+        qp.rto = min(qp.rto * 2, qp.MAX_RTO)   # RFC 6298 §5.5 backoff
         return
     budget = qp.WINDOW - len(qp.inflight)
     while budget > 0:
@@ -80,6 +90,7 @@ def requester(qp):
             wr.last_psn = qp.sq_psn
             qp.sq_psn += 1
             qp.inflight.append(pkt)
+            _track_send(qp, pkt)
             _emit(qp, pkt)
             qp.pending_comp.append((wr.last_psn, wr.wr_id, "READ",
                                     wr.sge.length))
@@ -98,6 +109,7 @@ def requester(qp):
         wr.last_psn = qp.sq_psn
         qp.sq_psn += 1
         qp.inflight.append(pkt)
+        _track_send(qp, pkt)
         _emit(qp, pkt)
         budget -= 1
         if last:
@@ -196,13 +208,39 @@ def responder(qp):
 # ---------------------------------------------------------------------------
 
 
+def _rtt_sample(qp, sample: float):
+    """RFC 6298 §2 update: first sample seeds SRTT/RTTVAR, later samples
+    blend with alpha=1/8, beta=1/4; RTO = SRTT + max(G, 4*RTTVAR) with
+    clock granularity G = 1 fabric step, clamped to [MIN_RTO, MAX_RTO]."""
+    if qp.srtt is None:
+        qp.srtt = sample
+        qp.rttvar = sample / 2.0
+    else:
+        qp.rttvar = 0.75 * qp.rttvar + 0.25 * abs(qp.srtt - sample)
+        qp.srtt = 0.875 * qp.srtt + 0.125 * sample
+    qp.rto = min(max(qp.srtt + max(1.0, 4.0 * qp.rttvar), qp.MIN_RTO),
+                 qp.MAX_RTO)
+
+
 def _ack_up_to(qp, psn: int):
+    now = qp.device.fabric.now
+    # RTT sample from the cumulative-ACK edge (Karn: only if that PSN was
+    # never retransmitted), BEFORE the per-PSN bookkeeping is released
+    t_sent = qp._send_time.get(psn)
+    if t_sent is not None:
+        _rtt_sample(qp, now - t_sent)
     while qp.inflight and qp.inflight[0].psn <= psn:
-        qp.inflight.popleft()
+        p = qp.inflight.popleft()
+        qp._send_time.pop(p.psn, None)
     if psn >= qp.una:
         qp.una = psn + 1
-        qp.last_progress = qp.device.fabric.now
-        qp.rto = qp.RETRANS_TIMEOUT        # progress: reset the backoff
+        qp.last_progress = now
+        # NOTE: a backed-off RTO is NOT reset on progress alone (RFC 6298
+        # §5.7) — only a valid RTT sample re-prices it. Resetting here
+        # re-armed a spurious-timeout limit cycle on deep-queue ports:
+        # every fresh window queued behind the previous timeout's
+        # duplicates, timed out again before its first ACK could cross,
+        # and (Karn) no sample ever seeded the estimator.
     while qp.pending_comp and qp.pending_comp[0][0] <= psn:
         _, wr_id, opcode, blen = qp.pending_comp.popleft()
         qp.send_cq.push(_wc(wr_id, _success(), opcode, blen, qp.qpn))
@@ -225,6 +263,10 @@ def completer(qp):
             if pkt.nak_code == NakCode.STOPPED:                  # [MIGR]
                 if qp.state == QPState.RTS:                      # [MIGR]
                     qp.modify(QPState.PAUSED, system=True)       # [MIGR]
+                # the pause is not a round trip: anything still
+                # unsampled would otherwise yield an RTT sample the
+                # size of the partner's downtime (Karn across pauses)
+                qp._send_time.clear()
                 # drop everything in flight; resume retransmits   # [MIGR]
                 continue                                         # [MIGR]
             # go-back-N: retransmit from the requested psn
@@ -242,6 +284,10 @@ def completer(qp):
             _emit(qp, _mk(qp, Op.RESUME_ACK, psn=qp.epsn - 1))   # [MIGR]
         elif pkt.op == Op.RESUME_ACK:                            # [MIGR]
             qp.resume_pending = False                            # [MIGR]
+            # pre-migration send stamps span the whole pause — not a
+            # round trip; drop them so the cumulative ack below cannot
+            # seed SRTT with the partner's downtime
+            qp._send_time.clear()
             _ack_up_to(qp, pkt.psn)                              # [MIGR]
             for p in qp.inflight:                                # [MIGR]
                 _retx(qp, p)                                     # [MIGR]

@@ -1,83 +1,53 @@
 """Software fabric: deterministic packet router between nodes.
 
-Plays the role SoftRoCE plays in the paper — a software implementation of
-the wire protocol that lets the OS inspect and control everything. The
-fabric is synchronous and step-driven (no threads): ``pump()`` delivers
-in-flight packets and runs every QP's requester/responder/completer tasks
-once; determinism makes protocol tests exact. Loss injection exercises the
-go-back-N retransmission path that migration relies on.
+Plays the role SoftRoCE plays in the paper (§4.2) — a software
+implementation of the wire protocol that lets the OS inspect and control
+everything. The fabric is synchronous and step-driven (no threads):
+``pump()`` delivers in-flight packets and runs every QP's
+requester/responder/completer tasks once; determinism makes protocol
+tests exact. Loss injection exercises the go-back-N retransmission path
+that migration (§3.4) relies on.
 
-Time model: one pump step is ``STEP_S`` seconds of NIC time. Every
-(src_gid, dest_gid) pair is a link with finite bandwidth — each packet
-occupies the link for ``nbytes()/bytes_per_step`` steps before the
-propagation latency starts, and packets on one link serialise FIFO behind
-each other. Migration traffic (service-channel MIG_* packets) crosses the
-same links as application traffic, so checkpoint streams and demand-paging
-pulls contend for bandwidth instead of being free, and ``now`` is the
-single source of truth for every ``transfer_s``/``downtime_s`` figure.
+Time model: one pump step is ``STEP_S`` seconds of NIC time. Every node
+has one **egress port** (``repro.core.qos.EgressPort``) whose bandwidth
+is shared across *all* destinations — a real NIC port sums over flows,
+so two streams leaving the same node contend even when they target
+different peers. Within a port, a QoS scheduler arbitrates migration
+(service-channel ``MIG_*``) against application traffic and rate-limits
+tenants with token buckets; with QoS disabled the port is a single FIFO.
+Packets occupy their port for ``nbytes()/bytes_per_step`` steps of budget
+before the propagation latency starts, and ``now`` is the single source
+of truth for every ``transfer_s``/``downtime_s`` figure.
 """
 from __future__ import annotations
 
 import random
-from collections import defaultdict, deque
-from typing import Dict, List, Optional, Tuple
+from collections import defaultdict
+from typing import Dict, List, Optional
 
 from repro.core.packets import MIG_OPS, Packet
+from repro.core.qos import EgressPort, QoSConfig
 
 # sim-time -> wall-time conversion: one fabric pump step models roughly a
 # microsecond of NIC time. All MigrationReport second-figures derive from
 # (fabric.now delta) * STEP_S, never from wall-clock timers.
 STEP_S = 1e-6
 
-# window (in steps) over which link_utilization() measures traffic
+# window (in steps) over which port_utilization() measures traffic
 UTILIZATION_WINDOW = 1000
-
-
-class Link:
-    """One directed (src_gid, dest_gid) link: a shared FIFO with finite
-    bandwidth. ``busy_until`` is the (fractional-step) time the last queued
-    byte finishes serialising; the windowed byte counter feeds measured
-    utilization for orchestrator admission."""
-
-    __slots__ = ("busy_until", "queue", "tx_bytes", "tx_packets",
-                 "_window", "_win_bytes")
-
-    def __init__(self):
-        self.busy_until = 0.0
-        self.queue: deque = deque()            # (deliver_at, packet), FIFO
-        self.tx_bytes = 0
-        self.tx_packets = 0
-        self._window: deque = deque()          # (sent_at, nbytes)
-        self._win_bytes = 0
-
-    def record(self, now: int, nbytes: int):
-        self.tx_bytes += nbytes
-        self.tx_packets += 1
-        self._window.append((now, nbytes))
-        self._win_bytes += nbytes
-        self._trim(now)
-
-    def _trim(self, now: int):
-        # retention is capped at UTILIZATION_WINDOW so the deque stays
-        # bounded on workloads that never query utilization
-        while self._window and \
-                self._window[0][0] <= now - UTILIZATION_WINDOW:
-            self._win_bytes -= self._window.popleft()[1]
-
-    def window_bytes(self, now: int) -> int:
-        """Bytes enqueued over the last UTILIZATION_WINDOW steps."""
-        self._trim(now)
-        return self._win_bytes
 
 
 class Fabric:
     def __init__(self, *, loss_prob: float = 0.0, seed: int = 0,
-                 latency_steps: int = 1, bandwidth_Bps: float = 40e9 / 8):
+                 latency_steps: int = 1, bandwidth_Bps: float = 40e9 / 8,
+                 qos: Optional[QoSConfig] = None):
         self.loss_prob = loss_prob
         self.rng = random.Random(seed)
         self.latency = max(1, latency_steps)
         self.now = 0
-        self._links: Dict[Tuple[int, int], Link] = {}
+        self.qos = (qos or QoSConfig()).validate()
+        self.utilization_window = UTILIZATION_WINDOW
+        self._ports: Dict[int, EgressPort] = {}       # src gid -> port
         self._devices: Dict[int, "RdmaDevice"] = {}   # gid -> device
         self.stats = defaultdict(int)
         self.trace: Optional[List[Packet]] = None
@@ -86,8 +56,14 @@ class Fabric:
     # -- bandwidth -----------------------------------------------------------
     def set_bandwidth(self, bandwidth_Bps: float):
         self.bandwidth = bandwidth_Bps
-        # bytes one link can serialise per pump step
+        # bytes one egress port can serialise per pump step
         self.bytes_per_step = bandwidth_Bps * STEP_S
+        for port in self._ports.values():
+            port.on_bandwidth_change()
+
+    @staticmethod
+    def step_s() -> float:
+        return STEP_S
 
     @property
     def time_s(self) -> float:
@@ -95,70 +71,108 @@ class Fabric:
         timing figures."""
         return self.now * STEP_S
 
+    # -- QoS -----------------------------------------------------------------
+    def configure_qos(self, qos: QoSConfig):
+        """Swap the scheduler config on every port. Queued packets are
+        re-filed under the new class shape (tenant-RR order within each
+        old class); intended at quiet points, tolerated mid-flight."""
+        self.qos = qos.validate()
+        for port in self._ports.values():
+            port.reconfigure(qos)
+
+    def set_tenant_rate(self, tenant: str, rate_Bps: Optional[float],
+                        burst_bytes: Optional[float] = None):
+        """Operator knob: (re)price one tenant's token bucket on every
+        port. ``rate_Bps=None`` removes the throttle."""
+        if rate_Bps is None:
+            self.qos.tenant_rate_Bps.pop(tenant, None)
+            self.qos.tenant_burst_bytes.pop(tenant, None)
+        else:
+            if rate_Bps <= 0:
+                raise ValueError("tenant rate must be > 0")
+            self.qos.tenant_rate_Bps[tenant] = rate_Bps
+            if burst_bytes is not None:
+                self.qos.tenant_burst_bytes[tenant] = burst_bytes
+        for port in self._ports.values():
+            port.buckets.pop(tenant, None)      # re-built lazily
+
     # -- topology ------------------------------------------------------------
     def attach(self, gid: int, device):
         assert gid not in self._devices, f"gid {gid} in use"
         self._devices[gid] = device
 
     def detach(self, gid: int):
+        """Remove a device. Undelivered packets addressed to the departed
+        gid are drained into ``stats['unroutable']`` immediately — they
+        could only ever hit the unroutable path at delivery time, and
+        leaving them queued would keep ``in_flight()`` from quiescing."""
         self._devices.pop(gid, None)
+        for port in self._ports.values():
+            self.stats["unroutable"] += port.drop_to(gid)
 
     def device(self, gid: int):
         return self._devices.get(gid)
 
-    def link(self, src_gid: int, dest_gid: int) -> Link:
-        key = (src_gid, dest_gid)
-        ln = self._links.get(key)
-        if ln is None:
-            ln = self._links[key] = Link()
-        return ln
+    def port(self, gid: int) -> EgressPort:
+        p = self._ports.get(gid)
+        if p is None:
+            p = self._ports[gid] = EgressPort(self, gid, self.qos)
+        return p
+
+    def link(self, src_gid: int, dest_gid: int):
+        """Per-(src, dest) accounting view (the old Link surface):
+        ``tx_bytes``/``tx_packets`` count at enqueue, ``busy_until``
+        reflects this flow's share of the port backlog."""
+        return self.port(src_gid).flow(dest_gid)
+
+    def port_utilization(self, gid: int) -> float:
+        """Measured fraction of the node's egress-port capacity committed
+        over the UTILIZATION_WINDOW horizon (admission reads this, not an
+        analytic guess). Two signals, whichever is worse: bytes enqueued
+        over the trailing window (offered load), and the standing backlog
+        still awaiting the scheduler (a drained-but-booked port is not
+        free capacity)."""
+        port = self._ports.get(gid)
+        if port is None or self.bytes_per_step <= 0:
+            return 0.0
+        cap = self.utilization_window * self.bytes_per_step
+        offered = port.window_bytes(self.now) / cap
+        backlog = (port.backlog_bytes / self.bytes_per_step) \
+            / self.utilization_window
+        return min(1.0, max(offered, backlog))
 
     def link_utilization(self, src_gid: int, dest_gid: int) -> float:
-        """Measured fraction of the link's capacity committed over the
-        UTILIZATION_WINDOW horizon (admission reads this, not an analytic
-        guess). Two signals, whichever is worse: bytes enqueued over the
-        trailing window (offered load), and the standing backlog still
-        serialising (a drained-but-booked link is not free capacity)."""
-        ln = self._links.get((src_gid, dest_gid))
-        if ln is None or self.bytes_per_step <= 0:
-            return 0.0
-        cap = UTILIZATION_WINDOW * self.bytes_per_step
-        offered = ln.window_bytes(self.now) / cap
-        backlog = max(0.0, ln.busy_until - self.now) / UTILIZATION_WINDOW
-        return min(1.0, max(offered, backlog))
+        """Back-compat alias: capacity is a property of the *source
+        node's egress port* now, not of a (src, dest) pair."""
+        return self.port_utilization(src_gid)
 
     # -- wire ----------------------------------------------------------------
     def send(self, pkt: Packet):
         n = pkt.nbytes()
         self.stats["tx_packets"] += 1
         self.stats["tx_bytes"] += n
-        if pkt.op in MIG_OPS:
+        if pkt.op in MIG_OPS:       # per-class accounting (CLASS_MIG)
             self.stats["mig_tx_packets"] += 1
             self.stats["mig_tx_bytes"] += n
+        else:                       # per-class accounting (CLASS_APP)
+            self.stats["app_tx_packets"] += 1
+            self.stats["app_tx_bytes"] += n
         if self.trace is not None:
             self.trace.append(pkt)
-        ln = self.link(pkt.src_gid, pkt.dest_gid)
-        # the packet occupies the link whether or not it is then lost —
-        # serialisation time is spent before the wire can drop anything
-        start = max(float(self.now), ln.busy_until)
-        ln.busy_until = start + n / self.bytes_per_step
-        ln.record(self.now, n)
-        if self.rng.random() < self.loss_prob:
-            self.stats["dropped"] += 1
-            return
-        ln.queue.append((ln.busy_until + self.latency, pkt))
+        self.port(pkt.src_gid).enqueue(pkt, self.now)
 
     def in_flight(self) -> int:
-        return sum(len(ln.queue) for ln in self._links.values())
+        return sum(p.in_flight() for p in self._ports.values())
 
     def pump(self, steps: int = 1):
-        """Advance time: deliver due packets, then run all QP tasks."""
+        """Advance time: run every port's scheduler for one step's byte
+        budget, deliver packets whose latency expired, then run all QP
+        tasks."""
         for _ in range(steps):
             self.now += 1
-            for ln in self._links.values():
-                q = ln.queue
-                while q and q[0][0] <= self.now:
-                    pkt = q.popleft()[1]
+            for port in self._ports.values():
+                port.service(self.now)
+                for pkt in port.pop_due(self.now):
                     dev = self._devices.get(pkt.dest_gid)
                     if dev is None:
                         self.stats["unroutable"] += 1   # [MIGR] old address

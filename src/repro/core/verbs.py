@@ -156,7 +156,9 @@ class SharedReceiveQueue:
 class QueuePair:
     MTU = 1024
     WINDOW = 64
-    RETRANS_TIMEOUT = 200       # fabric steps
+    RETRANS_TIMEOUT = 200       # fabric steps: initial RTO (RFC 6298 §2.1)
+    MIN_RTO = 8                 # floor for the adaptive timer
+    MAX_RTO = 200 * 64          # backoff ceiling (the old x64 cap)
 
     def __init__(self, pd: "ProtectionDomain", qpn: int,
                  send_cq: CompletionQueue, recv_cq: CompletionQueue,
@@ -165,6 +167,9 @@ class QueuePair:
         self.ctx = pd.ctx           # owner back-pointer: O(1) teardown
         self.device: "RdmaDevice" = pd.ctx.device
         self.qpn = qpn
+        # QoS attribution: packets this QP emits are charged to the
+        # owning context's tenant (the container name)          # [QOS]
+        self.tenant: Optional[str] = pd.ctx.tenant
         self.send_cq = send_cq
         self.recv_cq = recv_cq
         self.srq = srq
@@ -179,12 +184,21 @@ class QueuePair:
         self.una = 0                    # oldest unacknowledged PSN
         self.inflight: Deque[Packet] = deque()
         self.last_progress = 0
-        # adaptive retransmission timeout: starts at RETRANS_TIMEOUT,
-        # doubles on every timeout-triggered retransmit (bounded), resets
-        # when an ACK advances una. Without backoff, queueing delay on a
-        # bandwidth-contended link exceeds the fixed timer and go-back-N
-        # floods the link with duplicates (congestion collapse).
+        # Adaptive retransmission timeout, RFC 6298-style: every ACK of a
+        # never-retransmitted packet yields an RTT sample (Karn's
+        # algorithm excludes retransmits) feeding SRTT/RTTVAR, and
+        # RTO = SRTT + max(G, 4*RTTVAR) clamped to [MIN_RTO, MAX_RTO].
+        # Uncontended links converge to a small RTO (fast loss recovery);
+        # contended links see queueing delay in their samples and back
+        # off, so go-back-N does not flood a slow port with duplicate
+        # windows (congestion collapse). Timeout still doubles the RTO
+        # until the next valid sample.
         self.rto = self.RETRANS_TIMEOUT
+        self.srtt: Optional[float] = None
+        self.rttvar: Optional[float] = None
+        # psn -> first-tx step; a retransmit (or a migration pause)
+        # evicts the entry, which IS Karn's exclusion: no stamp, no sample
+        self._send_time: Dict[int, int] = {}
         self.pending_comp: Deque = deque()   # (last_psn, wr_id, opcode, len)
         # responder
         self.rq: Deque[RecvWR] = deque()
@@ -254,9 +268,13 @@ class ProtectionDomain:
 class Context:
     """Per-container verbs context (the unit of dump_context)."""
 
-    def __init__(self, device: "RdmaDevice", ctx_id: int):
+    def __init__(self, device: "RdmaDevice", ctx_id: int,
+                 tenant: Optional[str] = None):
         self.device = device
         self.ctx_id = ctx_id
+        # tenant key for NIC-port QoS (the container name); QPs snapshot
+        # it at create time, so tag the context before building QPs
+        self.tenant = tenant
         self.pds: List[ProtectionDomain] = []
         self.mrs: List[MemoryRegion] = []
         self.cqs: List[CompletionQueue] = []
@@ -319,8 +337,8 @@ class RdmaDevice:
         return self._srqn
 
     # -- object creation -----------------------------------------------------------
-    def open_context(self) -> Context:
-        ctx = Context(self, len(self.contexts))
+    def open_context(self, tenant: Optional[str] = None) -> Context:
+        ctx = Context(self, len(self.contexts), tenant=tenant)
         self.contexts.append(ctx)
         return ctx
 

@@ -98,17 +98,28 @@ class Orchestrator:
                     f"MRN {mr.mrn} already allocated on node {dev.gid}")
         checks.append("qpn_range")
         est = sum(mr.size for mr in container.ctx.mrs) + 4096
-        # the migration stream shares the (src, dest) link with whatever
-        # traffic is already on it: budget against the *measured* headroom
-        # from the fabric's utilization window, not the raw link rate
+        # The migration stream leaves through the source node's NIC port,
+        # shared with every other flow that node originates: budget
+        # against the *measured* port headroom from the fabric's
+        # utilization window, not the raw port rate. With QoS enabled the
+        # scheduler reshapes that headroom — a migration guarantee floors
+        # the stream's share regardless of app backlog, and a migration
+        # cap ceilings it regardless of idle capacity.
         fabric = self.controller.fabric
-        util = fabric.link_utilization(container.node.gid, dest_node.gid)
-        effective_bw = self.controller.bw * max(1e-6, 1.0 - util)
+        util = fabric.port_utilization(container.node.gid)
+        share = max(1e-6, 1.0 - util)
+        qos = getattr(fabric, "qos", None)
+        if qos is not None and qos.enabled:
+            if qos.migration_guarantee is not None:
+                share = max(share, qos.migration_guarantee)
+            if qos.migration_cap is not None:
+                share = min(share, qos.migration_cap)
+        effective_bw = self.controller.bw * share
         est_s = est / effective_bw
         if self.max_transfer_s is not None and est_s > self.max_transfer_s:
             raise AdmissionError(
-                f"estimated transfer {est_s:.4f}s (link util {util:.0%}) "
-                f"exceeds budget {self.max_transfer_s:.4f}s")
+                f"estimated transfer {est_s:.4f}s (egress-port util "
+                f"{util:.0%}) exceeds budget {self.max_transfer_s:.4f}s")
         checks.append("bandwidth")
         return MigrationPlan(container.name, container.node.gid,
                              dest_node.gid, est, est_s, checks)

@@ -302,7 +302,7 @@ class PreCopy(MigrationStrategy):
         image = msgpack.unpackb(image_bytes, raw=False,
                                 strict_map_key=False)
         ctl._teardown_source(container)
-        ctx = dest_node.device.open_context()
+        ctx = dest_node.device.open_context(tenant=container.name)
         session = dumplib.restore_context(ctx, image["verbs"],
                                           relocated=ctl.relocated)
         for qp in ctx.qps:
@@ -519,7 +519,7 @@ class PostCopy(MigrationStrategy):
         image = msgpack.unpackb(image_bytes, raw=False,
                                 strict_map_key=False)
         ctl._teardown_source(container)
-        ctx = dest_node.device.open_context()
+        ctx = dest_node.device.open_context(tenant=container.name)
         session = dumplib.restore_context(ctx, image["verbs"],
                                           relocated=ctl.relocated)
         for qp in ctx.qps:

@@ -14,6 +14,7 @@ import msgpack
 
 from repro.core.migration import MigrationController
 from repro.core.namespace import GlobalNamespace
+from repro.core.qos import QoSConfig
 from repro.core.transport import Fabric
 from repro.core.verbs import Context, RdmaDevice
 from repro.orchestrator import Orchestrator
@@ -41,7 +42,9 @@ class Container:
         self.node = node
         self.app = app                 # object with step()/state accessors
         self.alive = True
-        self.ctx: Context = node.device.open_context()
+        # the container name is the QoS tenant key: every packet its QPs
+        # emit is charged to this name's token bucket at the egress port
+        self.ctx: Context = node.device.open_context(tenant=name)
         node.containers.append(self)
         self.restore_session = None
 
@@ -73,9 +76,12 @@ class Container:
 class SimCluster:
     def __init__(self, n_nodes: int, *, loss_prob: float = 0.0,
                  seed: int = 0, link_bandwidth_Bps: Optional[float] = None,
-                 node_capacity: Optional[int] = None):
+                 node_capacity: Optional[int] = None,
+                 qos: Optional[QoSConfig] = None):
         fab_kw = {} if link_bandwidth_Bps is None else \
             {"bandwidth_Bps": link_bandwidth_Bps}
+        if qos is not None:
+            fab_kw["qos"] = qos
         self.fabric = Fabric(loss_prob=loss_prob, seed=seed, **fab_kw)
         self.namespace = GlobalNamespace()
         self.nodes = [Node(self, gid, capacity=node_capacity)
@@ -87,7 +93,9 @@ class SimCluster:
                                          background=self.step_all)
         self.containers: Dict[str, Container] = {}
 
-    def launch(self, name: str, node_idx: int, app=None) -> Container:
+    def launch(self, name: str, node_idx: int, app=None, *,
+               rate_Bps: Optional[float] = None,
+               burst_bytes: Optional[float] = None) -> Container:
         node = self.nodes[node_idx]
         if node.capacity is not None and \
                 len(node.containers) >= node.capacity:
@@ -95,7 +103,23 @@ class SimCluster:
                              f"({node.capacity})")
         c = Container(name, node, app)
         self.containers[name] = c
+        if rate_Bps is not None:
+            self.set_tenant_rate(name, rate_Bps, burst_bytes)
         return c
+
+    # -- per-container QoS knobs (operator surface) --------------------------
+    def set_tenant_rate(self, name: str, rate_Bps: Optional[float],
+                        burst_bytes: Optional[float] = None):
+        """(Re)price a container's egress token bucket on every NIC port
+        (the bucket follows the container across migrations because the
+        tenant key is the container name). ``rate_Bps=None`` unthrottles.
+        Requires a QoS-enabled fabric to have any effect."""
+        self.fabric.set_tenant_rate(name, rate_Bps, burst_bytes)
+
+    def configure_qos(self, qos: QoSConfig):
+        """Swap the fabric-wide scheduler config (class weights,
+        migration cap/guarantee, tenant buckets) on every port."""
+        self.fabric.configure_qos(qos)
 
     def migrate(self, name: str, dest_idx: int, *,
                 strategy: Optional[str] = None, **kw):

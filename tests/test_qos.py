@@ -1,0 +1,368 @@
+"""NIC-port QoS scheduler tests: the node-level egress port (capacity
+summed over destinations), weighted-fair class arbitration with a
+migration cap/guarantee, per-tenant token buckets, per-class fabric.stats
+counters, detach draining, and the RFC 6298-style adaptive RTO."""
+import pytest
+
+from repro.core.packets import Op, Packet
+from repro.core.qos import (CLASS_APP, CLASS_MIG, QoSConfig, TokenBucket,
+                            classify)
+from repro.core.transport import Fabric, STEP_S
+from repro.core.verbs import PAGE_SIZE, QueuePair
+from repro.runtime.apps import SendBwApp
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import connect_pair
+from tests.helpers import make_sendbw_pair
+
+BPS = 2e8        # 200 B/step ports: a windowed sender saturates one
+
+
+def _run(cl, n):
+    for _ in range(n):
+        cl.step_all()
+
+
+def _pair(cl, name, src, dst, *, window=16):
+    """Named sendbw pair so tenant attribution is observable."""
+    A = cl.launch(name, src)
+    B = cl.launch(name + "-sink", dst)
+    aa = SendBwApp(msg_size=4096, window=window)
+    aa.attach(A, sender=True)
+    A.app = aa
+    ab = SendBwApp(msg_size=4096, window=window)
+    ab.attach(B, sender=False)
+    B.app = ab
+    connect_pair(aa.channels[0], ab.channels[0])
+    return aa, ab
+
+
+def _mig_backlog(cl, src, dst, nbytes=400_000):
+    """Park a large fire-and-forget service message so the mig class on
+    ``src``'s port stays backlogged while the fabric pumps."""
+    svc = cl.nodes[src].device.service
+    svc.post(dst, Op.MIG_STATE, {"kind": "fill", "noack": True},
+             b"m" * nbytes)
+    return svc
+
+
+# ---------------------------------------------------------------------------
+# the port model: capacity is per node, summed over destinations
+# ---------------------------------------------------------------------------
+
+
+def test_port_capacity_is_shared_across_destinations():
+    """Two flows leaving node 0 for *different* peers: under the old
+    per-(src,dest) link model each had full bandwidth; a NIC port sums
+    over flows, so their combined delivery is bounded by one port."""
+    cl = SimCluster(3, link_bandwidth_Bps=BPS)
+    a1, b1 = _pair(cl, "t1", 0, 1)
+    a2, b2 = _pair(cl, "t2", 0, 2)
+    t0 = cl.fabric.now
+    port = cl.fabric.port(0)
+    tx0 = port.tx_bytes
+    _run(cl, 3000)
+    transmitted = port.tx_bytes - tx0
+    capacity = (cl.fabric.now - t0) * cl.fabric.bytes_per_step
+    assert transmitted <= capacity * 1.01 + 4096
+    assert transmitted > 0.5 * capacity            # and the port is busy
+    assert b1.received > 0 and b2.received > 0     # neither flow starved
+
+
+def test_work_conservation_single_backlogged_class():
+    """QoS enabled but only the app class offers load: it gets the whole
+    port (bandwidth reserved for migration is not wasted while no
+    migration happens — the paper's no-overhead claim for scheduling)."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS,
+                    qos=QoSConfig(enabled=True, migration_guarantee=0.7))
+    aa, ab = _pair(cl, "only", 0, 1)
+    t0 = cl.fabric.now
+    port = cl.fabric.port(0)
+    _run(cl, 3000)
+    transmitted = port.classes[CLASS_APP].tx_bytes
+    capacity = (cl.fabric.now - t0) * cl.fabric.bytes_per_step
+    assert transmitted > 0.9 * capacity
+
+
+def test_weight_ratio_under_saturation():
+    """Both classes saturating one port: transmitted bytes split by the
+    configured weights (3:1 here) within scheduler quantisation."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS,
+                    qos=QoSConfig(enabled=True, app_weight=1.0,
+                                  mig_weight=3.0))
+    aa, ab = _pair(cl, "app", 0, 1)
+    _run(cl, 200)                                  # app reaches saturation
+    _mig_backlog(cl, 0, 1)
+    port = cl.fabric.port(0)
+    m0 = port.classes[CLASS_MIG].tx_bytes
+    a0 = port.classes[CLASS_APP].tx_bytes
+    _run(cl, 1500)                                 # both classes backlogged
+    mig = port.classes[CLASS_MIG].tx_bytes - m0
+    app = port.classes[CLASS_APP].tx_bytes - a0
+    assert mig > 0 and app > 0
+    ratio = mig / app
+    assert 2.0 < ratio < 4.5, f"expected ~3:1 split, got {ratio:.2f}"
+
+
+def test_migration_guarantee_floors_share_and_cap_ceils_it():
+    """guarantee: a backlogged mig class gets at least its floor under app
+    saturation. cap: mig never exceeds its ceiling even on an idle port
+    (non-work-conserving by design)."""
+    # -- guarantee ---------------------------------------------------------
+    cl = SimCluster(2, link_bandwidth_Bps=BPS,
+                    qos=QoSConfig(enabled=True, migration_guarantee=0.6))
+    aa, ab = _pair(cl, "app", 0, 1)
+    _run(cl, 200)
+    _mig_backlog(cl, 0, 1)
+    port = cl.fabric.port(0)
+    m0, t0, now0 = port.classes[CLASS_MIG].tx_bytes, port.tx_bytes, \
+        cl.fabric.now
+    _run(cl, 1200)
+    mig = port.classes[CLASS_MIG].tx_bytes - m0
+    total = port.tx_bytes - t0
+    assert mig / total > 0.55, f"guarantee not honoured: {mig/total:.2f}"
+    # -- cap ---------------------------------------------------------------
+    cl = SimCluster(2, link_bandwidth_Bps=BPS,
+                    qos=QoSConfig(enabled=True, migration_cap=0.3))
+    _mig_backlog(cl, 0, 1)
+    port = cl.fabric.port(0)
+    now0 = cl.fabric.now
+    _run(cl, 2000)
+    mig = port.classes[CLASS_MIG].tx_bytes
+    capacity = (cl.fabric.now - now0) * cl.fabric.bytes_per_step
+    # ceiling plus the cap bucket's burst depth and one packet of slack
+    assert mig <= 0.3 * capacity + 8192 + 2048, \
+        f"cap exceeded: {mig} of {capacity}"
+    assert mig > 0.15 * capacity                   # but it does flow
+
+
+def test_tenant_token_bucket_bounds_rate_without_starving_others():
+    """A bucketed tenant is held to its sustained rate (+burst); the
+    co-located unthrottled tenant absorbs the freed bandwidth."""
+    rate = 0.2 * BPS
+    cl = SimCluster(3, link_bandwidth_Bps=BPS,
+                    qos=QoSConfig(enabled=True,
+                                  tenant_rate_Bps={"greedy": rate}))
+    g_tx, g_rx = _pair(cl, "greedy", 0, 1)
+    p_tx, p_rx = _pair(cl, "polite", 0, 2)
+    _run(cl, 1500)            # burn greedy's initial burst; settle RTTs
+    g0, p0, t0 = g_rx.received, p_rx.received, cl.fabric.now
+    _run(cl, 4000)
+    elapsed = cl.fabric.now - t0
+    greedy_bytes = (g_rx.received - g0) * 4096
+    allowed = rate * STEP_S * elapsed               # sustained rate
+    assert greedy_bytes <= allowed * 1.2 + 64 * 1024, \
+        f"bucket leaked: {greedy_bytes} > {allowed}"
+    assert g_rx.received > g0                       # shaped, not starved
+    # freed bandwidth crossed to the unthrottled tenant
+    assert p_rx.received - p0 > 2 * (g_rx.received - g0)
+
+
+def test_bucket_refill_determinism():
+    """Token refill is a pure function of the step delta: identical runs
+    yield identical stats, clocks, and per-tenant progress; and the
+    arithmetic refills exactly rate_per_step * elapsed."""
+    b = TokenBucket(rate_per_step=10.0, burst=100.0, now=0)
+    b.take(100.0)
+    assert not b.peek(51, now=5)                   # 5 steps -> 50 tokens
+    assert b.peek(50, now=5) and b.tokens == 50.0
+    assert b.peek(100, now=1000) and b.tokens == 100.0   # capped at burst
+
+    def one():
+        cl = SimCluster(3, link_bandwidth_Bps=BPS,
+                        qos=QoSConfig(enabled=True,
+                                      tenant_rate_Bps={"greedy": 0.3 * BPS}))
+        g_tx, g_rx = _pair(cl, "greedy", 0, 1)
+        p_tx, p_rx = _pair(cl, "polite", 0, 2)
+        _run(cl, 1500)
+        return (g_rx.received, p_rx.received, cl.fabric.now,
+                dict(cl.fabric.stats))
+
+    assert one() == one()
+
+
+def test_per_class_stats_counters():
+    """fabric.stats splits the wire into exactly two classes: app_* and
+    mig_* sum to the totals, and MIG bytes only appear when the
+    migration data plane actually runs."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 100)
+    s = cl.fabric.stats
+    assert s["mig_tx_bytes"] == 0 and s["mig_tx_packets"] == 0
+    assert s["app_tx_bytes"] == s["tx_bytes"]
+    assert s["app_tx_packets"] == s["tx_packets"]
+    assert cl.migrate("recv", 2, strategy="pre_copy").ok
+    _run(cl, 200)
+    s = cl.fabric.stats
+    assert s["mig_tx_bytes"] > 0
+    assert s["app_tx_bytes"] + s["mig_tx_bytes"] == s["tx_bytes"]
+    assert s["app_tx_packets"] + s["mig_tx_packets"] == s["tx_packets"]
+
+
+def test_packets_carry_tenant_attribution():
+    """Send-time attribution: app packets are stamped with the owning
+    container's name, service-channel packets with the kernel tenant."""
+    cl = SimCluster(3)
+    cl.fabric.trace = []
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 20)
+    _mig_backlog(cl, 0, 2, nbytes=10_000)
+    _run(cl, 50)
+    tenants = {p.tenant for p in cl.fabric.trace if classify(p) == CLASS_APP
+               and p.op in (Op.SEND, Op.WRITE)}
+    assert "send" in tenants
+    mig_tenants = {p.tenant for p in cl.fabric.trace
+                   if classify(p) == CLASS_MIG}
+    assert mig_tenants == {"_kernel@0"}
+
+
+def test_qos_config_validation():
+    with pytest.raises(ValueError, match="cap below"):
+        QoSConfig(enabled=True, migration_cap=0.2,
+                  migration_guarantee=0.5).validate()
+    with pytest.raises(ValueError, match="weights"):
+        QoSConfig(enabled=True, app_weight=0.0).validate()
+    with pytest.raises(ValueError, match="migration_cap"):
+        QoSConfig(enabled=True, migration_cap=1.5).validate()
+    with pytest.raises(ValueError, match="rate"):
+        Fabric().set_tenant_rate("t", 0.0)
+
+
+def test_default_rate_exempts_kernel_and_unattributed():
+    """A blanket default_tenant_rate_Bps throttles containers, never the
+    migration data plane's kernel tenants (that's what the class
+    cap/guarantee knobs are for) — unless named explicitly."""
+    from repro.core.qos import UNATTRIBUTED
+    cfg = QoSConfig(enabled=True, default_tenant_rate_Bps=1e6).validate()
+    assert cfg.bucket_for("some-container") is not None
+    assert cfg.bucket_for("_kernel@0") is None
+    assert cfg.bucket_for(UNATTRIBUTED) is None
+    explicit = QoSConfig(enabled=True,
+                         tenant_rate_Bps={"_kernel@0": 1e6}).validate()
+    assert explicit.bucket_for("_kernel@0") is not None
+
+
+def test_disabled_qos_is_single_fifo():
+    """Default config: one class, one queue, no buckets consulted — the
+    scheduler must add nothing when not asked for."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    aa, ab = _pair(cl, "a", 0, 1)
+    _run(cl, 500)
+    port = cl.fabric.port(0)
+    assert set(port.classes) == {CLASS_APP}
+    assert all(b is None for b in port.buckets.values())
+    assert cl.fabric.stats["qos_bucket_deferrals"] == 0
+
+
+# ---------------------------------------------------------------------------
+# detach: undelivered packets drain into stats["unroutable"]
+# ---------------------------------------------------------------------------
+
+
+def test_detach_drains_queued_packets_to_unroutable():
+    """Packets queued toward a departing gid are counted and dropped at
+    detach time, so in_flight() can quiesce instead of carrying a
+    backlog no delivery loop will ever claim."""
+    fab = Fabric(bandwidth_Bps=1e8)          # 100 B/step: queues build up
+
+    class _Sink:
+        def receive(self, pkt):
+            pass
+
+        def run_tasks(self):
+            pass
+
+        def idle(self):
+            return True
+
+    fab.attach(0, _Sink())
+    fab.attach(1, _Sink())
+    fab.attach(2, _Sink())
+    for i in range(10):
+        fab.send(Packet(op=Op.SEND, src_gid=0, src_qpn=1, dest_gid=1,
+                        dest_qpn=2, psn=i, payload=b"x" * 1024))
+        fab.send(Packet(op=Op.SEND, src_gid=0, src_qpn=1, dest_gid=2,
+                        dest_qpn=2, psn=i, payload=b"x" * 1024))
+    fab.pump(3)                              # a few transmit, most queue
+    assert fab.in_flight() > 0
+    before = fab.in_flight()
+    fab.detach(1)
+    assert fab.stats["unroutable"] > 0
+    assert fab.in_flight() < before
+    # nothing addressed to gid 1 survives anywhere in the fabric
+    fab.run_until_idle()
+    assert fab.in_flight() == 0
+
+
+def test_detach_keeps_other_destinations_flowing():
+    cl = SimCluster(3, link_bandwidth_Bps=BPS)
+    aa, ab = _pair(cl, "keep", 0, 2)
+    _run(cl, 200)
+    got = ab.received
+    cl.fabric.detach(1)                      # unrelated node departs
+    _run(cl, 200)
+    assert ab.received > got
+
+
+# ---------------------------------------------------------------------------
+# adaptive RTO (RFC 6298-style SRTT/RTTVAR)
+# ---------------------------------------------------------------------------
+
+
+def test_rto_converges_below_initial_on_uncontended_link():
+    """A quiet link's RTT is a few steps; the estimator must settle the
+    timer far below the initial 200-step RTO so tail loss recovers
+    fast — the old fixed-doubling timer never got faster."""
+    cl = SimCluster(2)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 300)
+    qp = aa.channels[0].h.qp(aa.channels[0].qpn)
+    assert qp.srtt is not None
+    assert qp.rto < QueuePair.RETRANS_TIMEOUT / 2
+    assert qp.rto >= QueuePair.MIN_RTO
+
+
+def test_rto_tracks_contention_upward():
+    """Queueing delay on a saturated port shows up in RTT samples: the
+    adaptive timer rises above its uncontended level instead of firing
+    spuriously and flooding the port with duplicate windows."""
+    def settled_rto(bw):
+        cl = SimCluster(2, link_bandwidth_Bps=bw)
+        aa, ab = make_sendbw_pair(cl, msg_size=4096, window=16)
+        _run(cl, 1500)
+        return aa.channels[0].h.qp(aa.channels[0].qpn).rto
+
+    assert settled_rto(2e8) > 2 * settled_rto(5e9)
+
+
+def test_karn_no_sample_from_retransmits():
+    """A retransmitted PSN must not feed the estimator (its ACK is
+    ambiguous); losing a window leaves srtt untouched until fresh
+    packets flow."""
+    cl = SimCluster(2, loss_prob=1.0, seed=7)
+    aa, ab = make_sendbw_pair(cl)
+    for _ in range(600):
+        cl.step_all()                        # everything lost: retx only
+    qp = aa.channels[0].h.qp(aa.channels[0].qpn)
+    assert qp.srtt is None                   # not one valid sample
+    assert qp.rto > QueuePair.RETRANS_TIMEOUT   # backoff engaged
+    cl.fabric.loss_prob = 0.0
+    for _ in range(qp.MAX_RTO + 2000):
+        cl.step_all()
+    assert ab.received > 0                   # and the stream recovered
+    assert qp.srtt is not None               # fresh packets resumed sampling
+
+
+def test_migration_still_deterministic_with_qos():
+    """Sim-clock figures stay bit-identical across runs with the
+    scheduler enabled (the qos figure depends on this)."""
+    def one():
+        cl = SimCluster(3, qos=QoSConfig(enabled=True,
+                                         migration_guarantee=0.5))
+        aa, ab = make_sendbw_pair(cl)
+        _run(cl, 50)
+        rep = cl.migrate("recv", 2, strategy="pre_copy")
+        return (rep.ok, rep.downtime_s, rep.transfer_s, rep.live_s)
+
+    a, b = one(), one()
+    assert a == b and a[0]

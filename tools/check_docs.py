@@ -1,0 +1,87 @@
+#!/usr/bin/env python3
+"""Docs health check, run by CI next to the tier-1 tests.
+
+Two gates:
+
+1. Markdown link check: every relative link in README.md, ROADMAP.md,
+   and docs/**.md must resolve to a file in the repo (anchors are
+   stripped; absolute http(s)/mailto links are not fetched).
+2. Paper-section check: every module under src/repro/core/ must have a
+   module docstring that names the paper section/figure/table it
+   implements (the repo's fidelity-audit convention; docs/paper-map.md
+   is the cross-reference table built on it).
+
+Exit code 0 iff both gates pass; failures are listed one per line.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# [text](target) — target group; images (![...]) match the same shape
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+# inline/fenced code spans are stripped before link extraction
+_FENCE = re.compile(r"```.*?```", re.S)
+_CODE = re.compile(r"`[^`]*`")
+# a paper anchor: §N, Fig. N, Table N, or Listing N
+_PAPER_REF = re.compile(r"§\s*\d|Fig\.\s*\d|Table\s*\d|Listing\s*\d")
+
+
+def md_files():
+    for p in (ROOT / "README.md", ROOT / "ROADMAP.md"):
+        if p.exists():
+            yield p
+    yield from sorted((ROOT / "docs").glob("**/*.md"))
+
+
+def check_links() -> list:
+    errors = []
+    for md in md_files():
+        text = _CODE.sub("", _FENCE.sub("", md.read_text()))
+        for target in _LINK.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (md.parent / rel).resolve()
+            if not resolved.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target}")
+    return errors
+
+
+def check_core_docstrings() -> list:
+    errors = []
+    for py in sorted((ROOT / "src/repro/core").glob("*.py")):
+        if py.name == "__init__.py":
+            continue
+        doc = ast.get_docstring(ast.parse(py.read_text()))
+        if not doc:
+            errors.append(f"{py.relative_to(ROOT)}: missing module "
+                          f"docstring")
+        elif not _PAPER_REF.search(doc):
+            errors.append(f"{py.relative_to(ROOT)}: module docstring "
+                          f"names no paper section (§N / Fig. N / "
+                          f"Table N / Listing N)")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_core_docstrings()
+    for e in errors:
+        print(f"FAIL: {e}")
+    n_md = len(list(md_files()))
+    n_py = len(list((ROOT / "src/repro/core").glob("*.py"))) - 1
+    if not errors:
+        print(f"docs OK: {n_md} markdown files linked, "
+              f"{n_py} core modules cite their paper section")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
