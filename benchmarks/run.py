@@ -15,7 +15,7 @@ sys.path.insert(0, ROOT)
 
 from benchmarks import (fig7_overhead, fig8_shadow, fig9_creation,  # noqa
                         fig10_mr_reg, fig11_qps, fig13_training_migration,
-                        fig_contention, fig_downtime, fig_qos,
+                        fig_contention, fig_downtime, fig_incast, fig_qos,
                         roofline_table, table1_sloc, table2_dump_sizes)
 
 MODULES = [
@@ -30,6 +30,7 @@ MODULES = [
     ("fig_downtime", fig_downtime),
     ("fig_contention", fig_contention),
     ("fig_qos", fig_qos),
+    ("fig_incast", fig_incast),
     ("roofline_table", roofline_table),
 ]
 

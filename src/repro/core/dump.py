@@ -80,6 +80,11 @@ def dump_object(obj) -> dict:
              "srqn": obj.srq.srqn if obj.srq else None,
              # requester/responder/completer ("QP tasks") state:
              "sq_psn": obj.sq_psn, "una": obj.una, "epsn": obj.epsn,
+             # operator-set RNR attributes follow the QP across a
+             # migration (transient rnr_tries/backoff state does not:
+             # the resume handshake restarts the window anyway)
+             "rnr_retry": obj.rnr_retry,
+             "min_rnr_timer": obj.min_rnr_timer,
              "sq": [_send_wr(w) for w in obj.sq],
              "rq": [_recv_wr(w) for w in obj.rq],
              "inflight": [_packet(p) for p in obj.inflight],
@@ -211,6 +216,10 @@ def restore_object(session: RestoreSession, cmd: str, entry: dict,
             qp.sq_psn = entry["sq_psn"]
             qp.una = entry["una"]
             qp.epsn = entry["epsn"]
+            # .get(): images dumped before the RNR attributes existed
+            qp.rnr_retry = entry.get("rnr_retry", 7)
+            qp.min_rnr_timer = entry.get("min_rnr_timer",
+                                         qp.min_rnr_timer)
             qp.sq = deque(session._rsend(w) for w in entry["sq"])
             qp.rq = deque(session._rrecv(w) for w in entry["rq"])
             qp.pending_comp = deque(tuple(t_) for t_ in

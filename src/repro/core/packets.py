@@ -37,11 +37,31 @@ class Op(enum.Enum):
 # exactly this set (repro.core.qos.classify)
 MIG_OPS = frozenset({Op.MIG_PAGE, Op.MIG_STATE, Op.MIG_ACK})
 
+# pure acknowledgement/control ops: they carry no payload to process, so
+# the ingress (receive-side) port delivers them past the bounded request
+# queue — dropping a peer's ACK to signal *our* receive pressure would
+# only amplify the congestion it reports
+CTRL_OPS = frozenset({Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK})
+
+# reliable *request* ops: an ingress-queue overflow on one of these draws
+# a receiver-not-ready NAK so the sender backs off (IBA RNR semantics)
+# instead of burning retransmission timeouts. READ_RESP is a response —
+# it cannot be NAKed; an overflow there is recovered by the requester's
+# go-back-N timer re-issuing the READ_REQ.
+RNR_OPS = frozenset({Op.SEND, Op.WRITE, Op.READ_REQ,
+                     Op.MIG_PAGE, Op.MIG_STATE, Op.MIG_ACK})
+
 
 class NakCode(enum.Enum):
     PSN_SEQ_ERR = "PSN_SEQ_ERR"
     INVALID_RKEY = "INVALID_RKEY"
     STOPPED = "NAK_STOPPED"          # [MIGR]
+    # receiver not ready (IBA §9.7.5.2.8): the responder has no receive
+    # posted, or the NIC's ingress queue overflowed. The requester backs
+    # off min_rnr_timer and retries up to rnr_retry times; exhaustion
+    # moves the QP to ERROR. Distinct from PSN_SEQ_ERR: an RNR NAK is
+    # *not* a sequence gap and must not trigger immediate go-back-N.
+    RNR = "RNR"
 
 
 @dataclass

@@ -26,6 +26,16 @@ first-come-first-served queue and no bucket is consulted — scheduling
 adds nothing when it is not asked for, restating the paper's
 "no overhead when migration does not happen" claim for bandwidth
 arbitration.
+
+The receive side is modeled too: every node owns one **ingress port**
+(``IngressPort``) with finite receive-processing capacity and a bounded
+request queue shared across all senders — receive processing is where
+kernel-path RDMA designs actually pay (the CoRD measurement), and incast
+(N senders converging on one receiver) is invisible as long as receiving
+is free. Queue overflow draws a *receiver-not-ready* NAK
+(``NakCode.RNR``) so senders back off instead of timing out; with the
+default unlimited capacity the ingress port is a pass-through and the
+wire model is byte-identical to the egress-only one.
 """
 from __future__ import annotations
 
@@ -33,7 +43,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
 
-from repro.core.packets import MIG_OPS, Packet
+from repro.core.packets import (CTRL_OPS, MIG_OPS, NakCode, Op, Packet,
+                                RNR_OPS)
 
 # traffic-class names (per-class fabric.stats counters use these keys)
 CLASS_APP = "app"
@@ -203,6 +214,38 @@ class _ClassQueue:
         self.order.clear()
         self.deficit = 0.0
         return out
+
+
+def _drr_spend(classes, budget: float, eligible, drain):
+    """One step's weighted-DRR budget spend, shared by the egress and
+    ingress ports: hand each *eligible* class its weight-proportional
+    slice (infinite weights split the whole budget among themselves),
+    let it drain, then reclaim deficit stranded in classes with nothing
+    eligible and redistribute — so the port is work-conserving across
+    everything the eligibility rules (caps, buckets, backlog) allow."""
+    for _ in range(4):              # redistribution rounds
+        elig = [cq for cq in classes if eligible(cq)]
+        if not elig or budget <= 1e-9:
+            break
+        if any(cq.weight == float("inf") for cq in elig):
+            wsum = sum(1.0 for cq in elig if cq.weight == float("inf"))
+            shares = [(cq, budget / wsum
+                       if cq.weight == float("inf") else 0.0)
+                      for cq in elig]
+        else:
+            wsum = sum(cq.weight for cq in elig)
+            shares = [(cq, budget * cq.weight / wsum) for cq in elig]
+        budget = 0.0
+        sent_any = 0
+        for cq, share in shares:
+            cq.deficit += share
+            sent_any += drain(cq)
+        for cq in classes:
+            if cq.deficit > 0 and not eligible(cq):
+                budget += cq.deficit
+                cq.deficit = 0.0
+        if not sent_any and budget <= 1e-9:
+            break       # every eligible class is saving for a big head
 
 
 class _Flow:
@@ -411,11 +454,9 @@ class EgressPort:
         self.delivery.append((now + fab.latency, pkt))
 
     def service(self, now: int):
-        """Spend one step's byte budget. Weighted sharing happens by
-        handing each *eligible* class its weight-proportional slice of
-        the remaining budget; a class that empties (or throttles) returns
-        its unusable deficit to the pool, so the port is work-conserving
-        across everything the caps and buckets allow."""
+        """Spend one step's byte budget via the shared DRR loop;
+        eligibility folds in the class cap and tenant buckets, so a
+        throttled class returns its unusable share to the pool."""
         if not self.backlog_packets:
             return
         # throttling observability: one count per (tenant, step) whose
@@ -428,33 +469,10 @@ class EgressPort:
                 b = self._bucket(t)
                 if b is not None and not b.peek(q[0].nbytes(), now):
                     self.fabric.stats["qos_bucket_deferrals"] += 1
-        budget = self.fabric.bytes_per_step
-        for _ in range(4):              # redistribution rounds
-            elig = [cq for cq in self.classes.values()
-                    if self._eligible_head(cq, now)]
-            if not elig or budget <= 1e-9:
-                break
-            if any(cq.weight == float("inf") for cq in elig):
-                wsum = sum(1.0 for cq in elig
-                           if cq.weight == float("inf"))
-                shares = [(cq, budget / wsum
-                           if cq.weight == float("inf") else 0.0)
-                          for cq in elig]
-            else:
-                wsum = sum(cq.weight for cq in elig)
-                shares = [(cq, budget * cq.weight / wsum) for cq in elig]
-            budget = 0.0
-            sent_any = 0
-            for cq, share in shares:
-                cq.deficit += share
-                sent_any += self._drain_class(cq, now)
-            # reclaim deficit stranded in classes with nothing eligible
-            for cq in self.classes.values():
-                if cq.deficit > 0 and not self._eligible_head(cq, now):
-                    budget += cq.deficit
-                    cq.deficit = 0.0
-            if not sent_any and budget <= 1e-9:
-                break       # every eligible class is saving for a big head
+        _drr_spend(list(self.classes.values()),
+                   self.fabric.bytes_per_step,
+                   lambda cq: self._eligible_head(cq, now),
+                   lambda cq: self._drain_class(cq, now))
 
     # -- delivery ------------------------------------------------------------
     def pop_due(self, now: int):
@@ -487,4 +505,306 @@ class EgressPort:
         fl = self.flows.pop(gid, None)
         if fl is not None:
             fl.queued_bytes = 0
+        return dropped
+
+
+# ---------------------------------------------------------------------------
+# Ingress: receive-side processing capacity + bounded queue + RNR NAKs
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class IngressConfig:
+    """Operator knobs for one node's receive path.
+
+    ``rx_bandwidth_Bps=None`` (default) models free receive processing —
+    packets pass straight from the wire to the device, byte-identical to
+    the egress-only fabric. A finite rate bounds how many bytes the node
+    can *process* per step, and ``queue_bytes`` bounds how much can wait
+    for processing; overflow of a reliable request draws an RNR NAK back
+    at the sender (``rnr_nak=True``) or is silently dropped and left to
+    the sender's retransmission timer (``rnr_nak=False``).
+    """
+    # receive-processing capacity (bytes/s); None = unlimited pass-through
+    rx_bandwidth_Bps: Optional[float] = None
+    # bound on bytes queued awaiting receive processing (all senders)
+    queue_bytes: float = 256 * 1024
+    # overflow of a reliable request draws NakCode.RNR at the sender
+    rnr_nak: bool = True
+    # per-(sender QP) mute window, in fabric steps: one RNR NAK per
+    # not-ready episode, not one per dropped packet of the same window
+    rnr_nak_interval: int = 32
+
+    def validate(self) -> "IngressConfig":
+        if self.rx_bandwidth_Bps is not None and self.rx_bandwidth_Bps <= 0:
+            raise ValueError("rx_bandwidth_Bps must be > 0 (or None)")
+        if self.queue_bytes <= 0:
+            raise ValueError("queue_bytes must be > 0")
+        if self.rnr_nak_interval < 1:
+            raise ValueError("rnr_nak_interval must be >= 1")
+        return self
+
+    @property
+    def unlimited(self) -> bool:
+        return self.rx_bandwidth_Bps is None
+
+
+class IngressPort:
+    """One node's receive path: finite processing capacity shared across
+    every *sender*, mirroring ``EgressPort`` on the other side of the
+    wire. Packets whose propagation latency expired land here; the port
+    spends one step's receive budget per ``service()`` call handing them
+    to the device. Per-class (mig vs app) accounting reuses the same
+    ``_ClassQueue``/DRR machinery as egress — with QoS enabled, the
+    migration class's configured weights govern whose backlog gets
+    processed first; disabled, the queue is a single FIFO.
+
+    Pure control ops (ACK/NAK/RESUME/RESUME_ACK) bypass the bounded
+    queue: dropping a peer's ACK to signal local receive pressure would
+    amplify the congestion it reports. Overflow of a reliable request
+    (SEND/WRITE/READ_REQ/MIG_*) synthesises a ``NakCode.RNR`` NAK toward
+    the sending QP — the NIC-level receiver-not-ready signal the IBA
+    retry machinery (rnr_retry / min_rnr_timer) is built around."""
+
+    def __init__(self, fabric, gid: int, cfg: IngressConfig,
+                 qos: QoSConfig):
+        self.fabric = fabric
+        self.gid = gid
+        self.cfg = cfg.validate()
+        self.qos = qos
+        self.rx_bytes = 0               # processed (handed to the device)
+        self.rx_packets = 0
+        self._window: Deque[Tuple[int, int]] = deque()  # (step, nbytes)
+        self._win_bytes = 0
+        self._rnr_mute: Dict[Tuple[int, int], int] = {}
+        #   ^ (src_gid, src_qpn) -> step until which further RNR NAKs
+        #     for that sender are suppressed
+        # Order-aware admission state (the NIC owns both this port and
+        # the destination QP contexts, so reading the responder's epsn
+        # at line rate is exactly what real RNICs do):
+        self._inq: Dict[Tuple[int, int], int] = {}
+        #   ^ flow -> packets of that flow currently in the queue
+        self._run: Dict[Tuple[int, int], int] = {}
+        #   ^ flow -> next in-order PSN given what is already queued;
+        #     dropped when the flow's last queued packet leaves (then
+        #     the responder's epsn is the only truth again)
+        self._build_classes()
+
+    def _build_classes(self):
+        queued: List[Packet] = []
+        for cq in getattr(self, "classes", {}).values():
+            queued.extend(cq.drain_all())
+        if self.qos.enabled:
+            weights = self.qos.effective_weights()
+            self.classes = {n: _ClassQueue(n, w)
+                            for n, w in weights.items()}
+        else:
+            self.classes = {CLASS_APP: _ClassQueue(CLASS_APP, 1.0)}
+        for pkt in queued:
+            self._push(pkt)
+
+    def reconfigure(self, cfg: Optional[IngressConfig] = None,
+                    qos: Optional[QoSConfig] = None):
+        if cfg is not None:
+            self.cfg = cfg.validate()
+        if qos is not None:
+            self.qos = qos
+        self._build_classes()
+        if self.cfg.unlimited:          # pass-through: flush the backlog
+            for cq in self.classes.values():
+                for pkt in cq.drain_all():
+                    self._deliver(pkt)
+            self._inq.clear()
+            self._run.clear()
+
+    def _push(self, pkt: Packet):
+        cls = classify(pkt) if self.qos.enabled else CLASS_APP
+        tenant = (pkt.tenant if self.qos.enabled and pkt.tenant is not None
+                  else UNATTRIBUTED)
+        self.classes[cls].push(tenant, pkt)
+
+    # -- capacity ------------------------------------------------------------
+    @property
+    def rx_bytes_per_step(self) -> float:
+        if self.cfg.unlimited:
+            return float("inf")
+        return self.cfg.rx_bandwidth_Bps * self.fabric.step_s()
+
+    @property
+    def backlog_bytes(self) -> int:
+        return sum(cq.backlog_bytes for cq in self.classes.values())
+
+    @property
+    def backlog_packets(self) -> int:
+        return sum(cq.backlog_packets for cq in self.classes.values())
+
+    def in_flight(self) -> int:
+        return self.backlog_packets
+
+    def window_bytes(self, now: int) -> int:
+        self._trim(now)
+        return self._win_bytes
+
+    def _trim(self, now: int):
+        horizon = self.fabric.utilization_window
+        while self._window and self._window[0][0] <= now - horizon:
+            self._win_bytes -= self._window.popleft()[1]
+
+    # -- arrival (wire latency expired) --------------------------------------
+    def enqueue(self, pkt: Packet, now: int):
+        n = pkt.nbytes()
+        self._window.append((now, n))
+        self._win_bytes += n
+        self._trim(now)
+        if self.cfg.unlimited:
+            self._deliver(pkt)          # free receive processing (PR 3)
+            return
+        if pkt.op in CTRL_OPS:
+            self._deliver(pkt)          # control never queues behind data
+            return
+        key = (pkt.src_gid, pkt.src_qpn)
+        epsn = self._qp_epsn(pkt)
+        if epsn is not None:            # order is knowable for this flow
+            if pkt.psn < epsn and pkt.op in RNR_OPS:
+                # stale duplicate: line-rate dup-detect in the BTH
+                # pipeline answers the cumulative re-ACK itself — the
+                # responder already has this payload, so spending queue
+                # space and receive-processing on it buys nothing
+                # (matches the responder's own psn<epsn re-ACK path)
+                self.fabric.stats["rx_dup_acked"] += 1
+                self.fabric.stats[f"rx_dup_acked@{self.gid}"] += 1
+                self.fabric.send(Packet(op=Op.ACK, src_gid=pkt.dest_gid,
+                                        src_qpn=pkt.dest_qpn,
+                                        dest_gid=pkt.src_gid,
+                                        dest_qpn=pkt.src_qpn,
+                                        psn=epsn - 1))
+                return
+            run = self._run.get(key)
+            exp = epsn if run is None else max(epsn, run)
+            if pkt.psn > exp:
+                # out-of-order: the go-back-N responder would discard it,
+                # so spending bounded queue space and receive-processing
+                # cycles on it is pure waste — shed it at admission and
+                # (muted) remind the sender where to resume
+                self._drop(pkt, now, nak_psn=exp)
+                return
+            if run is not None and epsn <= pkt.psn < run:
+                # duplicate of a packet still sitting in this queue: it
+                # will be processed from here, a second copy adds nothing
+                self.fabric.stats["rx_dup_dropped"] += 1
+                self.fabric.stats[f"rx_dup_dropped@{self.gid}"] += 1
+                return
+        if self.backlog_bytes + n > self.cfg.queue_bytes:
+            self._drop(pkt, now)
+            return
+        if epsn is not None and pkt.psn == exp:
+            self._run[key] = exp + 1
+        self._inq[key] = self._inq.get(key, 0) + 1
+        self.fabric.stats["rx_queued"] += 1
+        self.fabric.stats[f"rx_queued@{self.gid}"] += 1
+        self._push(pkt)
+
+    def _qp_epsn(self, pkt: Packet) -> Optional[int]:
+        """Responder epsn of the destination QP, or None when order is
+        unknowable (responses carry the request's PSN; an unknown QPN is
+        the device's problem to count)."""
+        if pkt.op == Op.READ_RESP:
+            return None
+        dev = self.fabric.device(self.gid)
+        qps = getattr(dev, "qps", None)     # bare test doubles have none
+        qp = qps.get(pkt.dest_qpn) if qps is not None else None
+        return None if qp is None else qp.epsn
+
+    def _drop(self, pkt: Packet, now: int, nak_psn: Optional[int] = None):
+        self.fabric.stats["rx_dropped"] += 1
+        self.fabric.stats[f"rx_dropped@{self.gid}"] += 1
+        if self.cfg.rnr_nak and pkt.op in RNR_OPS:
+            self._emit_rnr_nak(pkt, now, psn=nak_psn)
+
+    def _note_dequeue(self, pkt: Packet):
+        key = (pkt.src_gid, pkt.src_qpn)
+        left = self._inq.get(key)
+        if left is None:
+            return
+        if left <= 1:
+            self._inq.pop(key, None)
+            self._run.pop(key, None)
+        else:
+            self._inq[key] = left - 1
+
+    def _emit_rnr_nak(self, pkt: Packet, now: int,
+                      psn: Optional[int] = None):
+        """NIC-level receiver-not-ready: one NAK per not-ready episode
+        (the requester retransmits its whole unacknowledged window after
+        min_rnr_timer, so the NAK is a backoff signal, not a byte-exact
+        retransmit pointer); further drops from the same QP are muted
+        for rnr_nak_interval steps so one congested receiver does not
+        answer an incast burst with a NAK storm."""
+        key = (pkt.src_gid, pkt.src_qpn)
+        if now < self._rnr_mute.get(key, -1):
+            return
+        self._rnr_mute[key] = now + self.cfg.rnr_nak_interval
+        self.fabric.stats["rnr_naks"] += 1
+        self.fabric.stats[f"rnr_naks@{self.gid}"] += 1
+        self.fabric.send(Packet(op=Op.NAK, src_gid=pkt.dest_gid,
+                                src_qpn=pkt.dest_qpn,
+                                dest_gid=pkt.src_gid,
+                                dest_qpn=pkt.src_qpn,
+                                psn=psn if psn is not None else pkt.psn,
+                                nak_code=NakCode.RNR))
+
+    # -- processing ----------------------------------------------------------
+    def _deliver(self, pkt: Packet):
+        self.rx_bytes += pkt.nbytes()
+        self.rx_packets += 1
+        dev = self.fabric.device(pkt.dest_gid)
+        if dev is None:
+            self.fabric.stats["unroutable"] += 1   # [MIGR] old address
+            return
+        dev.receive(pkt)
+
+    def service(self, now: int):
+        """Spend one step's receive-processing budget via the shared DRR
+        loop (no tenant buckets on ingress: rate policy is an egress
+        concern; here the weights only arbitrate whose backlog drains
+        first)."""
+        if not self.backlog_packets or self.cfg.unlimited:
+            return
+        _drr_spend(list(self.classes.values()), self.rx_bytes_per_step,
+                   lambda cq: cq.backlog_packets > 0, self._drain)
+
+    def _drain(self, cq: _ClassQueue) -> int:
+        sent = 0
+        progress = True
+        while progress and cq.backlog_packets:
+            progress = False
+            for _ in range(len(cq.order)):
+                t = cq.order[0]
+                cq.order.rotate(-1)
+                q = cq.tenants.get(t)
+                if not q:
+                    continue
+                n = q[0].nbytes()
+                if cq.deficit < n:
+                    continue
+                pkt = q.popleft()
+                cq.backlog_packets -= 1
+                cq.backlog_bytes -= n
+                cq.deficit -= n
+                cq.tx_bytes += n
+                cq.tx_packets += 1
+                self._note_dequeue(pkt)
+                self._deliver(pkt)
+                sent += 1
+                progress = True
+        return sent
+
+    def drop_all(self) -> int:
+        """Drain the whole queue (the node departed): every packet here
+        was addressed to this gid, so all of them are unroutable now."""
+        dropped = 0
+        for cq in self.classes.values():
+            dropped += len(cq.drain_all())
+        self._inq.clear()
+        self._run.clear()
         return dropped

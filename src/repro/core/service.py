@@ -125,8 +125,16 @@ class ServiceChannel:
         if tick is None:
             tick = fabric.pump
         if max_steps is None:
-            # generous: 20x the no-contention serialisation time
-            ser = (len(data) + 4096) / max(fabric.bytes_per_step, 1e-9)
+            # generous: 20x the no-contention serialisation time at the
+            # slower end of the path — a bounded receiver ingress rate
+            # (incast pressure, RNR backoff) caps the stream below the
+            # egress port's rate, and the timeout must not fire on a
+            # transfer that is making honest progress through it
+            per_step = fabric.bytes_per_step
+            rx_cap = fabric.ingress_capacity_Bps(peer_gid)
+            if rx_cap is not None:
+                per_step = min(per_step, rx_cap * fabric.step_s())
+            ser = (len(data) + 4096) / max(per_step, 1e-9)
             max_steps = int(20 * ser) + 100_000
         for _ in range(max_steps):
             if xid in self.acked:

@@ -68,6 +68,33 @@ def requester(qp):
         return                                                  # [MIGR]
     if not can_send(qp.state):
         return
+    # receiver-not-ready backoff (IBA): an RNR NAK parks the whole send
+    # side — no fresh packets, no timeout retransmission — until the
+    # min_rnr_timer expires, then the *whole unacknowledged window*
+    # (inflight starts at una) retransmits. Resuming at the NAK's PSN
+    # instead would livelock: under incast the first-dropped PSN the NAK
+    # reports can sit ahead of packets the receiver never got, and
+    # go-back-N must never skip past una.
+    if now < qp.rnr_wait_until:
+        return
+    if qp.rnr_resend_pending:
+        # NIC self-awareness: while the previous window is still
+        # serialising on our own egress port, queueing another copy
+        # would only grow a standing queue of duplicates (the RNR NAKs
+        # arrive long before a 64-packet window clears a slow port) —
+        # hold the retransmission until the port drains this flow. The
+        # flow is shared with co-located QPs toward the same peer, so
+        # the deferral is bounded by the RTO: a neighbor's standing
+        # backlog must not park this QP forever.
+        fl = qp.device.fabric.port(qp.device.gid).flows.get(qp.dest_gid)
+        if (fl is not None and fl.queued_bytes > 0
+                and now - qp.last_progress <= qp.rto):
+            return
+        for p in qp.inflight:
+            _retx(qp, p)
+        qp.rnr_resend_pending = False
+        qp.last_progress = now
+        return
     # retransmit on timeout (go-back-N); back the timer off so a slow,
     # contended link is not flooded with duplicate windows
     if qp.inflight and now - qp.last_progress > qp.rto:
@@ -140,6 +167,15 @@ def responder(qp):
         if pkt.psn != qp.epsn:
             if pkt.psn < qp.epsn:   # duplicate: re-ack, drop
                 _emit(qp, _mk(qp, Op.ACK, psn=qp.epsn - 1))
+            elif qp.rnr_nak_sent:
+                # receiver-not-ready window: the RNR NAK for epsn already
+                # told the sender to back off and retransmit from there;
+                # the rest of its in-flight window is dropped *silently*
+                # — a PSN_SEQ_ERR here would trigger immediate go-back-N
+                # and defeat the min_rnr_timer backoff. Deliberately does
+                # not touch last_nak_epsn: a later genuine loss gap still
+                # gets its one sequence NAK.
+                pass
             elif qp.last_nak_epsn != qp.epsn:   # one NAK per gap (RoCE)
                 qp.last_nak_epsn = qp.epsn
                 _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
@@ -165,10 +201,21 @@ def responder(qp):
                 qp.cur_rr = qp.next_rr()
             rr = qp.cur_rr
             if rr is None:
-                # RNR: no receive posted yet — nak so sender retries
+                # RNR: no receive posted yet (IBA §9.7.5.2.8) — a *true*
+                # receiver-not-ready NAK, not a sequence error: the
+                # sender waits min_rnr_timer, charges its rnr_retry
+                # budget, and retransmits from this PSN. Only the
+                # expected-PSN packet reaches here, so each retry attempt
+                # draws exactly one fresh NAK; the rest of the sender's
+                # window is silently dropped above via rnr_nak_sent.
+                qp.rnr_nak_sent = True
+                fab = qp.device.fabric
+                fab.stats["rnr_naks"] += 1
+                fab.stats[f"rnr_naks@{qp.device.gid}"] += 1
                 _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
-                              nak_code=NakCode.PSN_SEQ_ERR))
+                              nak_code=NakCode.RNR))
                 continue
+            qp.rnr_nak_sent = False
             rr.sge.mr.write(rr.sge.offset + rr.received, pkt.payload)
             rr.received += len(pkt.payload)
             qp.epsn += 1
@@ -208,6 +255,61 @@ def responder(qp):
 # ---------------------------------------------------------------------------
 
 
+def _handle_rnr_nak(qp, pkt: Packet):
+    """Receiver-not-ready NAK: charge the retry budget, arm the
+    min_rnr_timer backoff, and mark where retransmission restarts. One
+    charge per not-ready episode — NAKs landing while the backoff is
+    already armed are the same episode (a burst of ingress-overflow NAKs
+    from one congested receiver), not fresh attempts."""
+    now = qp.device.fabric.now
+    if now < qp.rnr_wait_until:
+        return
+    if qp.rnr_retry != 7:               # IBA: rnr_retry=7 -> retry forever
+        qp.rnr_tries += 1
+        if qp.rnr_tries > qp.rnr_retry:
+            _rnr_retry_exhausted(qp)
+            return
+    qp.rnr_wait_until = now + qp.min_rnr_timer
+    qp.rnr_resend_pending = True
+    # Karn across the pause: ACKs of anything outstanding are ambiguous
+    # once the window will be retransmitted
+    qp._send_time.clear()
+
+
+def _rnr_retry_exhausted(qp):
+    """IBA retry exhaustion: the QP transitions to ERROR, the WQE whose
+    request kept drawing RNR completes with an RNR-retry-exceeded CQE,
+    and everything behind it flushes — the application *sees* the error
+    instead of hanging on a peer that will never post a receive."""
+    from repro.core.verbs import WCStatus
+    if qp.state == QPState.RTS:
+        qp.modify(QPState.ERROR, system=True)
+    else:                               # defensive: exhaustion mid-drain
+        qp.state = QPState.ERROR
+    qp.device.fabric.stats["rnr_retries_exhausted"] += 1
+    qp.device.fabric.stats[
+        f"rnr_retries_exhausted@{qp.device.gid}"] += 1
+    status = WCStatus.RNR_RETRY_EXC_ERR
+    while qp.pending_comp:
+        _, wr_id, opcode, blen = qp.pending_comp.popleft()
+        qp.send_cq.push(_wc(wr_id, status, opcode, blen, qp.qpn))
+        status = WCStatus.WR_FLUSH_ERR
+    if qp.cur_wqe is not None:
+        qp.send_cq.push(_wc(qp.cur_wqe.wr_id, status,
+                            qp.cur_wqe.opcode.value,
+                            qp.cur_wqe.sge.length, qp.qpn))
+        status = WCStatus.WR_FLUSH_ERR
+        qp.cur_wqe = None
+    while qp.sq:
+        wr = qp.sq.popleft()
+        qp.send_cq.push(_wc(wr.wr_id, WCStatus.WR_FLUSH_ERR,
+                            wr.opcode.value, wr.sge.length, qp.qpn))
+    qp.inflight.clear()
+    qp._send_time.clear()
+    qp.rnr_resend_pending = False
+    qp.rnr_wait_until = -1
+
+
 def _rtt_sample(qp, sample: float):
     """RFC 6298 §2 update: first sample seeds SRTT/RTTVAR, later samples
     blend with alpha=1/8, beta=1/4; RTO = SRTT + max(G, 4*RTTVAR) with
@@ -235,6 +337,7 @@ def _ack_up_to(qp, psn: int):
     if psn >= qp.una:
         qp.una = psn + 1
         qp.last_progress = now
+        qp.rnr_tries = 0    # fresh progress re-arms the RNR retry budget
         # NOTE: a backed-off RTO is NOT reset on progress alone (RFC 6298
         # §5.7) — only a valid RTT sample re-prices it. Resetting here
         # re-armed a spurious-timeout limit cycle on deep-queue ports:
@@ -267,8 +370,26 @@ def completer(qp):
                 # unsampled would otherwise yield an RTT sample the
                 # size of the partner's downtime (Karn across pauses)
                 qp._send_time.clear()
+                # a pending RNR backoff dies with the pause: the resume
+                # handshake retransmits the whole window anyway
+                qp.rnr_wait_until = -1
+                qp.rnr_resend_pending = False
                 # drop everything in flight; resume retransmits   # [MIGR]
                 continue                                         # [MIGR]
+            if pkt.nak_code == NakCode.RNR:
+                # receiver not ready: back off, do NOT go-back-N now —
+                # an RNR NAK is not a sequence gap
+                _handle_rnr_nak(qp, pkt)
+                continue
+            if qp.device.fabric.now < qp.rnr_wait_until:
+                # sequence gaps reported while the receiver has us in
+                # RNR backoff are fallout of the same overflow (packets
+                # admitted behind the dropped one): the post-backoff
+                # whole-window retransmission already covers the gap —
+                # flooding the congested receiver now would only add
+                # duplicates to its queue
+                qp.rnr_resend_pending = True
+                continue
             # go-back-N: retransmit from the requested psn
             for p in qp.inflight:
                 if p.psn >= pkt.psn:

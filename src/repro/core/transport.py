@@ -18,6 +18,14 @@ tenants with token buckets; with QoS disabled the port is a single FIFO.
 Packets occupy their port for ``nbytes()/bytes_per_step`` steps of budget
 before the propagation latency starts, and ``now`` is the single source
 of truth for every ``transfer_s``/``downtime_s`` figure.
+
+After the propagation latency, packets land in the destination node's
+**ingress port** (``repro.core.qos.IngressPort``): finite
+receive-processing capacity plus a bounded request queue shared across
+all senders. With the default unlimited ingress the port is a
+pass-through (byte-identical to the egress-only model); a finite rate
+makes incast visible, and queue overflow draws receiver-not-ready NAKs
+(``NakCode.RNR``) so senders back off instead of timing out.
 """
 from __future__ import annotations
 
@@ -26,7 +34,7 @@ from collections import defaultdict
 from typing import Dict, List, Optional
 
 from repro.core.packets import MIG_OPS, Packet
-from repro.core.qos import EgressPort, QoSConfig
+from repro.core.qos import EgressPort, IngressConfig, IngressPort, QoSConfig
 
 # sim-time -> wall-time conversion: one fabric pump step models roughly a
 # microsecond of NIC time. All MigrationReport second-figures derive from
@@ -40,14 +48,17 @@ UTILIZATION_WINDOW = 1000
 class Fabric:
     def __init__(self, *, loss_prob: float = 0.0, seed: int = 0,
                  latency_steps: int = 1, bandwidth_Bps: float = 40e9 / 8,
-                 qos: Optional[QoSConfig] = None):
+                 qos: Optional[QoSConfig] = None,
+                 ingress: Optional[IngressConfig] = None):
         self.loss_prob = loss_prob
         self.rng = random.Random(seed)
         self.latency = max(1, latency_steps)
         self.now = 0
         self.qos = (qos or QoSConfig()).validate()
+        self.ingress_default = (ingress or IngressConfig()).validate()
         self.utilization_window = UTILIZATION_WINDOW
         self._ports: Dict[int, EgressPort] = {}       # src gid -> port
+        self._ingress: Dict[int, IngressPort] = {}    # dest gid -> port
         self._devices: Dict[int, "RdmaDevice"] = {}   # gid -> device
         self.stats = defaultdict(int)
         self.trace: Optional[List[Packet]] = None
@@ -79,6 +90,54 @@ class Fabric:
         self.qos = qos.validate()
         for port in self._ports.values():
             port.reconfigure(qos)
+        for iport in self._ingress.values():
+            iport.reconfigure(qos=qos)
+
+    # -- ingress (receive-side) ----------------------------------------------
+    def configure_ingress(self, cfg: IngressConfig,
+                          gid: Optional[int] = None):
+        """Operator knob: bound one node's (or, with ``gid=None``, every
+        node's) receive-processing rate and ingress queue. Packets
+        already queued survive a reconfigure; switching a node back to
+        unlimited flushes its backlog to the device immediately."""
+        cfg = cfg.validate()
+        if gid is None:
+            self.ingress_default = cfg
+            for iport in self._ingress.values():
+                iport.reconfigure(cfg=cfg)
+        else:
+            self.ingress_port(gid).reconfigure(cfg=cfg)
+
+    def ingress_port(self, gid: int) -> IngressPort:
+        p = self._ingress.get(gid)
+        if p is None:
+            p = self._ingress[gid] = IngressPort(
+                self, gid, self.ingress_default, self.qos)
+        return p
+
+    def ingress_capacity_Bps(self, gid: int) -> Optional[float]:
+        """Receive-processing rate of a node, or None (unlimited)."""
+        cfg = (self._ingress[gid].cfg if gid in self._ingress
+               else self.ingress_default)
+        return cfg.rx_bandwidth_Bps
+
+    def ingress_utilization(self, gid: int) -> float:
+        """Measured fraction of a node's receive-processing capacity
+        committed over the UTILIZATION_WINDOW horizon — the destination-
+        side twin of ``port_utilization`` (admission prices the target's
+        receive path with this, not just the source's egress). Same two
+        signals, whichever is worse: bytes arrived over the trailing
+        window, and the standing backlog awaiting processing."""
+        port = self._ingress.get(gid)
+        if port is None or port.cfg.unlimited:
+            return 0.0
+        per_step = port.rx_bytes_per_step
+        if per_step <= 0:
+            return 0.0
+        cap = self.utilization_window * per_step
+        offered = port.window_bytes(self.now) / cap
+        backlog = (port.backlog_bytes / per_step) / self.utilization_window
+        return min(1.0, max(offered, backlog))
 
     def set_tenant_rate(self, tenant: str, rate_Bps: Optional[float],
                         burst_bytes: Optional[float] = None):
@@ -105,10 +164,15 @@ class Fabric:
         """Remove a device. Undelivered packets addressed to the departed
         gid are drained into ``stats['unroutable']`` immediately — they
         could only ever hit the unroutable path at delivery time, and
-        leaving them queued would keep ``in_flight()`` from quiescing."""
+        leaving them queued would keep ``in_flight()`` from quiescing.
+        The departed node's own ingress queue drains the same way: every
+        packet parked there was addressed to it."""
         self._devices.pop(gid, None)
         for port in self._ports.values():
             self.stats["unroutable"] += port.drop_to(gid)
+        iport = self._ingress.pop(gid, None)
+        if iport is not None:
+            self.stats["unroutable"] += iport.drop_all()
 
     def device(self, gid: int):
         return self._devices.get(gid)
@@ -162,22 +226,25 @@ class Fabric:
         self.port(pkt.src_gid).enqueue(pkt, self.now)
 
     def in_flight(self) -> int:
-        return sum(p.in_flight() for p in self._ports.values())
+        return (sum(p.in_flight() for p in self._ports.values())
+                + sum(p.in_flight() for p in self._ingress.values()))
 
     def pump(self, steps: int = 1):
-        """Advance time: run every port's scheduler for one step's byte
-        budget, deliver packets whose latency expired, then run all QP
-        tasks."""
+        """Advance time: run every egress port's scheduler for one step's
+        byte budget, land packets whose latency expired in their
+        destination's ingress port (unlimited ingress delivers them to
+        the device inline), spend each ingress port's receive-processing
+        budget, then run all QP tasks."""
         for _ in range(steps):
             self.now += 1
-            for port in self._ports.values():
+            # list(): an ingress-overflow RNR NAK sent mid-loop may
+            # create the receiver's egress port on first use
+            for port in list(self._ports.values()):
                 port.service(self.now)
                 for pkt in port.pop_due(self.now):
-                    dev = self._devices.get(pkt.dest_gid)
-                    if dev is None:
-                        self.stats["unroutable"] += 1   # [MIGR] old address
-                        continue
-                    dev.receive(pkt)
+                    self.ingress_port(pkt.dest_gid).enqueue(pkt, self.now)
+            for iport in list(self._ingress.values()):
+                iport.service(self.now)
             for dev in list(self._devices.values()):
                 dev.run_tasks()
 

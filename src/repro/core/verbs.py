@@ -32,6 +32,9 @@ class WCStatus(enum.Enum):
     LOC_LEN_ERR = "LOC_LEN_ERR"
     REM_ACCESS_ERR = "REM_ACCESS_ERR"
     WR_FLUSH_ERR = "WR_FLUSH_ERR"
+    # the receiver kept answering RNR NAK past the QP's rnr_retry budget;
+    # the QP is in ERROR and everything behind this WQE flushed
+    RNR_RETRY_EXC_ERR = "RNR_RETRY_EXC_ERR"
 
 
 @dataclass
@@ -200,10 +203,23 @@ class QueuePair:
         # evicts the entry, which IS Karn's exclusion: no stamp, no sample
         self._send_time: Dict[int, int] = {}
         self.pending_comp: Deque = deque()   # (last_psn, wr_id, opcode, len)
+        # Receiver-not-ready (RNR) handling, IBA §9.7.5.2.8: an RNR NAK
+        # (unposted receive at the responder, or ingress-queue overflow
+        # at the destination NIC) parks the requester for min_rnr_timer
+        # steps and charges rnr_retry; exhaustion moves the QP to ERROR
+        # with an RNR_RETRY_EXC_ERR completion. rnr_retry=7 is the IBA
+        # encoding for "retry forever" (the default, so transient
+        # receiver pressure never errors a QP unless an operator asks).
+        self.rnr_retry = 7
+        self.min_rnr_timer = 64         # backoff per RNR NAK, in steps
+        self.rnr_tries = 0              # episodes since the last progress
+        self.rnr_wait_until = -1        # requester parked until this step
+        self.rnr_resend_pending = False # retx whole window after the wait
         # responder
         self.rq: Deque[RecvWR] = deque()
         self.epsn = 0                   # next expected PSN
         self.last_nak_epsn = -1         # NAK suppression (one per gap)
+        self.rnr_nak_sent = False       # in-window RNR mute (responder)
         self.cur_rr: Optional[RecvWR] = None
         self.rx: Deque[Packet] = deque()
         # migration                                              # [MIGR]

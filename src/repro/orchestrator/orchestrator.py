@@ -115,12 +115,25 @@ class Orchestrator:
             if qos.migration_cap is not None:
                 share = min(share, qos.migration_cap)
         effective_bw = self.controller.bw * share
+        # The stream *lands* in the destination's ingress port, shared
+        # with everything else the cluster is throwing at that node: an
+        # incast-loaded or undersized receive path bounds the transfer
+        # exactly like a congested source port, so price the worse of
+        # the two ends (today's egress-only estimate admitted transfers
+        # a saturated receiver would stall into RNR backoff).
+        rx_cap = fabric.ingress_capacity_Bps(dest_node.gid)
+        rx_util = fabric.ingress_utilization(dest_node.gid)
+        if rx_cap is not None:
+            effective_bw = min(effective_bw,
+                               rx_cap * max(1e-6, 1.0 - rx_util))
         est_s = est / effective_bw
         if self.max_transfer_s is not None and est_s > self.max_transfer_s:
             raise AdmissionError(
                 f"estimated transfer {est_s:.4f}s (egress-port util "
-                f"{util:.0%}) exceeds budget {self.max_transfer_s:.4f}s")
+                f"{util:.0%}, dest ingress util {rx_util:.0%}) exceeds "
+                f"budget {self.max_transfer_s:.4f}s")
         checks.append("bandwidth")
+        checks.append("ingress")
         return MigrationPlan(container.name, container.node.gid,
                              dest_node.gid, est, est_s, checks)
 

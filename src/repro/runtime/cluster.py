@@ -14,7 +14,7 @@ import msgpack
 
 from repro.core.migration import MigrationController
 from repro.core.namespace import GlobalNamespace
-from repro.core.qos import QoSConfig
+from repro.core.qos import IngressConfig, QoSConfig
 from repro.core.transport import Fabric
 from repro.core.verbs import Context, RdmaDevice
 from repro.orchestrator import Orchestrator
@@ -77,11 +77,14 @@ class SimCluster:
     def __init__(self, n_nodes: int, *, loss_prob: float = 0.0,
                  seed: int = 0, link_bandwidth_Bps: Optional[float] = None,
                  node_capacity: Optional[int] = None,
-                 qos: Optional[QoSConfig] = None):
+                 qos: Optional[QoSConfig] = None,
+                 ingress: Optional[IngressConfig] = None):
         fab_kw = {} if link_bandwidth_Bps is None else \
             {"bandwidth_Bps": link_bandwidth_Bps}
         if qos is not None:
             fab_kw["qos"] = qos
+        if ingress is not None:
+            fab_kw["ingress"] = ingress
         self.fabric = Fabric(loss_prob=loss_prob, seed=seed, **fab_kw)
         self.namespace = GlobalNamespace()
         self.nodes = [Node(self, gid, capacity=node_capacity)
@@ -120,6 +123,42 @@ class SimCluster:
         """Swap the fabric-wide scheduler config (class weights,
         migration cap/guarantee, tenant buckets) on every port."""
         self.fabric.configure_qos(qos)
+
+    def configure_ingress(self, *, rx_bandwidth_Bps: Optional[float],
+                          queue_bytes: float = 256 * 1024,
+                          rnr_nak: bool = True,
+                          rnr_nak_interval: int = 32,
+                          node: Optional[int] = None):
+        """Operator knob: bound a node's receive-processing rate and
+        ingress queue (``node=None`` applies cluster-wide).
+        ``rx_bandwidth_Bps=None`` restores the unlimited pass-through
+        default (receive processing is free, PR 3 wire model)."""
+        cfg = IngressConfig(rx_bandwidth_Bps=rx_bandwidth_Bps,
+                            queue_bytes=queue_bytes, rnr_nak=rnr_nak,
+                            rnr_nak_interval=rnr_nak_interval)
+        gid = None if node is None else self.nodes[node].gid
+        self.fabric.configure_ingress(cfg, gid=gid)
+
+    def configure_rnr(self, name: Optional[str] = None, *,
+                      rnr_retry: Optional[int] = None,
+                      min_rnr_timer: Optional[int] = None):
+        """Set the IBA RNR attributes on a container's QPs (or, with
+        ``name=None``, every container's). ``rnr_retry=7`` is the IBA
+        "retry forever" encoding; 0..6 bound the attempts before the QP
+        errors out with RNR_RETRY_EXC_ERR. Applies to existing QPs only
+        — set it after the app attaches its channels."""
+        if rnr_retry is not None and not (0 <= rnr_retry <= 7):
+            raise ValueError("rnr_retry must be in [0, 7] (7 = forever)")
+        if min_rnr_timer is not None and min_rnr_timer < 1:
+            raise ValueError("min_rnr_timer must be >= 1 step")
+        targets = ([self.containers[name]] if name is not None
+                   else list(self.containers.values()))
+        for c in targets:
+            for qp in c.ctx.qps:
+                if rnr_retry is not None:
+                    qp.rnr_retry = rnr_retry
+                if min_rnr_timer is not None:
+                    qp.min_rnr_timer = min_rnr_timer
 
     def migrate(self, name: str, dest_idx: int, *,
                 strategy: Optional[str] = None, **kw):

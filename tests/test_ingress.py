@@ -1,0 +1,420 @@
+"""Ingress-port model + true RNR NAK semantics.
+
+Pins the receiver side of the wire model: bounded receive-processing
+capacity and ingress queue (`repro.core.qos.IngressPort`), NIC- and
+responder-generated `NakCode.RNR` with IBA retry semantics (min_rnr_timer
+backoff, rnr_retry budget, retry exhaustion -> QP ERROR + error CQE),
+incast determinism, detach draining, destination-aware admission, and the
+PR 3 figure baselines under the unlimited-ingress default."""
+import pytest
+
+from repro.core.packets import NakCode, Op, Packet
+from repro.core.qos import CLASS_APP, CLASS_MIG, IngressConfig, QoSConfig
+from repro.core.states import QPState
+from repro.core.transport import Fabric
+from repro.core.verbs import PAGE_SIZE, WCStatus
+from repro.orchestrator.orchestrator import AdmissionError
+from repro.runtime.apps import SendBwApp
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import Channel, connect_pair
+from tests.helpers import make_channel_pair
+
+BPS = 2e8        # 200 B/step ports
+
+
+def _run(cl, n):
+    for _ in range(n):
+        cl.step_all()
+
+
+def _naks(trace, code):
+    return [p for p in trace if p.op == Op.NAK and p.nak_code == code]
+
+
+def _pair_named(cl, name, src, dst, *, window=8, msg=4096):
+    A = cl.launch(name, src)
+    B = cl.launch(name + "-sink", dst)
+    aa = SendBwApp(msg_size=msg, window=window)
+    aa.attach(A, sender=True)
+    A.app = aa
+    ab = SendBwApp(msg_size=msg, window=window)
+    ab.attach(B, sender=False)
+    B.app = ab
+    connect_pair(aa.channels[0], ab.channels[0])
+    return aa, ab
+
+
+# ---------------------------------------------------------------------------
+# the RNR mislabeling fix: unposted receive draws NakCode.RNR
+# ---------------------------------------------------------------------------
+
+
+def test_unposted_receive_draws_rnr_not_seq_err():
+    """The responder's no-receive-posted path must emit the true RNR NAK
+    (it used to mislabel it PSN_SEQ_ERR) and must not consume the
+    one-NAK-per-gap budget (last_nak_epsn untouched)."""
+    cl = SimCluster(2)
+    cl.fabric.trace = []
+    c1, c2, _, _ = make_channel_pair(cl)
+    c1.post_send_bytes(b"x" * 512)      # no receive posted at c2
+    _run(cl, 30)
+    rnr = _naks(cl.fabric.trace, NakCode.RNR)
+    assert rnr, "unposted receive must draw an RNR NAK"
+    assert not _naks(cl.fabric.trace, NakCode.PSN_SEQ_ERR), \
+        "receiver-not-ready is not a sequence error"
+    qp2 = c2.h.qp(c2.qpn)
+    assert qp2.last_nak_epsn == -1, \
+        "RNR must not consume the one-NAK-per-gap budget"
+    assert qp2.rnr_nak_sent
+
+
+def test_rnr_window_dropped_silently_not_seq_naked():
+    """While the responder is in an RNR condition, the rest of the
+    sender's in-flight window (psn > epsn) is dropped silently: a
+    PSN_SEQ_ERR would trigger immediate go-back-N and defeat the
+    min_rnr_timer backoff the RNR NAK just requested."""
+    cl = SimCluster(2)
+    cl.fabric.trace = []
+    c1, c2, _, _ = make_channel_pair(cl)
+    for _ in range(4):                  # 4 messages: a real window
+        c1.post_send_bytes(b"x" * 2048)
+    _run(cl, 200)
+    assert _naks(cl.fabric.trace, NakCode.RNR)
+    assert not _naks(cl.fabric.trace, NakCode.PSN_SEQ_ERR)
+
+
+def test_sender_backs_off_instead_of_goback_flood():
+    """An RNR NAK parks the requester for min_rnr_timer steps: between
+    the NAK and the backoff expiry no data packet leaves the sender."""
+    cl = SimCluster(2)
+    cl.fabric.trace = []
+    c1, c2, _, _ = make_channel_pair(cl)
+    qp1 = c1.h.qp(c1.qpn)
+    qp1.min_rnr_timer = 50
+    c1.post_send_bytes(b"x" * 512)
+    _run(cl, 10)                        # NAK received, backoff armed
+    assert qp1.rnr_wait_until > cl.fabric.now
+    sends_before = sum(1 for p in cl.fabric.trace if p.op == Op.SEND)
+    wait = qp1.rnr_wait_until
+    while cl.fabric.now < wait - 1:     # stop just inside the backoff
+        cl.step_all()
+    sends_parked = sum(1 for p in cl.fabric.trace if p.op == Op.SEND)
+    assert sends_parked == sends_before, \
+        "no data may leave while parked in RNR backoff"
+    _run(cl, 30)                        # backoff over: retransmission
+    assert sum(1 for p in cl.fabric.trace if p.op == Op.SEND) \
+        > sends_parked
+
+
+def test_rnr_recovers_when_receive_posted():
+    cl = SimCluster(2)
+    c1, c2, _, _ = make_channel_pair(cl)
+    qp1 = c1.h.qp(c1.qpn)
+    qp1.min_rnr_timer = 8
+    c1.post_send_bytes(b"hello rnr")
+    _run(cl, 40)                        # at least one RNR episode
+    assert cl.fabric.stats["rnr_naks"] > 0
+    c2.post_recv(64)
+    _run(cl, 60)
+    wcs = c2.poll(4)
+    assert [w.opcode for w in wcs] == ["RECV"]
+    assert c2.recv_bytes(0, 9) == b"hello rnr"
+    assert qp1.rnr_tries == 0, "progress re-arms the retry budget"
+
+
+def test_rnr_retry_exhaustion_errors_qp_with_error_cqe():
+    """A finite rnr_retry budget exhausts exactly as IBA specifies: the
+    QP transitions to ERROR, the stalled WQE completes with
+    RNR_RETRY_EXC_ERR, queued WQEs flush, and the fabric quiesces."""
+    cl = SimCluster(2)
+    c1, c2, _, _ = make_channel_pair(cl)
+    qp1 = c1.h.qp(c1.qpn)
+    qp1.rnr_retry = 2
+    qp1.min_rnr_timer = 6
+    c1.post_send_bytes(b"a" * 512)
+    c1.post_send_bytes(b"b" * 512)
+    _run(cl, 400)
+    assert qp1.state == QPState.ERROR
+    wcs = c1.poll(8)
+    assert [w.status for w in wcs] == \
+        [WCStatus.RNR_RETRY_EXC_ERR, WCStatus.WR_FLUSH_ERR]
+    assert not qp1.inflight
+    cl.run_until_idle()                 # nothing left in flight anywhere
+    assert cl.fabric.stats["rnr_retries_exhausted"] == 1
+    assert cl.fabric.stats["rnr_retries_exhausted@0"] == 1
+
+
+def test_rnr_retry_forever_is_default():
+    """rnr_retry=7 (the IBA 'infinite' encoding, our default) never
+    errors the QP no matter how long the receiver stays not-ready."""
+    cl = SimCluster(2)
+    c1, c2, _, _ = make_channel_pair(cl)
+    qp1 = c1.h.qp(c1.qpn)
+    assert qp1.rnr_retry == 7
+    qp1.min_rnr_timer = 4
+    c1.post_send_bytes(b"x" * 256)
+    _run(cl, 600)
+    assert qp1.state == QPState.RTS
+    assert cl.fabric.stats["rnr_naks"] > 10     # many episodes, no error
+    c2.post_recv(64)
+    _run(cl, 40)
+    assert [w.opcode for w in c2.poll(4)] == ["RECV"]
+
+
+def test_rnr_attrs_survive_migration():
+    """Operator-set rnr_retry/min_rnr_timer are part of the dumped QP
+    image and follow the container to the destination."""
+    cl = SimCluster(3)
+    c1, c2, ca, cb = make_channel_pair(cl)
+    qp = cb.ctx.qps[0]
+    qp.rnr_retry = 3
+    qp.min_rnr_timer = 17
+    qpn = qp.qpn
+    assert cl.migrate("b", 2).ok
+    moved = next(q for q in cb.ctx.qps if q.qpn == qpn)
+    assert moved.rnr_retry == 3
+    assert moved.min_rnr_timer == 17
+
+
+# ---------------------------------------------------------------------------
+# ingress port: bounded receive processing, overflow -> RNR, incast
+# ---------------------------------------------------------------------------
+
+
+def _incast(n_senders, *, bounded, steps=2500, queue=48 * 1024):
+    cl = SimCluster(n_senders + 1, link_bandwidth_Bps=BPS)
+    if bounded:
+        cl.configure_ingress(rx_bandwidth_Bps=BPS, queue_bytes=queue,
+                             node=0)
+    receivers = []
+    for i in range(n_senders):
+        _, ab = _pair_named(cl, f"s{i}", i + 1, 0)
+        receivers.append(ab)
+    _run(cl, steps)
+    return cl, [r.received for r in receivers]
+
+
+def test_incast_collapse_under_bounded_ingress():
+    """4:1 incast: free receive processing hides the collapse entirely;
+    a bounded ingress shares one node's processing across all senders
+    (>=2x per-sender goodput loss) and exercises the overflow path."""
+    cl_free, free = _incast(4, bounded=False)
+    cl_bound, bound = _incast(4, bounded=True)
+    assert cl_free.fabric.stats["rx_dropped"] == 0
+    assert cl_free.fabric.stats["rnr_naks"] == 0
+    assert all(g > 0 for g in bound), "shaped, not starved"
+    assert max(bound) * 2 <= min(free), \
+        f"expected >=2x collapse: {bound} vs {free}"
+    assert cl_bound.fabric.stats["rx_dropped@0"] > 0
+    assert cl_bound.fabric.stats["rnr_naks@0"] > 0
+
+
+def test_incast_reproduces_deterministically():
+    """Same seed -> bit-identical rx_dropped and per-sender goodput
+    (the RNR/backoff/scheduler pipeline has no hidden nondeterminism)."""
+    def one():
+        cl, good = _incast(4, bounded=True, steps=2000)
+        return (good, cl.fabric.stats["rx_dropped@0"],
+                cl.fabric.stats["rnr_naks@0"], cl.fabric.now,
+                dict(cl.fabric.stats))
+
+    assert one() == one()
+
+
+def test_ingress_stats_per_node_consistency():
+    cl, _ = _incast(4, bounded=True, steps=1500)
+    s = cl.fabric.stats
+    for key in ("rx_dropped", "rx_queued", "rnr_naks"):
+        per_node = sum(v for k, v in s.items()
+                       if k.startswith(f"{key}@"))
+        assert s[key] == per_node, f"{key} aggregate != per-node sum"
+    assert s["rx_queued@0"] > 0
+
+
+def test_unlimited_ingress_is_passthrough():
+    """Default config: no ingress queueing, no drops, no NAKs, and the
+    port model reports zero utilization — the PR 3 wire model."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    _pair_named(cl, "a", 0, 1)
+    _run(cl, 400)
+    assert cl.fabric.ingress_utilization(1) == 0.0
+    assert cl.fabric.ingress_capacity_Bps(1) is None
+    assert cl.fabric.stats["rx_queued"] == 0
+    assert cl.fabric.stats["rx_dropped"] == 0
+    assert cl.fabric.ingress_port(1).backlog_bytes == 0
+
+
+def test_configure_ingress_validation_and_flush():
+    with pytest.raises(ValueError, match="rx_bandwidth_Bps"):
+        IngressConfig(rx_bandwidth_Bps=0.0).validate()
+    with pytest.raises(ValueError, match="queue_bytes"):
+        IngressConfig(queue_bytes=0).validate()
+    # switching a loaded node back to unlimited flushes its backlog
+    cl = SimCluster(3, link_bandwidth_Bps=BPS)
+    cl.configure_ingress(rx_bandwidth_Bps=BPS / 10, queue_bytes=32 * 1024,
+                         node=0)
+    for i in range(2):
+        _pair_named(cl, f"s{i}", i + 1, 0)
+    _run(cl, 300)
+    assert cl.fabric.ingress_port(0).backlog_bytes > 0
+    cl.configure_ingress(rx_bandwidth_Bps=None, node=0)
+    assert cl.fabric.ingress_port(0).backlog_bytes == 0
+    _run(cl, 50)
+    assert cl.fabric.ingress_utilization(0) == 0.0
+
+
+def test_qos_classes_extend_to_ingress():
+    """With QoS enabled the ingress queue is per-class like egress: the
+    mig class drains under its configured weight even while app incast
+    saturates the receiver."""
+    cl = SimCluster(3, link_bandwidth_Bps=BPS,
+                    qos=QoSConfig(enabled=True, migration_guarantee=0.5))
+    cl.configure_ingress(rx_bandwidth_Bps=BPS, queue_bytes=48 * 1024,
+                         node=2)
+    _pair_named(cl, "noisy", 1, 2)
+    _run(cl, 300)
+    iport = cl.fabric.ingress_port(2)
+    assert set(iport.classes) == {CLASS_APP, CLASS_MIG}
+    svc = cl.nodes[0].device.service
+    svc.post(2, Op.MIG_STATE, {"kind": "fill", "noack": True},
+             b"m" * 20_000)
+    _run(cl, 1500)
+    assert iport.classes[CLASS_MIG].tx_bytes > 0, \
+        "migration class must make progress through a loaded ingress"
+    assert iport.classes[CLASS_APP].tx_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# detach with a non-empty ingress queue
+# ---------------------------------------------------------------------------
+
+
+def test_detach_drains_ingress_queue_to_unroutable():
+    """Packets parked in a departing node's ingress queue could only
+    ever hit the unroutable path: they are counted out at detach so
+    in_flight() quiesces."""
+    fab = Fabric(bandwidth_Bps=1e9)     # fast egress, slow receive
+    fab.configure_ingress(IngressConfig(rx_bandwidth_Bps=1e7,
+                                        queue_bytes=1 << 20), gid=1)
+
+    class _Sink:
+        def receive(self, pkt):
+            pass
+
+        def run_tasks(self):
+            pass
+
+        def idle(self):
+            return True
+
+    fab.attach(0, _Sink())
+    fab.attach(1, _Sink())
+    for i in range(20):
+        fab.send(Packet(op=Op.SEND, src_gid=0, src_qpn=1, dest_gid=1,
+                        dest_qpn=2, psn=i, payload=b"x" * 1024))
+    fab.pump(40)                        # egress drains into ingress queue
+    assert fab.ingress_port(1).backlog_packets > 0
+    queued = fab.ingress_port(1).backlog_packets
+    before = fab.stats["unroutable"]
+    fab.detach(1)
+    assert fab.stats["unroutable"] >= before + queued
+    fab.run_until_idle()
+    assert fab.in_flight() == 0
+
+
+def test_detach_keeps_other_ingress_flowing():
+    cl = SimCluster(3, link_bandwidth_Bps=BPS)
+    cl.configure_ingress(rx_bandwidth_Bps=BPS, queue_bytes=48 * 1024)
+    _, ab = _pair_named(cl, "keep", 0, 2)
+    _run(cl, 300)
+    got = ab.received
+    cl.fabric.detach(1)                 # unrelated node departs
+    _run(cl, 300)
+    assert ab.received > got
+
+
+# ---------------------------------------------------------------------------
+# migration under receiver pressure
+# ---------------------------------------------------------------------------
+
+
+def test_migration_under_receiver_pressure_converges():
+    """A pre-copy migration whose destination ingress is bounded and
+    already loaded by app incast still converges: the MIG stream rides
+    the same RNR/backoff machinery instead of timing out."""
+    cl = SimCluster(4, link_bandwidth_Bps=BPS)
+    cl.configure_ingress(rx_bandwidth_Bps=BPS, queue_bytes=48 * 1024,
+                         node=3)
+    for i in range(2):                  # app pressure into the dest node
+        _pair_named(cl, f"noisy{i}", i + 1, 3)
+    bulk = cl.launch("bulk", 0)
+    mr = bulk.ctx.alloc_pd().reg_mr(32 * PAGE_SIZE)
+    for pg in range(32):
+        mr.write(pg * PAGE_SIZE, bytes([pg % 251]) * PAGE_SIZE)
+    _run(cl, 500)
+    assert cl.fabric.ingress_utilization(3) > 0.5   # genuinely loaded
+    rep = cl.migrate("bulk", 3, strategy="pre_copy")
+    assert rep.ok
+    assert cl.fabric.stats["rx_dropped@3"] > 0      # pressure was real
+    moved = cl.containers["bulk"]
+    assert moved.node is cl.nodes[3]
+    assert moved.ctx.mrs[0].read(5 * PAGE_SIZE, 8) == bytes([5]) * 8
+
+
+def test_admission_prices_destination_ingress():
+    """The orchestrator's transfer estimate must reflect the
+    destination's receive path: an undersized/loaded ingress shrinks
+    effective bandwidth, and a tight budget rejects the request."""
+    def plan_for(rx_Bps):
+        cl = SimCluster(2, link_bandwidth_Bps=BPS)
+        if rx_Bps is not None:
+            cl.configure_ingress(rx_bandwidth_Bps=rx_Bps,
+                                 queue_bytes=64 * 1024, node=1)
+        bulk = cl.launch("bulk", 0)
+        bulk.ctx.alloc_pd().reg_mr(64 * PAGE_SIZE)
+        return cl, cl.orchestrator.admit(bulk, cl.nodes[1])
+
+    _, fast = plan_for(None)
+    _, slow = plan_for(BPS / 20)
+    assert "ingress" in fast.checks and "ingress" in slow.checks
+    assert slow.est_transfer_s > 10 * fast.est_transfer_s
+
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_ingress(rx_bandwidth_Bps=BPS / 20,
+                         queue_bytes=64 * 1024, node=1)
+    cl.orchestrator.max_transfer_s = fast.est_transfer_s * 2
+    bulk = cl.launch("bulk", 0)
+    bulk.ctx.alloc_pd().reg_mr(64 * PAGE_SIZE)
+    with pytest.raises(AdmissionError, match="ingress"):
+        cl.orchestrator.admit(bulk, cl.nodes[1])
+
+
+# ---------------------------------------------------------------------------
+# PR 3 figure baselines: unlimited ingress + QoS off change nothing
+# ---------------------------------------------------------------------------
+
+
+def test_defaults_reproduce_pr3_downtime_figures():
+    """The sim-clock figures of benchmarks/fig_downtime.py under the
+    default (QoS off, unlimited ingress) are pinned byte-for-byte to
+    their PR 3 values: the ingress refactor must be a pass-through."""
+    from benchmarks import fig_downtime
+    expected = {
+        "stop_and_copy": (0.005677, 0.005677, 8),
+        "pre_copy": (0.00011399999999999999, 0.00604, 86),
+        "post_copy": (7e-05, 0.008688, 1),
+    }
+    for name, (down_exp, total_exp, received_exp) in expected.items():
+        rep, down, total, ab = fig_downtime.run_strategy(name)
+        assert rep.ok
+        assert down == down_exp, f"{name} downtime drifted: {down!r}"
+        assert total == total_exp, f"{name} total drifted: {total!r}"
+        assert ab.received == received_exp
+
+
+def test_defaults_reproduce_pr3_contention_figure(capsys):
+    """fig_contention's dip/recovery assertions (the PR 3 acceptance
+    bar) still hold under the defaults."""
+    from benchmarks import fig_contention
+    fig_contention.main()               # raises AssertionError on drift
+    capsys.readouterr()
