@@ -16,6 +16,7 @@ from typing import Dict, List
 import msgpack
 
 from repro.core.packets import NakCode, Op, Packet
+from repro.core.qos import CongestionControl
 from repro.core.states import QPState
 from repro.core.verbs import (CompletionQueue, Context, MemoryRegion,
                               ProtectionDomain, QueuePair, RecvWR, SendWR,
@@ -51,11 +52,16 @@ def _recv_wr(wr: RecvWR) -> dict:
 
 
 def _packet(p: Packet) -> dict:
-    return {"op": p.op.value, "src_gid": p.src_gid, "src_qpn": p.src_qpn,
-            "dest_gid": p.dest_gid, "dest_qpn": p.dest_qpn, "psn": p.psn,
-            "payload": bytes(p.payload), "raddr": p.raddr, "rkey": p.rkey,
-            "length": p.length, "first": p.first, "last": p.last,
-            "wr_id": p.wr_id}
+    d = {"op": p.op.value, "src_gid": p.src_gid, "src_qpn": p.src_qpn,
+         "dest_gid": p.dest_gid, "dest_qpn": p.dest_qpn, "psn": p.psn,
+         "payload": bytes(p.payload), "raddr": p.raddr, "rkey": p.rkey,
+         "length": p.length, "first": p.first, "last": p.last,
+         "wr_id": p.wr_id}
+    # conditional keys: images from ECN-off runs stay byte-identical to
+    # the pre-ECN format (their size is on the wire-timing fast path)
+    if p.ect:
+        d["ect"] = True
+    return d
 
 
 def dump_object(obj) -> dict:
@@ -70,8 +76,12 @@ def dump_object(obj) -> dict:
                 "head": obj.head, "tail": obj.tail,
                 "ring": [_wc(w) for w in obj.ring]}
     if isinstance(obj, SharedReceiveQueue):
-        return {"type": "SRQ", "srqn": obj.srqn,
-                "queue": [_recv_wr(r) for r in obj.queue]}
+        d = {"type": "SRQ", "srqn": obj.srqn,
+             "queue": [_recv_wr(r) for r in obj.queue]}
+        if obj.limit or obj.armed:      # SRQ_LIMIT watermark attrs
+            d["limit"] = obj.limit
+            d["armed"] = obj.armed
+        return d
     if isinstance(obj, QueuePair):
         d = {"type": "QP", "qpn": obj.qpn, "state": obj.state.value,
              "dest_gid": obj.dest_gid, "dest_qpn": obj.dest_qpn,
@@ -91,6 +101,15 @@ def dump_object(obj) -> dict:
              "pending_comp": [list(t) for t in obj.pending_comp],
              "cur_wqe": _send_wr(obj.cur_wqe) if obj.cur_wqe else None,
              "cur_rr": _recv_wr(obj.cur_rr) if obj.cur_rr else None}
+        # DCQCN congestion state travels with the QP — the headline
+        # paper tie-in (§3.4): rate limiters / alpha estimators are NIC
+        # state the OS can checkpoint because it owns the model, so a
+        # migrated sender resumes at its *learned* rate, not line rate.
+        # Conditional keys keep ECN-off images byte-identical.  # [ECN]
+        if obj.cc is not None:
+            d["cc"] = obj.cc.dump(obj.device.fabric.now)
+        if obj.cnps_sent:
+            d["cnps_sent"] = obj.cnps_sent
         return d
     raise TypeError(type(obj))
 
@@ -209,6 +228,9 @@ def restore_object(session: RestoreSession, cmd: str, entry: dict,
             srq = session.srq_by_n[entry["srqn"]]
             for r in entry["queue"]:
                 srq.queue.append(session._rrecv(r))
+            # SRQ_LIMIT watermark attrs (.get: pre-watermark images)
+            srq.limit = entry.get("limit", 0)
+            srq.armed = entry.get("armed", False)
             return srq
         if t == "QP":
             qp = session.qp_by_n[entry["qpn"]]
@@ -220,6 +242,12 @@ def restore_object(session: RestoreSession, cmd: str, entry: dict,
             qp.rnr_retry = entry.get("rnr_retry", 7)
             qp.min_rnr_timer = entry.get("min_rnr_timer",
                                          qp.min_rnr_timer)
+            # congestion state: resume at the learned rate       # [ECN]
+            if "cc" in entry:
+                qp.cc = CongestionControl.restore(
+                    dev.fabric.ecn, entry["cc"], dev.fabric.now,
+                    dev.fabric.bytes_per_step, dev.fabric.step_s())
+            qp.cnps_sent = entry.get("cnps_sent", 0)
             qp.sq = deque(session._rsend(w) for w in entry["sq"])
             qp.rq = deque(session._rrecv(w) for w in entry["rq"])
             qp.pending_comp = deque(tuple(t_) for t_ in
@@ -237,7 +265,7 @@ def restore_object(session: RestoreSession, cmd: str, entry: dict,
                        raddr=p["raddr"], rkey=p["rkey"],
                        length=p["length"], first=p["first"],
                        last=p["last"], wr_id=p["wr_id"],
-                       tenant=qp.tenant)
+                       tenant=qp.tenant, ect=p.get("ect", False))
                 for p in entry["inflight"])
             qp.last_progress = dev.fabric.now
             qp.resume_pending = True                             # [MIGR]

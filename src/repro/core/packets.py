@@ -23,6 +23,10 @@ class Op(enum.Enum):
     NAK = "NAK"
     RESUME = "RESUME"                # [MIGR]
     RESUME_ACK = "RESUME_ACK"        # [MIGR]
+    # DCQCN notification point -> reaction point: the responder answers a
+    # CE-marked (congestion experienced) arrival with a CNP so the sender
+    # cuts its rate before queues overflow into RNR NAKs / timeouts
+    CNP = "CNP"                      # [ECN]
     # service-channel (kernel QP) data plane: checkpoint images, pre-copy
     # page rounds, and post-copy demand pulls are streamed as ordinary
     # PSN-sequenced traffic and contend with app SEND/WRITE for links.
@@ -40,8 +44,11 @@ MIG_OPS = frozenset({Op.MIG_PAGE, Op.MIG_STATE, Op.MIG_ACK})
 # pure acknowledgement/control ops: they carry no payload to process, so
 # the ingress (receive-side) port delivers them past the bounded request
 # queue — dropping a peer's ACK to signal *our* receive pressure would
-# only amplify the congestion it reports
-CTRL_OPS = frozenset({Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK})
+# only amplify the congestion it reports. CNPs are here for the same
+# reason DCQCN gives them the highest priority class on real fabrics: a
+# congestion notification queued behind the congestion it reports is
+# useless.
+CTRL_OPS = frozenset({Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK, Op.CNP})
 
 # reliable *request* ops: an ingress-queue overflow on one of these draws
 # a receiver-not-ready NAK so the sender backs off (IBA RNR semantics)
@@ -86,6 +93,18 @@ class Packet:
     # stamped at send time. Out-of-band metadata — a real NIC reads the
     # owning QP's context the same way — so it never counts in nbytes().
     tenant: Optional[str] = None
+    # ECN codepoints (RoCEv2 carries them in the IP header): ``ect`` is
+    # ECN-Capable-Transport, stamped at send time on data ops when the
+    # fabric's ECN config is enabled; ``ce`` is Congestion-Experienced,
+    # set by a port whose queue occupancy crossed the RED thresholds.
+    # Two header bits on the wire — they never count in nbytes().
+    ect: bool = False                # [ECN]
+    ce: bool = False                 # [ECN]
+    # stats attribution on CNPs only: traffic class (app/mig) of the
+    # CE-marked packet this CNP answers, so the reaction point's
+    # cnps_handled counters keep the per-class == total invariant.
+    # Out-of-band metadata, like ``tenant``.
+    ecn_class: Optional[str] = None  # [ECN]
 
     @property
     def route(self) -> Tuple[int, int]:

@@ -36,9 +36,21 @@ is free. Queue overflow draws a *receiver-not-ready* NAK
 (``NakCode.RNR``) so senders back off instead of timing out; with the
 default unlimited capacity the ingress port is a pass-through and the
 wire model is byte-identical to the egress-only one.
+
+On top of both port models sits **ECN/DCQCN-style congestion control**
+(``ECNConfig`` + ``CongestionControl``): ports RED-mark ECT packets when
+queue occupancy crosses a threshold (default ~80%), the responder
+answers Congestion-Experienced arrivals with CNPs (paper §3.4's point
+exactly: this is NIC state — rate limiters, alpha estimators — that
+MigrOS can checkpoint *because the OS owns the model*), and each QP's
+reaction point does DCQCN multiplicative decrease / additive+hyper
+increase on its send rate, enforced at send admission ahead of the
+tenant token bucket. Disabled by default: no marking, no CNPs, no rate
+state — the wire model is byte-identical to the ECN-less one.
 """
 from __future__ import annotations
 
+import random
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Deque, Dict, List, Optional, Tuple
@@ -54,6 +66,12 @@ CLASS_MIG = "mig"
 # test fixtures): they ride the app class unbucketed unless an operator
 # configures a rate for this exact key
 UNATTRIBUTED = "_unattributed"
+
+# floor on every token/pacing bucket depth: a bucket shallower than one
+# max-size packet (4 KiB payload + headers) could never pass anything
+# and would wedge its queue forever; configured depths below this are
+# silently raised to it (documented in docs/fabric-qos.md)
+MIN_BUCKET_BYTES = 4096.0
 
 
 def classify(pkt: Packet) -> str:
@@ -136,9 +154,7 @@ class QoSConfig:
             return None
         burst = self.tenant_burst_bytes.get(tenant,
                                             self.default_burst_bytes)
-        # floor: a bucket shallower than one max-size packet could never
-        # pass anything and would wedge the tenant's FIFO forever
-        return rate, max(burst, 4096.0)
+        return rate, max(burst, MIN_BUCKET_BYTES)
 
 
 class TokenBucket:
@@ -168,6 +184,285 @@ class TokenBucket:
 
     def take(self, n: int):
         self.tokens -= n
+
+
+# ---------------------------------------------------------------------------
+# ECN marking + DCQCN reaction point
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ECNConfig:
+    """Operator knobs for ECN marking and the DCQCN rate machinery
+    (docs/fabric-qos.md has the operator table; everything is in
+    fabric-step time so enabled runs stay bit-reproducible).
+
+    ``enabled=False`` (default) turns the whole subsystem off: packets
+    are not ECT, ports never mark, responders never emit CNPs, and QPs
+    carry no rate state — byte-identical to the pre-ECN wire model.
+    """
+    enabled: bool = False
+    # -- RED-style marking (shared by egress and ingress ports) -----------
+    # occupancy fraction where marking starts / saturates; between them
+    # the marking probability ramps linearly from 0 to pmax (>=kmax
+    # marks every ECT packet)
+    kmin: float = 0.8
+    kmax: float = 1.0
+    pmax: float = 0.2
+    # egress ports have no hard queue bound, so occupancy is measured
+    # against this reference backlog; ingress occupancy uses the port's
+    # own queue_bytes bound
+    egress_queue_bytes: float = 128 * 1024
+    mark_egress: bool = True
+    mark_ingress: bool = True
+    # -- notification point (responder) -----------------------------------
+    # per-QP CNP coalescing window, in steps (DCQCN NPs fire at most one
+    # CNP per flow per 50us; one step ~ 1us)
+    cnp_interval: int = 50
+    # -- reaction point (per-QP DCQCN rate state) -------------------------
+    g: float = 1.0 / 16.0           # alpha gain on CNP / decay
+    alpha_timer: int = 55           # steps between alpha decays, no CNP
+    increase_timer: int = 300       # steps between timer increase events
+    byte_counter: float = 64 * 1024  # bytes per byte-counter event
+    fast_recovery_events: int = 5   # F: events before additive increase
+    rai_Bps: Optional[float] = None   # additive step (None: line/50)
+    rhai_Bps: Optional[float] = None  # hyper step (None: line/10)
+    min_rate_Bps: Optional[float] = None  # rate floor (None: line/500)
+    burst_bytes: float = 8 * 1024   # reaction-point pacing bucket depth
+
+    def validate(self) -> "ECNConfig":
+        if not (0.0 <= self.kmin <= self.kmax):
+            raise ValueError("need 0 <= kmin <= kmax")
+        if not (0.0 < self.pmax <= 1.0):
+            raise ValueError("pmax must be in (0, 1]")
+        if self.egress_queue_bytes <= 0:
+            raise ValueError("egress_queue_bytes must be > 0")
+        if self.cnp_interval < 1 or self.alpha_timer < 1 \
+                or self.increase_timer < 1:
+            raise ValueError("ECN timers must be >= 1 step")
+        if not (0.0 < self.g <= 1.0):
+            raise ValueError("g must be in (0, 1]")
+        if self.byte_counter <= 0 or self.burst_bytes <= 0:
+            raise ValueError("byte_counter/burst_bytes must be > 0")
+        for name, v in (("rai_Bps", self.rai_Bps),
+                        ("rhai_Bps", self.rhai_Bps),
+                        ("min_rate_Bps", self.min_rate_Bps)):
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be > 0 (or None)")
+        return self
+
+    def mark_probability(self, occupancy: float) -> float:
+        """RED curve: 0 below kmin, linear ramp to pmax at kmax, 1 at or
+        above kmax (the queue is effectively full — mark everything)."""
+        if occupancy < self.kmin:
+            return 0.0
+        if occupancy >= self.kmax:
+            return 1.0
+        span = max(self.kmax - self.kmin, 1e-12)
+        return self.pmax * (occupancy - self.kmin) / span
+
+
+def maybe_mark(fabric, rng, pkt: Packet, occupancy: float,
+               gid: int) -> bool:
+    """CE-mark one ECT packet with the RED probability for this queue
+    occupancy. The rng is per-port and seeded off the fabric seed, so
+    marking is deterministic and does not perturb the fabric's loss
+    stream; it is only consulted inside the ramp (0 < p < 1)."""
+    if not pkt.ect or pkt.ce:
+        return False
+    p = fabric.ecn.mark_probability(occupancy)
+    if p <= 0.0:
+        return False
+    if p < 1.0 and rng.random() >= p:
+        return False
+    pkt.ce = True
+    cls = classify(pkt)
+    fabric.stats["ecn_marked"] += 1
+    fabric.stats[f"ecn_marked@{gid}"] += 1
+    fabric.stats[f"{cls}_ecn_marked"] += 1
+    return True
+
+
+class CongestionControl:
+    """DCQCN reaction-point state of one QP: current/target rate, the
+    alpha congestion estimate, and the increase timers. Everything runs
+    in fabric-step time (rates are bytes/step), advanced lazily from the
+    requester — no wall clock, so identical runs evolve identically.
+
+    The paper tie-in: this is exactly the NIC-resident communication
+    state (§3.4) that makes hardware RDMA migration hard — because the
+    OS owns this model, ``dump()``/``restore()`` move it with the QP and
+    a migrated sender resumes at its *learned* rate, not line rate."""
+
+    __slots__ = ("cfg", "line", "rc", "rt", "alpha", "tokens", "last",
+                 "alpha_last", "incr_last", "byte_count", "t_events",
+                 "b_events", "cnps_handled", "rate_cuts", "step_s")
+
+    def __init__(self, cfg: ECNConfig, line_rate: float, now: int,
+                 step_s: float = 1e-6):
+        self.cfg = cfg
+        # seconds per fabric step (Fabric.step_s()), for Bps knob
+        # conversion — passed in so a retuned transport.STEP_S cannot
+        # silently disagree with the rates computed here
+        self.step_s = step_s
+        self.line = line_rate           # bytes/step ceiling (port rate)
+        self.rc = line_rate             # current send rate
+        self.rt = line_rate             # target rate
+        self.alpha = 1.0                # congestion estimate
+        self.tokens = float(cfg.burst_bytes)
+        self.last = now                 # last token refill
+        self.alpha_last = now           # last alpha-decay evaluation
+        self.incr_last = now            # last timer-increase evaluation
+        self.byte_count = 0.0           # bytes toward the next B event
+        self.t_events = 0               # timer events since last cut
+        self.b_events = 0               # byte-counter events since cut
+        self.cnps_handled = 0
+        self.rate_cuts = 0
+
+    # -- derived knobs (priced off line rate when not set) -----------------
+    def _rai(self) -> float:
+        if self.cfg.rai_Bps is not None:
+            return self.cfg.rai_Bps * self.step_s
+        return self.line / 50.0
+
+    def _rhai(self) -> float:
+        if self.cfg.rhai_Bps is not None:
+            return self.cfg.rhai_Bps * self.step_s
+        return self.line / 10.0
+
+    def _min_rate(self) -> float:
+        if self.cfg.min_rate_Bps is not None:
+            return self.cfg.min_rate_Bps * self.step_s
+        return max(self.line / 500.0, 1e-9)
+
+    # -- time advance ------------------------------------------------------
+    def advance(self, now: int, line_rate: float):
+        """Refill the pacing bucket at rc and run the elapsed DCQCN
+        timers: alpha decays every alpha_timer steps without a CNP, and
+        every increase_timer steps the rate steps toward (then past) the
+        target. Lazy and pure in the step delta — calling it once for a
+        10-step gap equals calling it 10 times."""
+        if line_rate != self.line:      # operator re-priced the port
+            self.line = line_rate
+            self.rc = min(self.rc, line_rate)
+            self.rt = min(self.rt, line_rate)
+        if now <= self.last:
+            return
+        cfg = self.cfg
+        # catch-up must be O(1)-ish in the idle gap, not O(gap/timer):
+        # alpha decay is closed-form, and increase events stop mattering
+        # once both rates sit at line (they only bump the event counter)
+        k = (now - self.alpha_last) // cfg.alpha_timer
+        if k > 0:
+            self.alpha *= (1.0 - cfg.g) ** k
+            self.alpha_last += k * cfg.alpha_timer
+        k = (now - self.incr_last) // cfg.increase_timer
+        while k > 0 and (self.rc < self.line or self.rt < self.line):
+            self._increase_event(timer=True)
+            self.incr_last += cfg.increase_timer
+            k -= 1
+        if k > 0:                       # saturated: events are no-ops
+            self.t_events += k
+            self.incr_last += k * cfg.increase_timer
+        # refill after the increases so a long-idle QP resumes at the
+        # recovered rate, not the stale one
+        self.tokens = min(max(self.cfg.burst_bytes, MIN_BUCKET_BYTES),
+                          self.tokens + (now - self.last) * self.rc)
+        self.last = now
+
+    # -- send admission (ahead of the tenant token bucket) -----------------
+    def admit(self, n: int) -> bool:
+        """True iff the pacing bucket lets ``n`` more bytes onto the
+        send path right now; charges the bucket on success. A charge
+        larger than the bucket can ever hold (a READ whose response
+        exceeds burst_bytes) waits for a full bucket and then
+        overdraws — the same debt semantics retransmits use; requiring
+        tokens >= n would wedge the QP forever."""
+        cap = max(self.cfg.burst_bytes, MIN_BUCKET_BYTES)
+        need = min(float(n), cap)
+        if self.tokens < need:
+            return False
+        self.tokens -= n
+        return True
+
+    def on_send(self, n: int):
+        """Byte-counter increase events (DCQCN's B counter)."""
+        self.byte_count += n
+        while self.byte_count >= self.cfg.byte_counter:
+            self.byte_count -= self.cfg.byte_counter
+            self._increase_event(timer=False)
+
+    # -- congestion events (multiplicative decrease) -----------------------
+    def on_cnp(self, now: int):
+        self.cnps_handled += 1
+        self.cut(now)
+
+    def cut(self, now: int):
+        """DCQCN decrease: also applied on an RNR NAK — receiver-not-
+        ready is the *severe* congestion signal (the queue already
+        overflowed; marking should have slowed us sooner), and a flow
+        whose packets all drop at admission never gets CE feedback at
+        all, so without this the incast losers would starve while the
+        winners get politely rate-controlled."""
+        self.rate_cuts += 1
+        cfg = self.cfg
+        self.alpha = (1.0 - cfg.g) * self.alpha + cfg.g
+        self.rt = self.rc
+        self.rc = max(self._min_rate(), self.rc * (1.0 - self.alpha / 2))
+        self.t_events = 0
+        self.b_events = 0
+        self.byte_count = 0.0
+        self.alpha_last = now
+        self.incr_last = now
+
+    # -- rate increase -----------------------------------------------------
+    def _increase_event(self, *, timer: bool):
+        if timer:
+            self.t_events += 1
+        else:
+            self.b_events += 1
+        f = self.cfg.fast_recovery_events
+        if self.t_events > f and self.b_events > f:
+            self.rt = min(self.line, self.rt + self._rhai())   # hyper
+        elif self.t_events > f or self.b_events > f:
+            self.rt = min(self.line, self.rt + self._rai())    # additive
+        # fast recovery: rt untouched, rc halves the gap toward it
+        self.rc = min(self.line, (self.rt + self.rc) / 2.0)
+
+    # -- checkpoint / restore (travels in the QP dump) --------------------
+    def dump(self, now: int) -> dict:
+        """Timer phases are stored relative to ``now`` so the state is
+        meaningful on a destination whose clock reads the same fabric
+        (and harmless if it does not)."""
+        return {"alpha": self.alpha, "rc": self.rc, "rt": self.rt,
+                "line": self.line, "tokens": self.tokens,
+                "byte_count": self.byte_count,
+                "t_events": self.t_events, "b_events": self.b_events,
+                "alpha_phase": now - self.alpha_last,
+                "incr_phase": now - self.incr_last,
+                "cnps_handled": self.cnps_handled,
+                "rate_cuts": self.rate_cuts}
+
+    @classmethod
+    def restore(cls, cfg: ECNConfig, d: dict, now: int,
+                line_rate: float,
+                step_s: float = 1e-6) -> "CongestionControl":
+        cc = cls(cfg, line_rate, now, step_s)
+        cc.alpha = d["alpha"]
+        # the learned rate is absolute: resume at it (clamped to the new
+        # port's line rate), NOT at line rate — the headline behaviour
+        cc.rc = min(d["rc"], line_rate)
+        cc.rt = min(d["rt"], line_rate)
+        cc.tokens = min(d["tokens"],
+                        max(cfg.burst_bytes, MIN_BUCKET_BYTES))
+        cc.byte_count = d["byte_count"]
+        cc.t_events = d["t_events"]
+        cc.b_events = d["b_events"]
+        cc.alpha_last = now - d["alpha_phase"]
+        cc.incr_last = now - d["incr_phase"]
+        cc.cnps_handled = d["cnps_handled"]
+        cc.rate_cuts = d["rate_cuts"]
+        return cc
 
 
 class _ClassQueue:
@@ -291,6 +586,13 @@ class EgressPort:
         self.tx_packets = 0
         self._window: Deque[Tuple[int, int]] = deque()  # (enq_at, nbytes)
         self._win_bytes = 0
+        # ECN: per-port marking rng (decoupled from the fabric's loss
+        # stream) + trailing window of CE-marked bytes, the signal the
+        # orchestrator's admission prices transfers against
+        self._ecn_rng = random.Random(fabric.seed * 1_000_003
+                                      + gid * 7919 + 1)
+        self._mark_window: Deque[Tuple[int, int]] = deque()
+        self._mark_bytes = 0
         self._build_classes()
 
     # -- configuration -------------------------------------------------------
@@ -363,16 +665,36 @@ class EgressPort:
         self._win_bytes += n
         self._trim(now)
         self._class_of(pkt).push(self._tenant_of(pkt), pkt)
+        ecn = self.fabric.ecn
+        if ecn.enabled and ecn.mark_egress:
+            # RED at enqueue: occupancy against the reference backlog
+            # (egress queues have no hard byte bound of their own)
+            occ = self.backlog_bytes / ecn.egress_queue_bytes
+            if maybe_mark(self.fabric, self._ecn_rng, pkt, occ, self.gid):
+                self._mark_window.append((now, n))
+                self._mark_bytes += n
 
     # -- utilization window --------------------------------------------------
     def _trim(self, now: int):
         horizon = self.fabric.utilization_window
         while self._window and self._window[0][0] <= now - horizon:
             self._win_bytes -= self._window.popleft()[1]
+        while self._mark_window and \
+                self._mark_window[0][0] <= now - horizon:
+            self._mark_bytes -= self._mark_window.popleft()[1]
 
     def window_bytes(self, now: int) -> int:
         self._trim(now)
         return self._win_bytes
+
+    def marking_rate(self, now: int) -> float:
+        """Fraction of bytes offered to this port over the trailing
+        window that left CE-marked — the congestion signal admission
+        reads (0.0 with ECN off or a quiet port)."""
+        self._trim(now)
+        if self._win_bytes <= 0:
+            return 0.0
+        return min(1.0, self._mark_bytes / self._win_bytes)
 
     @property
     def backlog_bytes(self) -> int:
@@ -576,6 +898,11 @@ class IngressPort:
         self.rx_packets = 0
         self._window: Deque[Tuple[int, int]] = deque()  # (step, nbytes)
         self._win_bytes = 0
+        # ECN: marking rng distinct from the egress port's stream
+        self._ecn_rng = random.Random(fabric.seed * 1_000_003
+                                      + gid * 7919 + 2)
+        self._mark_window: Deque[Tuple[int, int]] = deque()
+        self._mark_bytes = 0
         self._rnr_mute: Dict[Tuple[int, int], int] = {}
         #   ^ (src_gid, src_qpn) -> step until which further RNR NAKs
         #     for that sender are suppressed
@@ -645,10 +972,21 @@ class IngressPort:
         self._trim(now)
         return self._win_bytes
 
+    def marking_rate(self, now: int) -> float:
+        """Fraction of arriving bytes CE-marked at this queue over the
+        trailing window (the destination-side congestion signal)."""
+        self._trim(now)
+        if self._win_bytes <= 0:
+            return 0.0
+        return min(1.0, self._mark_bytes / self._win_bytes)
+
     def _trim(self, now: int):
         horizon = self.fabric.utilization_window
         while self._window and self._window[0][0] <= now - horizon:
             self._win_bytes -= self._window.popleft()[1]
+        while self._mark_window and \
+                self._mark_window[0][0] <= now - horizon:
+            self._mark_bytes -= self._mark_window.popleft()[1]
 
     # -- arrival (wire latency expired) --------------------------------------
     def enqueue(self, pkt: Packet, now: int):
@@ -703,6 +1041,15 @@ class IngressPort:
         self.fabric.stats["rx_queued"] += 1
         self.fabric.stats[f"rx_queued@{self.gid}"] += 1
         self._push(pkt)
+        ecn = self.fabric.ecn
+        if ecn.enabled and ecn.mark_ingress:
+            # RED against the bounded queue itself: marking starts at
+            # ~kmin occupancy, well before overflow draws an RNR NAK —
+            # the DCQCN ordering (slow down first, drop last)
+            occ = self.backlog_bytes / self.cfg.queue_bytes
+            if maybe_mark(self.fabric, self._ecn_rng, pkt, occ, self.gid):
+                self._mark_window.append((now, n))
+                self._mark_bytes += n
 
     def _qp_epsn(self, pkt: Packet) -> Optional[int]:
         """Responder epsn of the destination QP, or None when order is

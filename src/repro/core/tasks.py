@@ -9,7 +9,8 @@ actually migrating — mirroring the paper's minimal-changes claim, which
 """
 from __future__ import annotations
 
-from repro.core.packets import MIG_OPS, NakCode, Op, Packet
+from repro.core.packets import CTRL_OPS, MIG_OPS, NakCode, Op, Packet
+from repro.core.qos import CLASS_APP, CongestionControl, classify
 from repro.core.states import QPState, can_receive, can_send
 
 
@@ -33,6 +34,20 @@ def _retx(qp, pkt: Packet):
     resume handshake has updated qp.dest_*."""                 # [MIGR]
     pkt.src_gid, pkt.src_qpn = qp.device.gid, qp.qpn             # [MIGR]
     pkt.dest_gid, pkt.dest_qpn = qp.dest_gid, qp.dest_qpn        # [MIGR]
+    # ECN codepoints are per-transmission: a CE mark belongs to the
+    # previous traversal's queues, and ECT tracks the current config
+    pkt.ect = qp.device.fabric.ecn.enabled and pkt.op not in CTRL_OPS
+    pkt.ce = False
+    # DCQCN paces the QP's *entire* egress, retransmissions included —
+    # but go-back-N must stay atomic (a partially retransmitted window
+    # needs cursor state and re-ordering care), so retransmits overdraw
+    # the pacing bucket instead of waiting on it: the window goes out
+    # now, and fresh sends stall until the debt repays at rc. Long-run
+    # rate honors the reaction point either way. The enabled gate makes
+    # a runtime configure_ecn(disabled) take effect immediately: stale
+    # rate state goes fully dormant, as the Fabric docstring promises.
+    if qp.cc is not None and qp.device.fabric.ecn.enabled:
+        qp.cc.tokens -= pkt.nbytes()
     # Karn's algorithm: a retransmitted PSN yields no RTT sample (the
     # eventual ACK is ambiguous between the two transmissions)
     qp._send_time.pop(pkt.psn, None)
@@ -42,7 +57,24 @@ def _retx(qp, pkt: Packet):
 def _mk(qp, op, **kw) -> Packet:
     return Packet(op=op, src_gid=qp.device.gid, src_qpn=qp.qpn,
                   dest_gid=qp.dest_gid, dest_qpn=qp.dest_qpn,
-                  tenant=qp.tenant, **kw)
+                  tenant=qp.tenant,
+                  # ECT on data ops only: control must never be marked
+                  # (a CE'd ACK could only ask the victim to slow down)
+                  ect=(qp.device.fabric.ecn.enabled
+                       and op not in CTRL_OPS),
+                  **kw)
+
+
+def _ensure_cc(qp) -> "CongestionControl":
+    """Reaction-point rate state, created lazily under an ECN-enabled
+    fabric (None otherwise — the ECN-off fast path carries no state)."""
+    fab = qp.device.fabric
+    if not fab.ecn.enabled:
+        return None
+    if qp.cc is None:
+        qp.cc = CongestionControl(fab.ecn, fab.bytes_per_step, fab.now,
+                                  fab.step_s())
+    return qp.cc
 
 
 def _track_send(qp, pkt: Packet):
@@ -57,17 +89,44 @@ def _track_send(qp, pkt: Packet):
 
 
 def requester(qp):
-    if qp.state == QPState.PAUSED:                              # [MIGR]
-        return                                                  # [MIGR]
+    """Send-side admission pipeline. Every fresh packet passes, in this
+    order and in this one place: (1) the migration gates (PAUSED /
+    resume handshake), (2) the recovery gates (RNR parking + whole-
+    window resend, RTO go-back-N), (3) the go-back-N window budget,
+    (4) DCQCN rate admission (``qp.cc``, ECN-enabled fabrics only) — all
+    ahead of the egress port's per-tenant token bucket, which shapes
+    whatever this pipeline admits. Retransmissions bypass (3)/(4): they
+    re-offer bytes the window already admitted, and their pacing is the
+    RTO/min_rnr_timer backoff itself."""
     now = qp.device.fabric.now
+    if qp.cc is not None and qp.device.fabric.ecn.enabled:
+        # run the DCQCN timers even while parked or blocked: rate
+        # recovery is wall-clock (step-clock) driven, not send-driven
+        qp.cc.advance(now, qp.device.fabric.bytes_per_step)
+    if not _migration_gate(qp, now):
+        return
+    if not _recovery_gate(qp, now):
+        return
+    _admit_fresh(qp, now)
+
+
+def _migration_gate(qp, now) -> bool:
+    """False while migration state machinery owns the send side."""
+    if qp.state == QPState.PAUSED:                              # [MIGR]
+        return False                                            # [MIGR]
     if qp.resume_pending and qp.state == QPState.RTS:           # [MIGR]
         # retried until the partner's RESUME_ACK arrives        # [MIGR]
         if now - qp.last_resume_tx >= qp.RETRANS_TIMEOUT:       # [MIGR]
             _emit(qp, _mk(qp, Op.RESUME, psn=qp.una))           # [MIGR]
             qp.last_resume_tx = now                             # [MIGR]
-        return                                                  # [MIGR]
-    if not can_send(qp.state):
-        return
+        return False                                            # [MIGR]
+    return can_send(qp.state)
+
+
+def _recovery_gate(qp, now) -> bool:
+    """False while loss/not-ready recovery owns the send side: RNR
+    parking, the post-backoff whole-window resend, and RTO go-back-N
+    all suppress fresh sends for this step."""
     # receiver-not-ready backoff (IBA): an RNR NAK parks the whole send
     # side — no fresh packets, no timeout retransmission — until the
     # min_rnr_timer expires, then the *whole unacknowledged window*
@@ -76,7 +135,7 @@ def requester(qp):
     # reports can sit ahead of packets the receiver never got, and
     # go-back-N must never skip past una.
     if now < qp.rnr_wait_until:
-        return
+        return False
     if qp.rnr_resend_pending:
         # NIC self-awareness: while the previous window is still
         # serialising on our own egress port, queueing another copy
@@ -89,21 +148,46 @@ def requester(qp):
         fl = qp.device.fabric.port(qp.device.gid).flows.get(qp.dest_gid)
         if (fl is not None and fl.queued_bytes > 0
                 and now - qp.last_progress <= qp.rto):
-            return
+            return False
+        # DCQCN: hold the whole-window retransmit while the pacing
+        # bucket is repaying overdraft — re-offering 30+ KiB into a
+        # queue that just RNR'd us is exactly the storm rate control
+        # exists to prevent. Bounded: the debt repays at rc, and rc is
+        # floored at min_rate. Holding also protects the rnr_retry
+        # budget (no retransmit -> no fresh NAK -> no charge).
+        if qp.cc is not None and qp.cc.tokens < 0 \
+                and qp.device.fabric.ecn.enabled:
+            return False
         for p in qp.inflight:
             _retx(qp, p)
         qp.rnr_resend_pending = False
         qp.last_progress = now
-        return
+        return False
     # retransmit on timeout (go-back-N); back the timer off so a slow,
     # contended link is not flooded with duplicate windows
     if qp.inflight and now - qp.last_progress > qp.rto:
+        if qp.cc is not None and qp.cc.tokens < 0 \
+                and qp.device.fabric.ecn.enabled:
+            return False        # paced: hold go-back-N, don't back off
         for pkt in qp.inflight:
             _retx(qp, pkt)
         qp.last_progress = now
         qp.rto = min(qp.rto * 2, qp.MAX_RTO)   # RFC 6298 §5.5 backoff
-        return
+        return False
+    return True
+
+
+def _admit_fresh(qp, now):
+    """Fresh-packet admission: window budget, then the DCQCN pacing
+    bucket per packet. The rate check sits *before* the bytes reach the
+    fabric so an over-limit QP leaves its WQE queued (no duplicate
+    state to unwind), and the egress port's tenant bucket still applies
+    downstream."""
     budget = qp.WINDOW - len(qp.inflight)
+    if budget > 0 and (qp.sq or qp.cur_wqe is not None):
+        cc = _ensure_cc(qp)
+    else:
+        cc = None
     while budget > 0:
         if qp.cur_wqe is None:
             if not qp.sq:
@@ -112,6 +196,14 @@ def requester(qp):
             qp.cur_wqe.first_psn = qp.sq_psn
         wr = qp.cur_wqe
         if wr.opcode == Op.READ_REQ:
+            # a READ's wire cost is dominated by the *response* the
+            # request elicits — pace injection by it, or READ-driven
+            # congestion would be invisible to the reaction point (the
+            # responder emits READ_RESP unpaced; the reader is the
+            # congestion source and the only paceable end)
+            n = 64 + 64 + wr.sge.length
+            if cc is not None and not cc.admit(n):
+                return              # paced: request stays queued
             pkt = _mk(qp, Op.READ_REQ, psn=qp.sq_psn, raddr=wr.raddr,
                       rkey=wr.rkey, length=wr.sge.length, wr_id=wr.wr_id)
             wr.last_psn = qp.sq_psn
@@ -119,12 +211,16 @@ def requester(qp):
             qp.inflight.append(pkt)
             _track_send(qp, pkt)
             _emit(qp, pkt)
+            if cc is not None:
+                cc.on_send(n)
             qp.pending_comp.append((wr.last_psn, wr.wr_id, "READ",
                                     wr.sge.length))
             qp.cur_wqe = None
             budget -= 1
             continue
         chunk = min(qp.MTU, wr.sge.length - wr.sent)
+        if cc is not None and not cc.admit(64 + chunk):
+            return                  # paced: resumes as tokens refill
         payload = wr.sge.mr.read(wr.sge.offset + wr.sent, chunk)
         first = wr.sent == 0
         last = wr.sent + chunk >= wr.sge.length
@@ -138,6 +234,8 @@ def requester(qp):
         qp.inflight.append(pkt)
         _track_send(qp, pkt)
         _emit(qp, pkt)
+        if cc is not None:
+            cc.on_send(64 + chunk)
         budget -= 1
         if last:
             qp.pending_comp.append((wr.last_psn, wr.wr_id,
@@ -150,12 +248,33 @@ def requester(qp):
 # ---------------------------------------------------------------------------
 
 
+def _note_congestion(qp, pkt: Packet):
+    """DCQCN notification point: a Congestion-Experienced arrival draws
+    a CNP back at the sender — coalesced to one per ``cnp_interval``
+    steps per QP, the way real NPs rate-limit CNP generation so a
+    marked burst does not become a CNP storm. Runs for duplicates too:
+    a CE'd duplicate still crossed the congested queue."""
+    fab = qp.device.fabric
+    if not fab.ecn.enabled:
+        return
+    now = fab.now
+    if now < qp.cnp_mute_until:
+        return
+    qp.cnp_mute_until = now + fab.ecn.cnp_interval
+    qp.cnps_sent += 1
+    cls = classify(pkt)
+    fab.stats["cnps_sent"] += 1
+    fab.stats[f"cnps_sent@{qp.device.gid}"] += 1
+    fab.stats[f"{cls}_cnps_sent"] += 1
+    _emit(qp, _mk(qp, Op.CNP, psn=pkt.psn, ecn_class=cls))
+
+
 def responder(qp):
     n = len(qp.rx)
     for _ in range(n):
         pkt = qp.rx.popleft()
         if pkt.op in (Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK,
-                      Op.READ_RESP):
+                      Op.READ_RESP, Op.CNP):
             qp.rx.append(pkt)         # completer-class packet; requeue
             continue
         if qp.state == QPState.STOPPED:                          # [MIGR]
@@ -164,6 +283,8 @@ def responder(qp):
             continue                                             # [MIGR]
         if not can_receive(qp.state):
             continue
+        if pkt.ce and pkt.ect:                                   # [ECN]
+            _note_congestion(qp, pkt)                            # [ECN]
         if pkt.psn != qp.epsn:
             if pkt.psn < qp.epsn:   # duplicate: re-ack, drop
                 _emit(qp, _mk(qp, Op.ACK, psn=qp.epsn - 1))
@@ -271,6 +392,14 @@ def _handle_rnr_nak(qp, pkt: Packet):
             return
     qp.rnr_wait_until = now + qp.min_rnr_timer
     qp.rnr_resend_pending = True
+    # DCQCN: receiver-not-ready IS a congestion event — the severe one.
+    # A flow whose packets drop at the ingress queue never sees CE
+    # marks (they ride *delivered* packets), so the RNR NAK is its only
+    # feedback; cut the reaction point like a CNP would.        # [ECN]
+    cc = _ensure_cc(qp)
+    if cc is not None:
+        cc.advance(now, qp.device.fabric.bytes_per_step)
+        cc.cut(now)
     # Karn across the pause: ACKs of anything outstanding are ambiguous
     # once the window will be retransmitted
     qp._send_time.clear()
@@ -308,6 +437,29 @@ def _rnr_retry_exhausted(qp):
     qp._send_time.clear()
     qp.rnr_resend_pending = False
     qp.rnr_wait_until = -1
+
+
+def _handle_cnp(qp, pkt: Packet):
+    """DCQCN reaction point: multiplicative decrease of the send rate,
+    alpha update, and a reset of the increase machinery.
+
+    A CNP reports a *delivered* (CE-marked) packet, not a loss, so the
+    RTO machinery is deliberately untouched: no backoff, no
+    ``last_progress`` rewind, and — the Karn interaction — no eviction
+    of ``_send_time`` stamps. The marked packet's ACK still yields an
+    RTT sample (tests/test_ecn.py pins this; clearing the stamps here
+    would starve the RTO estimator exactly when queues are building and
+    its samples matter most)."""
+    fab = qp.device.fabric
+    cc = _ensure_cc(qp)
+    if cc is None:
+        return                  # ECN disabled: stray CNP ignored
+    cc.advance(fab.now, fab.bytes_per_step)
+    cc.on_cnp(fab.now)
+    fab.stats["cnps_handled"] += 1
+    fab.stats[f"cnps_handled@{qp.device.gid}"] += 1
+    cls = pkt.ecn_class if pkt.ecn_class is not None else CLASS_APP
+    fab.stats[f"{cls}_cnps_handled"] += 1
 
 
 def _rtt_sample(qp, sample: float):
@@ -354,12 +506,31 @@ def completer(qp):
     for _ in range(n):
         pkt = qp.rx.popleft()
         if pkt.op not in (Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK,
-                          Op.READ_RESP):
+                          Op.READ_RESP, Op.CNP):
             qp.rx.append(pkt)
             continue
         if pkt.op == Op.ACK:
             _ack_up_to(qp, pkt.psn)
+        elif pkt.op == Op.CNP:                                   # [ECN]
+            _handle_cnp(qp, pkt)                                 # [ECN]
         elif pkt.op == Op.READ_RESP:
+            if pkt.ce and pkt.ect:                               # [ECN]
+                # a marked response: WE are the congestion source (our
+                # READ_REQs elicit these bytes, and their admission is
+                # charged at response size), so cut our own reaction
+                # point directly — a CNP to the responder would throttle
+                # a rate that never governs READ_RESP emission. Own mute
+                # field: the NP's CNP coalescing must not suppress this
+                # (or vice versa) on a bidirectional QP.
+                cc = _ensure_cc(qp)
+                if cc is not None and \
+                        qp.device.fabric.now >= qp.rd_cut_mute_until:
+                    qp.rd_cut_mute_until = (qp.device.fabric.now
+                                            + qp.device.fabric.ecn
+                                            .cnp_interval)
+                    cc.advance(qp.device.fabric.now,
+                               qp.device.fabric.bytes_per_step)
+                    cc.cut(qp.device.fabric.now)
             # single-MTU READ: find the pending read WR, deliver payload
             _ack_up_to(qp, pkt.psn)
         elif pkt.op == Op.NAK:

@@ -26,6 +26,12 @@ all senders. With the default unlimited ingress the port is a
 pass-through (byte-identical to the egress-only model); a finite rate
 makes incast visible, and queue overflow draws receiver-not-ready NAKs
 (``NakCode.RNR``) so senders back off instead of timing out.
+
+With ECN enabled (``configure_ecn``), both port types RED-mark ECT
+packets as their queues fill, responders answer Congestion-Experienced
+arrivals with CNPs, and each QP's DCQCN reaction point paces its sends
+— so congestion is resolved by rate adaptation *before* the
+overflow/RNR/timeout machinery has to fire.
 """
 from __future__ import annotations
 
@@ -34,7 +40,8 @@ from collections import defaultdict
 from typing import Dict, List, Optional
 
 from repro.core.packets import MIG_OPS, Packet
-from repro.core.qos import EgressPort, IngressConfig, IngressPort, QoSConfig
+from repro.core.qos import (ECNConfig, EgressPort, IngressConfig,
+                            IngressPort, QoSConfig)
 
 # sim-time -> wall-time conversion: one fabric pump step models roughly a
 # microsecond of NIC time. All MigrationReport second-figures derive from
@@ -49,13 +56,16 @@ class Fabric:
     def __init__(self, *, loss_prob: float = 0.0, seed: int = 0,
                  latency_steps: int = 1, bandwidth_Bps: float = 40e9 / 8,
                  qos: Optional[QoSConfig] = None,
-                 ingress: Optional[IngressConfig] = None):
+                 ingress: Optional[IngressConfig] = None,
+                 ecn: Optional[ECNConfig] = None):
         self.loss_prob = loss_prob
+        self.seed = seed            # ports derive their ECN-marking rngs
         self.rng = random.Random(seed)
         self.latency = max(1, latency_steps)
         self.now = 0
         self.qos = (qos or QoSConfig()).validate()
         self.ingress_default = (ingress or IngressConfig()).validate()
+        self.ecn = (ecn or ECNConfig()).validate()
         self.utilization_window = UTILIZATION_WINDOW
         self._ports: Dict[int, EgressPort] = {}       # src gid -> port
         self._ingress: Dict[int, IngressPort] = {}    # dest gid -> port
@@ -92,6 +102,29 @@ class Fabric:
             port.reconfigure(qos)
         for iport in self._ingress.values():
             iport.reconfigure(qos=qos)
+
+    # -- ECN / DCQCN ---------------------------------------------------------
+    def configure_ecn(self, ecn: ECNConfig):
+        """Operator knob: swap the fabric-wide ECN/DCQCN config (RED
+        marking thresholds on every port, CNP coalescing, reaction-point
+        rate parameters). QPs that already carry congestion state keep
+        their learned rates; new rate state is created against the new
+        config on first use. Disabling stops marking and CNP generation
+        immediately — existing rate state goes dormant (no admission
+        gate is consulted while disabled)."""
+        self.ecn = ecn.validate()
+
+    def marking_rate(self, gid: int) -> float:
+        """Fraction of bytes CE-marked at a node's *egress* port over
+        the trailing utilization window (0.0 with ECN off)."""
+        port = self._ports.get(gid)
+        return 0.0 if port is None else port.marking_rate(self.now)
+
+    def ingress_marking_rate(self, gid: int) -> float:
+        """Destination-side twin: fraction of arriving bytes CE-marked
+        at a node's ingress queue over the trailing window."""
+        port = self._ingress.get(gid)
+        return 0.0 if port is None else port.marking_rate(self.now)
 
     # -- ingress (receive-side) ----------------------------------------------
     def configure_ingress(self, cfg: IngressConfig,

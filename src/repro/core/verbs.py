@@ -47,6 +47,14 @@ class WorkCompletion:
 
 
 @dataclass
+class AsyncEvent:
+    """ibv_get_async_event-style affiliated event, delivered to the
+    owning context's event queue (``Context.poll_async``)."""
+    event_type: str                 # e.g. "SRQ_LIMIT_REACHED"
+    srqn: Optional[int] = None
+
+
+@dataclass
 class SGE:
     mr: "MemoryRegion"
     offset: int
@@ -148,12 +156,50 @@ class CompletionQueue:
 
 
 class SharedReceiveQueue:
-    def __init__(self, srqn: int):
+    """SRQ with the ibv_modify_srq SRQ_LIMIT watermark: arming a limit
+    makes the SRQ fire a one-shot ``SRQ_LIMIT_REACHED`` async event when
+    the number of posted receives falls below it — the refill signal
+    verbs promises applications sharing one receive pool. Re-arm with
+    another ``modify`` call after handling the event (IBA semantics:
+    the limit disarms when it fires)."""
+
+    def __init__(self, srqn: int, ctx: Optional["Context"] = None):
         self.srqn = srqn
+        self.ctx = ctx
         self.queue: Deque[RecvWR] = deque()
+        self.limit = 0                  # watermark (0 = disarmed)
+        self.armed = False
 
     def post(self, wr: RecvWR):
         self.queue.append(wr)
+
+    def modify(self, *, srq_limit: int):
+        """ibv_modify_srq(IBV_SRQ_LIMIT): arm the low-watermark. If the
+        queue is already below the new limit the event fires
+        immediately — the application asked to know, and waiting for
+        one more consume would race the refill it wants to trigger."""
+        if srq_limit < 0:
+            raise ValueError("srq_limit must be >= 0")
+        self.limit = srq_limit
+        self.armed = srq_limit > 0
+        if self.armed and len(self.queue) < self.limit:
+            self._fire()
+
+    def pop(self) -> Optional[RecvWR]:
+        """Consume one posted receive (QP next_rr path), firing the
+        armed watermark when consumption crosses below it."""
+        if not self.queue:
+            return None
+        wr = self.queue.popleft()
+        if self.armed and len(self.queue) < self.limit:
+            self._fire()
+        return wr
+
+    def _fire(self):
+        self.armed = False              # one-shot until re-armed
+        if self.ctx is not None:
+            self.ctx.events.append(
+                AsyncEvent("SRQ_LIMIT_REACHED", srqn=self.srqn))
 
 
 class QueuePair:
@@ -222,6 +268,18 @@ class QueuePair:
         self.rnr_nak_sent = False       # in-window RNR mute (responder)
         self.cur_rr: Optional[RecvWR] = None
         self.rx: Deque[Packet] = deque()
+        # DCQCN congestion control (repro.core.qos). ``cc`` is the
+        # reaction-point rate state, created lazily on first send under
+        # an ECN-enabled fabric (None otherwise: the fast path pays one
+        # branch, and the wire model is byte-identical with ECN off);
+        # the notification-point side is the CNP coalescing mute plus a
+        # counter that migrates with the QP.                      # [ECN]
+        self.cc = None                  # CongestionControl | None
+        self.cnp_mute_until = -1        # NP: one CNP per cnp_interval
+        self.rd_cut_mute_until = -1     # reader self-cut coalescing —
+        #   separate from the NP mute: on a bidirectional QP the two
+        #   congestion paths must not suppress each other
+        self.cnps_sent = 0              # NP counter (dumped/restored)
         # migration                                              # [MIGR]
         self.resume_pending = False     # REFILL queues a resume  # [MIGR]
         self.last_resume_tx = -10**9    # resume retry timer      # [MIGR]
@@ -255,7 +313,7 @@ class QueuePair:
     # -- helpers ----------------------------------------------------------------
     def next_rr(self) -> Optional[RecvWR]:
         if self.srq is not None and self.srq.queue:
-            return self.srq.queue.popleft()
+            return self.srq.pop()       # fires the SRQ_LIMIT watermark
         if self.rq:
             return self.rq.popleft()
         return None
@@ -296,6 +354,9 @@ class Context:
         self.cqs: List[CompletionQueue] = []
         self.srqs: List[SharedReceiveQueue] = []
         self.qps: List[QueuePair] = []
+        # affiliated async events (SRQ_LIMIT_REACHED, ...) — the
+        # ibv_get_async_event surface, polled not blocking
+        self.events: Deque[AsyncEvent] = deque()
 
     def alloc_pd(self) -> ProtectionDomain:
         pd = ProtectionDomain(self, self.device.next_pdn())
@@ -308,9 +369,15 @@ class Context:
         return cq
 
     def create_srq(self) -> SharedReceiveQueue:
-        srq = SharedReceiveQueue(self.device.next_srqn())
+        srq = SharedReceiveQueue(self.device.next_srqn(), ctx=self)
         self.srqs.append(srq)
         return srq
+
+    def poll_async(self, n: int = 16) -> List[AsyncEvent]:
+        out = []
+        while self.events and len(out) < n:
+            out.append(self.events.popleft())
+        return out
 
 
 class RdmaDevice:

@@ -126,14 +126,30 @@ class Orchestrator:
         if rx_cap is not None:
             effective_bw = min(effective_bw,
                                rx_cap * max(1e-6, 1.0 - rx_util))
+        # ECN: observed marking rates on both ports are a *leading*
+        # congestion signal — utilization says how full the pipe is,
+        # marking says the queues are already deep enough that DCQCN is
+        # actively slowing senders down. A migration admitted into a
+        # marking port would both crawl and steal the headroom the
+        # congested flows are converging toward, so discount the
+        # estimate by the marked fraction at each end (0.0 with ECN
+        # off: the estimate is unchanged).
+        mark_src = fabric.marking_rate(container.node.gid)
+        mark_dst = fabric.ingress_marking_rate(dest_node.gid)
+        for frac in (mark_src, mark_dst):
+            if frac > 0.0:
+                effective_bw *= max(1e-6, 1.0 - frac)
         est_s = est / effective_bw
         if self.max_transfer_s is not None and est_s > self.max_transfer_s:
             raise AdmissionError(
                 f"estimated transfer {est_s:.4f}s (egress-port util "
-                f"{util:.0%}, dest ingress util {rx_util:.0%}) exceeds "
-                f"budget {self.max_transfer_s:.4f}s")
+                f"{util:.0%}, dest ingress util {rx_util:.0%}, ECN "
+                f"marking src {mark_src:.0%} / dest {mark_dst:.0%}) "
+                f"exceeds budget {self.max_transfer_s:.4f}s")
         checks.append("bandwidth")
         checks.append("ingress")
+        if getattr(fabric, "ecn", None) is not None and fabric.ecn.enabled:
+            checks.append("ecn")
         return MigrationPlan(container.name, container.node.gid,
                              dest_node.gid, est, est_s, checks)
 

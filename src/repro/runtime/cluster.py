@@ -14,7 +14,7 @@ import msgpack
 
 from repro.core.migration import MigrationController
 from repro.core.namespace import GlobalNamespace
-from repro.core.qos import IngressConfig, QoSConfig
+from repro.core.qos import ECNConfig, IngressConfig, QoSConfig
 from repro.core.transport import Fabric
 from repro.core.verbs import Context, RdmaDevice
 from repro.orchestrator import Orchestrator
@@ -78,13 +78,16 @@ class SimCluster:
                  seed: int = 0, link_bandwidth_Bps: Optional[float] = None,
                  node_capacity: Optional[int] = None,
                  qos: Optional[QoSConfig] = None,
-                 ingress: Optional[IngressConfig] = None):
+                 ingress: Optional[IngressConfig] = None,
+                 ecn: Optional[ECNConfig] = None):
         fab_kw = {} if link_bandwidth_Bps is None else \
             {"bandwidth_Bps": link_bandwidth_Bps}
         if qos is not None:
             fab_kw["qos"] = qos
         if ingress is not None:
             fab_kw["ingress"] = ingress
+        if ecn is not None:
+            fab_kw["ecn"] = ecn
         self.fabric = Fabric(loss_prob=loss_prob, seed=seed, **fab_kw)
         self.namespace = GlobalNamespace()
         self.nodes = [Node(self, gid, capacity=node_capacity)
@@ -138,6 +141,20 @@ class SimCluster:
                             rnr_nak_interval=rnr_nak_interval)
         gid = None if node is None else self.nodes[node].gid
         self.fabric.configure_ingress(cfg, gid=gid)
+
+    def configure_ecn(self, enabled: bool = True, **knobs):
+        """Operator knob: ECN/DCQCN congestion control, fabric-wide.
+        ``knobs`` are `repro.core.qos.ECNConfig` fields — RED marking
+        thresholds (``kmin``/``kmax``/``pmax``, ``egress_queue_bytes``,
+        ``mark_egress``/``mark_ingress``), CNP coalescing
+        (``cnp_interval``) and the DCQCN reaction-point parameters
+        (``g``, ``alpha_timer``, ``increase_timer``, ``byte_counter``,
+        ``fast_recovery_events``, ``rai_Bps``/``rhai_Bps``,
+        ``min_rate_Bps``, ``burst_bytes``). Disabled by default: ports
+        never mark, no CNPs, no per-QP rate state — figures are
+        byte-identical to the ECN-less fabric. A QP's learned rate
+        survives `migrate` (it rides the verbs dump)."""
+        self.fabric.configure_ecn(ECNConfig(enabled=enabled, **knobs))
 
     def configure_rnr(self, name: Optional[str] = None, *,
                       rnr_retry: Optional[int] = None,

@@ -1,0 +1,547 @@
+"""ECN/DCQCN congestion control + SRQ limit watermark.
+
+Pins the congestion subsystem end to end: ECT/CE codepoints and the CNP
+op (packets.py), RED marking at both port types with per-class stats
+twins (qos.py), notification-point CNP generation/coalescing and the
+reaction-point rate machinery (tasks.py/qos.py), rate enforcement at
+send admission, the Karn/ECN interaction (a CNP is not a loss),
+congestion-state migration (dump.py), admission pricing against
+observed marking rates (orchestrator.py), and the ibv_modify_srq
+SRQ_LIMIT one-shot async event (verbs.py)."""
+import pytest
+
+from repro.core.dump import dump_context, restore_context
+from repro.core.packets import CTRL_OPS, Op
+from repro.core.qos import (CLASS_APP, CLASS_MIG, CongestionControl,
+                            ECNConfig)
+from repro.core.states import QPState
+from repro.core.verbs import QueuePair, RecvWR, SGE
+from repro.orchestrator.orchestrator import AdmissionError
+from repro.runtime.apps import SendBwApp
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import connect_pair
+from tests.helpers import make_channel_pair, make_sendbw_pair
+
+BPS = 2e8        # 200 B/step ports
+
+
+def _run(cl, n):
+    for _ in range(n):
+        cl.step_all()
+
+
+def _incast(n_senders, *, ecn, steps=2500, queue=48 * 1024, **ecn_kw):
+    cl = SimCluster(n_senders + 1, link_bandwidth_Bps=BPS)
+    cl.configure_ingress(rx_bandwidth_Bps=BPS, queue_bytes=queue, node=0)
+    if ecn:
+        cl.configure_ecn(enabled=True, **ecn_kw)
+    receivers = []
+    for i in range(n_senders):
+        A = cl.launch(f"s{i}", i + 1)
+        B = cl.launch(f"r{i}", 0)
+        aa = SendBwApp(msg_size=4096, window=8)
+        aa.attach(A, sender=True)
+        A.app = aa
+        ab = SendBwApp(msg_size=4096, window=8)
+        ab.attach(B, sender=False)
+        B.app = ab
+        connect_pair(aa.channels[0], ab.channels[0])
+        receivers.append(ab)
+    _run(cl, steps)
+    return cl, [r.received for r in receivers]
+
+
+# ---------------------------------------------------------------------------
+# config + RED curve
+# ---------------------------------------------------------------------------
+
+
+def test_ecn_config_validation():
+    with pytest.raises(ValueError, match="kmin"):
+        ECNConfig(kmin=0.9, kmax=0.5).validate()
+    with pytest.raises(ValueError, match="pmax"):
+        ECNConfig(pmax=0.0).validate()
+    with pytest.raises(ValueError, match="timers"):
+        ECNConfig(cnp_interval=0).validate()
+    with pytest.raises(ValueError, match="rai_Bps"):
+        ECNConfig(rai_Bps=-1.0).validate()
+    with pytest.raises(ValueError):
+        SimCluster(2).configure_ecn(enabled=True, g=2.0)
+
+
+def test_red_marking_curve():
+    cfg = ECNConfig(kmin=0.5, kmax=1.0, pmax=0.4)
+    assert cfg.mark_probability(0.0) == 0.0
+    assert cfg.mark_probability(0.49) == 0.0
+    assert cfg.mark_probability(0.75) == pytest.approx(0.2)
+    assert cfg.mark_probability(1.0) == 1.0
+    assert cfg.mark_probability(2.0) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# disabled by default: no codepoints, no marks, no CNPs, no rate state
+# ---------------------------------------------------------------------------
+
+
+def test_ecn_off_is_inert():
+    cl, _ = _incast(4, ecn=False, steps=1500)
+    s = cl.fabric.stats
+    assert s.get("ecn_marked", 0) == 0
+    assert s.get("cnps_sent", 0) == 0
+    trace_cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    trace_cl.fabric.trace = []
+    c1, c2, ca, cb = make_channel_pair(trace_cl)
+    c2.post_recv(1024)
+    c1.post_send_bytes(b"x" * 512)
+    _run(trace_cl, 40)
+    assert all(not p.ect and not p.ce for p in trace_cl.fabric.trace)
+    assert all(qp.cc is None for qp in ca.ctx.qps + cb.ctx.qps)
+
+
+def test_ect_stamped_on_data_not_control():
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_ecn(enabled=True)
+    cl.fabric.trace = []
+    c1, c2, _, _ = make_channel_pair(cl)
+    c2.post_recv(1024)
+    c1.post_send_bytes(b"x" * 512)
+    _run(cl, 40)
+    data = [p for p in cl.fabric.trace if p.op not in CTRL_OPS]
+    ctrl = [p for p in cl.fabric.trace if p.op in CTRL_OPS]
+    assert data and all(p.ect for p in data)
+    assert ctrl and all(not p.ect for p in ctrl)
+
+
+# ---------------------------------------------------------------------------
+# marking: ingress queue, egress queue, stats twins
+# ---------------------------------------------------------------------------
+
+
+def test_ingress_marking_and_stats_twins():
+    cl, _ = _incast(4, ecn=True, steps=2500)
+    s = cl.fabric.stats
+    assert s["ecn_marked"] > 0
+    assert s["cnps_sent"] > 0 and s["cnps_handled"] > 0
+    for key in ("ecn_marked", "cnps_sent", "cnps_handled"):
+        per_node = sum(v for k, v in s.items()
+                       if k.startswith(f"{key}@"))
+        assert s[key] == per_node, f"{key} aggregate != per-node sum"
+        per_class = (s.get(f"{CLASS_APP}_{key}", 0)
+                     + s.get(f"{CLASS_MIG}_{key}", 0))
+        assert s[key] == per_class, f"{key} aggregate != class sum"
+    assert cl.fabric.ingress_marking_rate(0) > 0.0
+
+
+def test_egress_marking_at_reference_backlog():
+    """A deep egress backlog (reference sized down to a packet) marks at
+    the sender's own port — congestion can live at either end."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_ecn(enabled=True, egress_queue_bytes=2048.0,
+                     mark_ingress=False)
+    make_sendbw_pair(cl, msg_size=4096, window=16)
+    _run(cl, 400)
+    s = cl.fabric.stats
+    assert s["ecn_marked"] > 0
+    assert s["ecn_marked@0"] == s["ecn_marked"]   # sender-side marks
+    assert cl.fabric.marking_rate(0) > 0.0
+    assert cl.fabric.ingress_marking_rate(1) == 0.0
+
+
+def test_marking_disabled_flags():
+    cl, _ = _incast(4, ecn=True, steps=1200, mark_ingress=False,
+                    mark_egress=False)
+    assert cl.fabric.stats.get("ecn_marked", 0) == 0
+
+
+# ---------------------------------------------------------------------------
+# notification point: CNP generation + coalescing
+# ---------------------------------------------------------------------------
+
+
+def test_cnp_coalesced_per_interval():
+    """kmin=kmax=0 marks every ECT packet, so without coalescing the
+    responder would answer every arrival; the NP mute bounds CNPs to
+    one per cnp_interval per QP."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_ecn(enabled=True, kmin=0.0, kmax=0.0, cnp_interval=100)
+    aa, ab = make_sendbw_pair(cl, msg_size=2048, window=4)
+    steps = 600
+    _run(cl, steps)
+    s = cl.fabric.stats
+    assert s["ecn_marked"] > s["cnps_sent"] > 0
+    assert s["cnps_sent"] <= steps / 100 + 2
+    assert ab.received > 0      # marked traffic still delivers
+
+
+# ---------------------------------------------------------------------------
+# reaction point: decrease / recovery / enforcement
+# ---------------------------------------------------------------------------
+
+
+def test_cnp_cuts_rate_multiplicatively():
+    cc = CongestionControl(ECNConfig(enabled=True).validate(), 200.0, 0)
+    assert cc.rc == 200.0 and cc.alpha == 1.0
+    cc.on_cnp(10)
+    assert cc.rc == pytest.approx(100.0)     # alpha=1 -> halve
+    assert cc.rt == 200.0                    # target remembers
+    assert cc.cnps_handled == 1
+    cc.on_cnp(20)
+    assert cc.rc == pytest.approx(50.0)
+
+
+def test_timer_recovery_toward_line_rate():
+    cfg = ECNConfig(enabled=True, increase_timer=100,
+                    alpha_timer=50).validate()
+    cc = CongestionControl(cfg, 200.0, 0)
+    cc.on_cnp(0)
+    assert cc.rc == pytest.approx(100.0)
+    cc.advance(600, 200.0)      # 6 timer events: fast recovery first
+    assert cc.rc > 190.0, "fast recovery must close most of the gap"
+    cc.advance(5000, 200.0)     # additive + hyper push rt to line
+    assert cc.rc == pytest.approx(200.0, rel=0.02)
+    assert cc.alpha < 0.1       # decayed without further CNPs
+
+
+def test_rate_enforcement_at_send_admission():
+    """A cut reaction point bounds what the requester emits: the egress
+    port transmits no faster than rc + the burst allowance."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_ecn(enabled=True)
+    aa, _ = make_sendbw_pair(cl, msg_size=4096, window=16)
+    _run(cl, 5)                 # first sends create the rate state
+    qp = aa.channels[0].h.qp(aa.channels[0].qpn)
+    assert qp.cc is not None
+    qp.cc.rc = 20.0             # pace hard: 20 B/step
+    qp.cc.rt = 20.0
+    qp.cc.tokens = 0.0
+    base = cl.fabric.port(0).tx_bytes
+    steps = 1000
+    _run(cl, steps)
+    sent = cl.fabric.port(0).tx_bytes - base
+    assert sent <= 20.0 * steps + qp.cc.cfg.burst_bytes + 4096, \
+        f"emitted {sent}B, rate allows ~{20.0 * steps}B"
+    assert sent > 0.25 * 20.0 * steps, "paced, not parked"
+
+
+def test_rnr_nak_is_a_severe_congestion_cut():
+    """An RNR NAK cuts the reaction point like a CNP: flows whose
+    packets drop at admission never see CE marks, so the NAK is their
+    only congestion feedback."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_ecn(enabled=True)
+    c1, c2, _, _ = make_channel_pair(cl)
+    c1.post_send_bytes(b"x" * 2048)     # no receive posted -> RNR
+    _run(cl, 100)
+    qp1 = c1.h.qp(c1.qpn)
+    assert cl.fabric.stats["rnr_naks"] > 0
+    assert qp1.cc is not None
+    assert qp1.cc.rate_cuts > 0
+    assert qp1.cc.rc < cl.fabric.bytes_per_step
+    assert qp1.cc.cnps_handled == 0     # a cut, not a CNP
+
+
+def test_oversized_read_overdraws_instead_of_wedging():
+    """Regression: a READ whose response exceeds the pacing bucket's
+    depth must overdraw (like retransmits do), not wait forever on a
+    bucket that can never hold the charge."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_ecn(enabled=True)      # burst 8 KiB < 16 KiB response
+    c1, c2, _, _ = make_channel_pair(cl)
+    from repro.core.verbs import SendWR
+    mr_local = c1.h.mr(c1.mrn_recv)
+    mr_remote = c2.h.mr(c2.mrn_send)
+    qp1 = c1.h.qp(c1.qpn)
+    qp1.post_send(SendWR(1, Op.READ_REQ, SGE(mr_local, 0, 16384),
+                         raddr=0, rkey=mr_remote.rkey))
+    _run(cl, 3000)
+    assert [w.opcode for w in c1.poll(4)] == ["READ"], \
+        "oversized READ must complete under ECN pacing"
+    assert qp1.cur_wqe is None and not qp1.sq
+
+
+def test_runtime_disable_goes_dormant():
+    """configure_ecn(enabled=False) mid-run stops marking/CNPs at once
+    and makes stale rate state fully dormant: no pacing, no retransmit
+    holds against a bucket still deep in overdraft."""
+    cl, _ = _incast(4, ecn=True, steps=1500)
+    qp = cl.containers["s0"].ctx.qps[0]
+    assert qp.cc is not None and qp.cc.rate_cuts > 0
+    qp.cc.tokens = -1e9         # pathological debt: must not matter
+    marked = cl.fabric.stats["ecn_marked"]
+    cnps = cl.fabric.stats["cnps_sent"]
+    got = [cl.containers[f"r{i}"].app.received for i in range(4)]
+    cl.configure_ecn(enabled=False)
+    _run(cl, 1000)
+    assert cl.fabric.stats["ecn_marked"] == marked
+    assert cl.fabric.stats["cnps_sent"] == cnps
+    after = [cl.containers[f"r{i}"].app.received for i in range(4)]
+    assert all(a > g for a, g in zip(after, got)), \
+        "dormant rate state must not hold anyone back"
+
+
+def test_read_driven_congestion_paces_the_reader():
+    """READ_RESPs congesting the *reader's* ingress cut the reader's
+    own reaction point (its READ_REQ admission is charged at response
+    size) — no CNP crosses the wire toward the responder, whose
+    emission rate a CNP could never govern."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    # queue sized at ~8 response packets so occupancy can actually land
+    # inside the [kmin, kmax) marking band (one response is ~4 KiB)
+    cl.configure_ingress(rx_bandwidth_Bps=BPS / 8,
+                         queue_bytes=32 * 1024, node=0)
+    cl.configure_ecn(enabled=True)
+    c1, c2, _, _ = make_channel_pair(cl)
+    from repro.core.verbs import SendWR
+    mr_local = c1.h.mr(c1.mrn_recv)
+    mr_remote = c2.h.mr(c2.mrn_send)
+    qp1 = c1.h.qp(c1.qpn)
+    for i in range(40):
+        qp1.post_send(SendWR(i, Op.READ_REQ, SGE(mr_local, 0, 4096),
+                             raddr=0, rkey=mr_remote.rkey))
+    _run(cl, 3000)
+    assert cl.fabric.stats["ecn_marked"] > 0, \
+        "responses must be marked at the reader's bounded ingress"
+    assert qp1.cc is not None and qp1.cc.rate_cuts > 0
+    assert qp1.cc.rc < cl.fabric.bytes_per_step
+    assert cl.fabric.stats.get("cnps_sent", 0) == 0, \
+        "marked READ_RESPs are handled locally, not by wire CNPs"
+
+
+# ---------------------------------------------------------------------------
+# Karn/ECN interaction: a CNP is not a loss
+# ---------------------------------------------------------------------------
+
+
+def test_marked_packets_still_yield_rtt_samples_and_no_backoff():
+    """Regression: an ECN-marked (but delivered) packet must contribute
+    an RTT sample and must not trigger RTO backoff. The failure mode
+    this pins: handling a CNP like an RNR NAK (clearing _send_time /
+    rewinding progress) would starve the RFC 6298 estimator exactly
+    when queues are building — the RTO would sit at its initial 200
+    steps forever and timeouts would fire into the congestion."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    # mark every data packet: CNPs fire throughout the run
+    cl.configure_ecn(enabled=True, kmin=0.0, kmax=0.0, cnp_interval=20)
+    aa, ab = make_sendbw_pair(cl, msg_size=2048, window=4)
+    _run(cl, 800)
+    qp = aa.channels[0].h.qp(aa.channels[0].qpn)
+    assert cl.fabric.stats["cnps_handled"] > 5
+    # RTT samples flowed despite every ACKed packet having been marked
+    assert qp.srtt is not None, "CE-marked deliveries must sample RTT"
+    assert qp.rto < QueuePair.RETRANS_TIMEOUT, \
+        "the estimator must converge below the initial RTO"
+    # and the congestion was handled by rate, not by loss recovery
+    assert cl.fabric.stats.get("rnr_naks", 0) == 0
+    assert ab.received > 0
+
+
+# ---------------------------------------------------------------------------
+# congestion-state migration: resume at the learned rate
+# ---------------------------------------------------------------------------
+
+
+def _congested_sender(cl):
+    """Drive the 4:1 incast until sender s0's QP has a learned rate."""
+    qp = cl.containers["s0"].ctx.qps[0]
+    assert qp.cc is not None, "incast must have created rate state"
+    assert qp.cc.rc < cl.fabric.bytes_per_step / 2, \
+        "mid-episode rate must sit well below line rate"
+    return qp
+
+
+def test_dump_restore_preserves_congestion_state_exactly():
+    """Property: dump a QP mid-congestion-episode, restore it into a
+    fresh context, and the reaction point is byte-identical — alpha,
+    rates, counters, timer phases (same fabric clock)."""
+    cl, _ = _incast(4, ecn=True, steps=2500)
+    qp = _congested_sender(cl)
+    pre = qp.cc.dump(cl.fabric.now)
+    ctx = cl.containers["s0"].ctx
+    image = dump_context(ctx, stop=True)
+    ctx2 = cl.nodes[4].device.open_context(tenant="s0")
+    session = restore_context(ctx2, image)
+    moved = session.qp_by_n[qp.qpn]
+    assert moved.cc is not None
+    post = moved.cc.dump(cl.fabric.now)
+    assert post["rc"] == pre["rc"], "must resume at the learned rate"
+    assert post["rt"] == pre["rt"]
+    assert post["alpha"] == pre["alpha"]
+    assert post["cnps_handled"] == pre["cnps_handled"]
+    assert post["rate_cuts"] == pre["rate_cuts"]
+    assert post["t_events"] == pre["t_events"]
+    assert post["b_events"] == pre["b_events"]
+    assert post["alpha_phase"] == pre["alpha_phase"]
+    assert moved.cnps_sent == qp.cnps_sent
+
+
+def test_migrated_sender_resumes_at_learned_rate():
+    """End to end: live-migrate a sender mid-incast; the restored
+    requester's rate is the learned one (not line rate) and the stats
+    invariants hold across the move."""
+    cl, _ = _incast(4, ecn=True, steps=2500)
+    qp = _congested_sender(cl)
+    rc_learned = qp.cc.rc
+    qpn = qp.qpn
+    rep = cl.migrate("s0", 4)
+    assert rep.ok
+    moved_ctx = cl.containers["s0"].ctx
+    moved = next(q for q in moved_ctx.qps if q.qpn == qpn)
+    assert moved.cc is not None, "rate state must survive migration"
+    line = cl.fabric.bytes_per_step
+    assert moved.cc.rc < line / 2, \
+        f"resumed at {moved.cc.rc} B/step — line rate is {line}"
+    # recovery timers may have nudged it during the move, but the
+    # learned operating point carries over (not a fresh line-rate QP)
+    assert moved.cc.rc <= max(2.0 * rc_learned, rc_learned + line / 10)
+    assert moved.cc.cnps_handled >= 1 or moved.cc.rate_cuts >= 1
+    _run(cl, 500)               # keeps streaming after the move
+    s = cl.fabric.stats
+    for key in ("ecn_marked", "cnps_sent", "cnps_handled"):
+        per_class = (s.get(f"{CLASS_APP}_{key}", 0)
+                     + s.get(f"{CLASS_MIG}_{key}", 0))
+        assert s[key] == per_class, f"{key} class twin broke"
+
+
+def test_ecn_incast_deterministic():
+    def one():
+        cl, good = _incast(4, ecn=True, steps=1800)
+        rates = [cl.containers[f"s{i}"].ctx.qps[0].cc.rc
+                 for i in range(4)]
+        return good, rates, dict(cl.fabric.stats), cl.fabric.now
+
+    assert one() == one()
+
+
+# ---------------------------------------------------------------------------
+# admission prices observed marking rates
+# ---------------------------------------------------------------------------
+
+
+def test_admission_prices_marking_rates():
+    # min_rate_Bps=BPS floors the reaction point at line rate so the
+    # workload (and thus port utilization) is identical with and
+    # without ECN — the only difference the estimates can see is the
+    # marking-rate discount itself
+    def plan_for(ecn):
+        cl = SimCluster(2, link_bandwidth_Bps=BPS)
+        if ecn:
+            # reference backlog of ~2 packets: sustained streaming marks
+            # heavily at the source's egress port
+            cl.configure_ecn(enabled=True, egress_queue_bytes=2048.0,
+                             min_rate_Bps=BPS)
+        make_sendbw_pair(cl, msg_size=4096, window=16)
+        _run(cl, 400)
+        bulk = cl.launch("bulk", 0)
+        bulk.ctx.alloc_pd().reg_mr(64 * 4096)
+        return cl, cl.orchestrator.admit(bulk, cl.nodes[1])
+
+    _, quiet = plan_for(ecn=False)
+    cl, marked = plan_for(ecn=True)
+    assert "ecn" in marked.checks and "ecn" not in quiet.checks
+    assert cl.fabric.marking_rate(0) > 0.0
+    assert marked.est_transfer_s > quiet.est_transfer_s
+
+    cl2 = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl2.configure_ecn(enabled=True, egress_queue_bytes=2048.0,
+                      min_rate_Bps=BPS)
+    make_sendbw_pair(cl2, msg_size=4096, window=16)
+    _run(cl2, 400)
+    cl2.orchestrator.max_transfer_s = marked.est_transfer_s * 0.9
+    bulk = cl2.launch("bulk", 0)
+    bulk.ctx.alloc_pd().reg_mr(64 * 4096)
+    with pytest.raises(AdmissionError, match="marking"):
+        cl2.orchestrator.admit(bulk, cl2.nodes[1])
+
+
+# ---------------------------------------------------------------------------
+# SRQ limit watermark (ibv_modify_srq SRQ_LIMIT)
+# ---------------------------------------------------------------------------
+
+
+def _srq_setup(cl):
+    ctx = cl.launch("srq-owner", 0).ctx
+    pd = ctx.alloc_pd()
+    mr = pd.reg_mr(1 << 16)
+    srq = ctx.create_srq()
+    for i in range(6):
+        srq.post(RecvWR(i, SGE(mr, i * 1024, 1024)))
+    return ctx, srq
+
+
+def test_srq_limit_fires_once_below_watermark():
+    cl = SimCluster(1)
+    ctx, srq = _srq_setup(cl)
+    srq.modify(srq_limit=3)
+    assert srq.armed and not ctx.poll_async()
+    srq.pop(); srq.pop(); srq.pop()     # 6 -> 3: not yet below
+    assert not ctx.poll_async()
+    srq.pop()                           # 2 < 3: fire
+    events = ctx.poll_async()
+    assert [e.event_type for e in events] == ["SRQ_LIMIT_REACHED"]
+    assert events[0].srqn == srq.srqn
+    srq.pop()                           # still below: one-shot, silent
+    assert not ctx.poll_async()
+    srq.modify(srq_limit=3)             # re-arm while already below
+    assert [e.event_type for e in ctx.poll_async()] == \
+        ["SRQ_LIMIT_REACHED"], "arming below the limit fires immediately"
+    assert not srq.armed
+
+
+def test_srq_limit_validation():
+    cl = SimCluster(1)
+    _, srq = _srq_setup(cl)
+    with pytest.raises(ValueError, match="srq_limit"):
+        srq.modify(srq_limit=-1)
+    srq.modify(srq_limit=0)             # 0 disarms
+    assert not srq.armed
+    srq.pop()
+    assert True                         # no event machinery consulted
+
+
+def test_srq_limit_fires_from_wire_consumption():
+    """The watermark fires on the real consumption path: SENDs draining
+    SRQ receives through QueuePair.next_rr."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    a = cl.launch("a", 0)
+    b = cl.launch("b", 1)
+    pd_a = a.ctx.alloc_pd()
+    cq_a = a.ctx.create_cq()
+    mr_a = pd_a.reg_mr(1 << 16)
+    qp_a = pd_a.create_qp(cq_a, cq_a)
+    pd_b = b.ctx.alloc_pd()
+    cq_b = b.ctx.create_cq()
+    mr_b = pd_b.reg_mr(1 << 16)
+    srq = b.ctx.create_srq()
+    qp_b = pd_b.create_qp(cq_b, cq_b, srq)
+    for qp, dst in ((qp_a, qp_b), (qp_b, qp_a)):
+        qp.modify(QPState.INIT)
+        qp.modify(QPState.RTR, dest_gid=dst.device.gid, dest_qpn=dst.qpn,
+                  rq_psn=0)
+        qp.modify(QPState.RTS, sq_psn=0)
+    for i in range(4):
+        srq.post(RecvWR(100 + i, SGE(mr_b, i * 1024, 1024)))
+    srq.modify(srq_limit=2)
+    from repro.core.packets import Op as _Op
+    from repro.core.verbs import SendWR
+    for i in range(3):
+        mr_a.write(0, b"y" * 512)
+        qp_a.post_send(SendWR(i, _Op.SEND, SGE(mr_a, 0, 512)))
+    _run(cl, 80)
+    events = b.ctx.poll_async()
+    assert [e.event_type for e in events] == ["SRQ_LIMIT_REACHED"]
+    assert len(srq.queue) == 1
+
+
+def test_srq_limit_attrs_survive_migration():
+    cl = SimCluster(3)
+    ctx, srq = _srq_setup(cl)
+    srq.modify(srq_limit=2)
+    srqn = srq.srqn
+    assert cl.migrate("srq-owner", 2).ok
+    moved = cl.containers["srq-owner"].ctx
+    new_srq = next(s for s in moved.srqs if s.srqn == srqn)
+    assert new_srq.limit == 2 and new_srq.armed
+    assert len(new_srq.queue) == 6
+    new_srq.pop(); new_srq.pop(); new_srq.pop(); new_srq.pop(); new_srq.pop()
+    assert [e.event_type for e in moved.poll_async()] == \
+        ["SRQ_LIMIT_REACHED"]

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Docs health check, run by CI next to the tier-1 tests.
 
-Two gates:
+Three gates:
 
 1. Markdown link check: every relative link in README.md, ROADMAP.md,
    and docs/**.md must resolve to a file in the repo (anchors are
@@ -10,8 +10,11 @@ Two gates:
    module docstring that names the paper section/figure/table it
    implements (the repo's fidelity-audit convention; docs/paper-map.md
    is the cross-reference table built on it).
+3. Operator-knob check: every public ``configure_*`` method on
+   ``SimCluster`` and ``Fabric`` must be mentioned somewhere under
+   docs/ — an undocumented knob is an unusable knob.
 
-Exit code 0 iff both gates pass; failures are listed one per line.
+Exit code 0 iff all gates pass; failures are listed one per line.
 """
 from __future__ import annotations
 
@@ -71,15 +74,55 @@ def check_core_docstrings() -> list:
     return errors
 
 
+# the operator surfaces whose configure_* knobs must be documented
+_KNOB_CLASSES = {
+    "src/repro/runtime/cluster.py": "SimCluster",
+    "src/repro/core/transport.py": "Fabric",
+}
+
+
+def configure_knobs():
+    """(class_name, method_name) for every public configure_* method on
+    the operator-surface classes."""
+    out = []
+    for rel, cls_name in _KNOB_CLASSES.items():
+        tree = ast.parse((ROOT / rel).read_text())
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and node.name == cls_name:
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)) \
+                            and item.name.startswith("configure_"):
+                        out.append((cls_name, item.name))
+    return out
+
+
+def check_configure_knobs(knobs) -> list:
+    docs_text = "\n".join(p.read_text()
+                          for p in sorted((ROOT / "docs").glob("**/*.md")))
+    errors = []
+    if not knobs:
+        errors.append("knob check found no configure_* methods — "
+                      "did SimCluster/Fabric move?")
+    for cls_name, name in knobs:
+        if name not in docs_text:
+            errors.append(f"{cls_name}.{name}: operator knob not "
+                          f"mentioned anywhere under docs/")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_core_docstrings()
+    knobs = configure_knobs()
+    errors = (check_links() + check_core_docstrings()
+              + check_configure_knobs(knobs))
     for e in errors:
         print(f"FAIL: {e}")
     n_md = len(list(md_files()))
     n_py = len(list((ROOT / "src/repro/core").glob("*.py"))) - 1
     if not errors:
         print(f"docs OK: {n_md} markdown files linked, "
-              f"{n_py} core modules cite their paper section")
+              f"{n_py} core modules cite their paper section, "
+              f"{len(knobs)} configure_* knobs documented")
     return 1 if errors else 0
 
 
