@@ -98,6 +98,10 @@ def main():
         "migration stream should visibly dent app throughput"
     assert recovered > 0.9 * mean["before"], \
         "app throughput should recover after the migration"
+    return {"rate_before": mean["before"], "rate_during": mean["during"],
+            "rate_after": mean["after"], "dip": dip,
+            "migration_steps": t1 - t0, "pages_sent": rep.pages_sent,
+            "mig_tx_bytes": cl.fabric.stats["mig_tx_bytes"]}
 
 
 if __name__ == "__main__":

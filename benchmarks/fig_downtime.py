@@ -35,8 +35,14 @@ def _write_heavy_pair(cl):
     return aa, ab
 
 
-def run_strategy(strategy):
+def run_strategy(strategy, trace=False):
+    """One migration scenario. ``trace=True`` enables the fabric tracer
+    and grows the return tuple with the cluster, so callers (the obs
+    tests, ``tools/trace_report.py``) can read the event stream; the
+    default 4-tuple is unchanged for existing callers."""
     cl = SimCluster(3, link_bandwidth_Bps=LINK_BPS)
+    if trace:
+        cl.configure_tracing(True)
     aa, ab = _write_heavy_pair(cl)
     for _ in range(80):
         cl.step_all()
@@ -53,6 +59,8 @@ def run_strategy(strategy):
         post_pull_s = (cl.fabric.now - t0) * STEP_S
     downtime = rep.downtime_s              # sim clock, stop window only
     total = rep.downtime_s + rep.live_s + post_pull_s
+    if trace:
+        return rep, downtime, total, ab, cl
     return rep, downtime, total, ab
 
 
@@ -77,6 +85,11 @@ def main():
     assert pre_down < sc_total, \
         "pre-copy downtime must beat stop-and-copy total"
     assert post_down < sc_total
+    return {name: {"downtime_s": downtime, "total_s": total,
+                   "image_bytes": rep.image_bytes,
+                   "rounds": len(rep.rounds),
+                   "pages_sent": rep.pages_sent}
+            for name, (rep, downtime, total) in results.items()}
 
 
 if __name__ == "__main__":

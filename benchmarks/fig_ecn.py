@@ -150,6 +150,12 @@ def main():
     assert 0.4 * ecn["rx_per_step"] <= agg <= 2.0 * ecn["rx_per_step"], \
         f"aggregate learned rate {agg:.1f} B/step far from capacity"
     assert ecn == ecn2, "ECN run must be deterministic"
+    return {"base_rnr_naks": base["rnr_naks"],
+            "ecn_rnr_naks": ecn["rnr_naks"],
+            "ecn_marked": ecn["ecn_marked"],
+            "cnps_handled": ecn["cnps_handled"],
+            "agg_rate_B_per_step": sum(ecn["rates"]),
+            "rx_per_step": ecn["rx_per_step"]}
 
 
 if __name__ == "__main__":

@@ -112,6 +112,12 @@ def main():
     assert bound["rx_dropped"] > 0 and bound["rnr_naks"] > 0, \
         "bounded incast must exercise the overflow/RNR path"
     assert bound == bound2, "incast run must be deterministic"
+    return {"efficiency": bound["efficiency"],
+            "rx_dropped": bound["rx_dropped"],
+            "rnr_naks": bound["rnr_naks"],
+            "goodput_min": min(bound["goodput"]),
+            "goodput_max": max(bound["goodput"]),
+            "free_goodput_min": min(free["goodput"])}
 
 
 if __name__ == "__main__":

@@ -102,6 +102,10 @@ def main():
         f"(got {t_qos/t_base:.2f}x)"
     # bounded, not starved: the throttled tenant still makes progress
     assert recv_qos > 0, "token bucket must shape, not starve, the tenant"
+    return {"base_transfer_s": t_base, "noqos_transfer_s": t_noqos,
+            "qos_transfer_s": t_qos,
+            "bucket_deferrals": cl_q.fabric.stats["qos_bucket_deferrals"],
+            "tenant_msgs": recv_qos}
 
 
 if __name__ == "__main__":

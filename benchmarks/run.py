@@ -3,7 +3,16 @@
 Prints ``name,us_per_call,derived`` CSV lines. sys.path is extended so the
 suite runs as ``PYTHONPATH=src python -m benchmarks.run`` from the repo
 root (the fabric benchmarks also import tests.helpers).
+
+``--json [PATH]`` additionally writes a machine-readable summary
+(default ``BENCH_summary.json``): per figure, whether it passed, its
+wall-clock wall_s, and the headline metrics dict its ``main()`` returned
+(the fabric figures return their sim-clock durations and counters; mains
+that return nothing contribute ``metrics: null``). CI archives this so
+headline numbers are diffable across commits without parsing CSV.
 """
+import argparse
+import json
 import os
 import sys
 import time
@@ -37,18 +46,58 @@ MODULES = [
 ]
 
 
-def main() -> None:
-    failures = 0
-    for name, mod in MODULES:
+def run_modules(modules) -> dict:
+    """Run each (name, module) pair; returns the summary dict. A module's
+    ``main()`` return value rides along as its headline metrics when it
+    is a dict (the fabric figures), else null."""
+    summary = {}
+    for name, mod in modules:
         t0 = time.time()
+        entry = {"ok": False, "wall_s": None, "metrics": None}
         try:
-            mod.main()
+            result = mod.main()
+            entry["ok"] = True
+            if isinstance(result, dict):
+                entry["metrics"] = result
             print(f"# {name} done in {time.time()-t0:.1f}s")
         except Exception as e:  # noqa: BLE001
-            failures += 1
+            entry["error"] = str(e)
             print(f"# {name} FAILED: {e}")
             traceback.print_exc()
-    if failures:
+        entry["wall_s"] = round(time.time() - t0, 3)
+        summary[name] = entry
+    return summary
+
+
+def write_summary(summary: dict, path: str) -> str:
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", nargs="?", const="BENCH_summary.json",
+                    default=None, metavar="PATH",
+                    help="write a per-figure JSON summary "
+                         "(default PATH: BENCH_summary.json)")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="NAME",
+                    help="run only the named figure(s); repeatable")
+    args = ap.parse_args(argv)
+    modules = MODULES
+    if args.only:
+        known = {name for name, _ in MODULES}
+        unknown = set(args.only) - known
+        if unknown:
+            ap.error(f"unknown figure(s) {sorted(unknown)}; "
+                     f"have {sorted(known)}")
+        modules = [(n, m) for n, m in MODULES if n in args.only]
+    summary = run_modules(modules)
+    if args.json:
+        print(f"# summary -> {write_summary(summary, args.json)}")
+    if any(not e["ok"] for e in summary.values()):
         sys.exit(1)
 
 

@@ -31,6 +31,7 @@ from repro.core.packets import Op
 from repro.core.service import ServiceError
 from repro.core.states import QPState
 from repro.core.transport import STEP_S
+from repro.obs.trace import record_phase
 
 
 @dataclass
@@ -175,6 +176,8 @@ class MigrationController:
             image = zlib.decompress(staged)
         rep.image_bytes = len(image)
         rep.checkpoint_s = (fab.now - t0) * STEP_S
+        record_phase(fab, "checkpoint", t0, node=src_dev.gid,
+                     image_bytes=len(image))
         if fail_at == "checkpoint":
             rep.ok = False
             rep.stage_failed = "checkpoint"                      # [MIGR]
@@ -212,14 +215,19 @@ class MigrationController:
             rep.transfer_error = e
             rep.attempt = {"image": bytes(image), "runtime": runtime}
             rep.transfer_s = (fab.now - t1) * STEP_S
+            record_phase(fab, "transfer", t1, node=src_dev.gid,
+                         failed=True)
             return rep
         rep.transfer_s = (fab.now - t1) * STEP_S
+        record_phase(fab, "transfer", t1, node=src_dev.gid,
+                     bytes=len(image))
         rep.pages_sent = rep.pages_total   # every page moved while stopped
 
         t2 = fab.now
         self._teardown_source(container)
         self._restore(container, moved, dest_node)
         rep.restore_s = (fab.now - t2) * STEP_S
+        record_phase(fab, "restore", t2, node=dest_node.device.gid)
         # stop-and-copy: the whole flow is one stop-the-world window
         rep.downtime_s = rep.total_s                             # [MIGR]
         rep.simulated_downtime_s = rep.simulated_transfer_s      # [MIGR]

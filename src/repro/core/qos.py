@@ -263,7 +263,7 @@ class ECNConfig:
 
 
 def maybe_mark(fabric, rng, pkt: Packet, occupancy: float,
-               gid: int) -> bool:
+               gid: int, where: str = "egress") -> bool:
     """CE-mark one ECT packet with the RED probability for this queue
     occupancy. The rng is per-port and seeded off the fabric seed, so
     marking is deterministic and does not perturb the fabric's loss
@@ -276,10 +276,10 @@ def maybe_mark(fabric, rng, pkt: Packet, occupancy: float,
     if p < 1.0 and rng.random() >= p:
         return False
     pkt.ce = True
-    cls = classify(pkt)
-    fabric.stats["ecn_marked"] += 1
-    fabric.stats[f"ecn_marked@{gid}"] += 1
-    fabric.stats[f"{cls}_ecn_marked"] += 1
+    fabric.metrics.inc("ecn_marked", gid=gid, cls=classify(pkt))
+    trc = fabric.tracer
+    if trc is not None:
+        trc.ecn_mark(fabric.now, pkt, gid, where, occupancy)
     return True
 
 
@@ -670,9 +670,13 @@ class EgressPort:
             # RED at enqueue: occupancy against the reference backlog
             # (egress queues have no hard byte bound of their own)
             occ = self.backlog_bytes / ecn.egress_queue_bytes
-            if maybe_mark(self.fabric, self._ecn_rng, pkt, occ, self.gid):
+            if maybe_mark(self.fabric, self._ecn_rng, pkt, occ, self.gid,
+                          where="egress"):
                 self._mark_window.append((now, n))
                 self._mark_bytes += n
+        trc = self.fabric.tracer
+        if trc is not None:
+            trc.egress_enqueue(now, pkt, self.gid, self.backlog_bytes)
 
     # -- utilization window --------------------------------------------------
     def _trim(self, now: int):
@@ -769,10 +773,15 @@ class EgressPort:
         if fl is not None:
             fl.queued_bytes -= n
         fab = self.fabric
+        trc = fab.tracer
         if fab.rng.random() < fab.loss_prob:
             # serialisation time was spent before the wire dropped it
-            fab.stats["dropped"] += 1
+            fab.metrics.inc("dropped", gid=self.gid, cls=classify(pkt))
+            if trc is not None:
+                trc.egress_drop(now, pkt, self.gid)
             return
+        if trc is not None:
+            trc.egress_tx(now, pkt, self.gid)
         self.delivery.append((now + fab.latency, pkt))
 
     def service(self, now: int):
@@ -790,7 +799,8 @@ class EgressPort:
                     continue
                 b = self._bucket(t)
                 if b is not None and not b.peek(q[0].nbytes(), now):
-                    self.fabric.stats["qos_bucket_deferrals"] += 1
+                    self.fabric.metrics.inc("qos_bucket_deferrals",
+                                            gid=self.gid)
         _drr_spend(list(self.classes.values()),
                    self.fabric.bytes_per_step,
                    lambda cq: self._eligible_head(cq, now),
@@ -1009,8 +1019,10 @@ class IngressPort:
                 # responder already has this payload, so spending queue
                 # space and receive-processing on it buys nothing
                 # (matches the responder's own psn<epsn re-ACK path)
-                self.fabric.stats["rx_dup_acked"] += 1
-                self.fabric.stats[f"rx_dup_acked@{self.gid}"] += 1
+                self.fabric.metrics.inc("rx_dup_acked", gid=self.gid)
+                trc = self.fabric.tracer
+                if trc is not None:
+                    trc.ingress_drop(now, pkt, self.gid, "dup_acked")
                 self.fabric.send(Packet(op=Op.ACK, src_gid=pkt.dest_gid,
                                         src_qpn=pkt.dest_qpn,
                                         dest_gid=pkt.src_gid,
@@ -1029,8 +1041,10 @@ class IngressPort:
             if run is not None and epsn <= pkt.psn < run:
                 # duplicate of a packet still sitting in this queue: it
                 # will be processed from here, a second copy adds nothing
-                self.fabric.stats["rx_dup_dropped"] += 1
-                self.fabric.stats[f"rx_dup_dropped@{self.gid}"] += 1
+                self.fabric.metrics.inc("rx_dup_dropped", gid=self.gid)
+                trc = self.fabric.tracer
+                if trc is not None:
+                    trc.ingress_drop(now, pkt, self.gid, "dup_queued")
                 return
         if self.backlog_bytes + n > self.cfg.queue_bytes:
             self._drop(pkt, now)
@@ -1038,16 +1052,19 @@ class IngressPort:
         if epsn is not None and pkt.psn == exp:
             self._run[key] = exp + 1
         self._inq[key] = self._inq.get(key, 0) + 1
-        self.fabric.stats["rx_queued"] += 1
-        self.fabric.stats[f"rx_queued@{self.gid}"] += 1
+        self.fabric.metrics.inc("rx_queued", gid=self.gid)
         self._push(pkt)
+        trc = self.fabric.tracer
+        if trc is not None:
+            trc.ingress_queue(now, pkt, self.gid, self.backlog_bytes)
         ecn = self.fabric.ecn
         if ecn.enabled and ecn.mark_ingress:
             # RED against the bounded queue itself: marking starts at
             # ~kmin occupancy, well before overflow draws an RNR NAK —
             # the DCQCN ordering (slow down first, drop last)
             occ = self.backlog_bytes / self.cfg.queue_bytes
-            if maybe_mark(self.fabric, self._ecn_rng, pkt, occ, self.gid):
+            if maybe_mark(self.fabric, self._ecn_rng, pkt, occ, self.gid,
+                          where="ingress"):
                 self._mark_window.append((now, n))
                 self._mark_bytes += n
 
@@ -1063,8 +1080,12 @@ class IngressPort:
         return None if qp is None else qp.epsn
 
     def _drop(self, pkt: Packet, now: int, nak_psn: Optional[int] = None):
-        self.fabric.stats["rx_dropped"] += 1
-        self.fabric.stats[f"rx_dropped@{self.gid}"] += 1
+        self.fabric.metrics.inc("rx_dropped", gid=self.gid)
+        trc = self.fabric.tracer
+        if trc is not None:
+            trc.ingress_drop(now, pkt, self.gid,
+                             "out_of_order" if nak_psn is not None
+                             else "overflow")
         if self.cfg.rnr_nak and pkt.op in RNR_OPS:
             self._emit_rnr_nak(pkt, now, psn=nak_psn)
 
@@ -1091,8 +1112,11 @@ class IngressPort:
         if now < self._rnr_mute.get(key, -1):
             return
         self._rnr_mute[key] = now + self.cfg.rnr_nak_interval
-        self.fabric.stats["rnr_naks"] += 1
-        self.fabric.stats[f"rnr_naks@{self.gid}"] += 1
+        self.fabric.metrics.inc("rnr_naks", gid=self.gid)
+        trc = self.fabric.tracer
+        if trc is not None:
+            trc.rnr_nak(now, self.gid, "ingress", pkt.src_gid,
+                        pkt.src_qpn, psn if psn is not None else pkt.psn)
         self.fabric.send(Packet(op=Op.NAK, src_gid=pkt.dest_gid,
                                 src_qpn=pkt.dest_qpn,
                                 dest_gid=pkt.src_gid,
@@ -1106,8 +1130,12 @@ class IngressPort:
         self.rx_packets += 1
         dev = self.fabric.device(pkt.dest_gid)
         if dev is None:
-            self.fabric.stats["unroutable"] += 1   # [MIGR] old address
+            # [MIGR] old address
+            self.fabric.metrics.inc("unroutable", gid=self.gid)
             return
+        trc = self.fabric.tracer
+        if trc is not None:
+            trc.ingress_deliver(self.fabric.now, pkt, self.gid)
         dev.receive(pkt)
 
     def service(self, now: int):

@@ -111,6 +111,11 @@ class ServiceChannel:
         wr = SendWR(self._wr, op, SGE(mr, 0, len(blob)))
         self._tx_mrs[self._wr] = (peer_gid, mr)
         self.qp_for(peer_gid).post_send(wr)
+        fab = self.device.fabric
+        trc = fab.tracer
+        if trc is not None:
+            trc.svc_post(fab.now, self.device.gid, peer_gid, op.value,
+                         xid, len(blob))
         return xid
 
     def transfer(self, peer_gid: int, op: Op, meta: dict, data: bytes,
@@ -156,7 +161,14 @@ class ServiceChannel:
     def on_message(self, op: Op, blob: bytes, src_gid: int):
         msg = msgpack.unpackb(blob, raw=False, strict_map_key=False)
         meta, data = msg["meta"], msg["data"]
+        fab = self.device.fabric
+        trc = fab.tracer
+        if trc is not None:
+            trc.svc_deliver(fab.now, self.device.gid, src_gid, op.value,
+                            len(blob))
         if op == Op.MIG_ACK:
+            if trc is not None:
+                trc.svc_ack(fab.now, self.device.gid, meta["ack"])
             self.acked.add(meta["ack"])
             return
         if op == Op.MIG_STATE:

@@ -28,7 +28,7 @@ def _emit(qp, pkt: Packet):
     qp.device.fabric.send(pkt)
 
 
-def _retx(qp, pkt: Packet):
+def _retx(qp, pkt: Packet, reason: str = "rto"):
     """Retransmit: headers are rebuilt from the *current* QP context —
     after a partner migration the stored packet's address is stale and the
     resume handshake has updated qp.dest_*."""                 # [MIGR]
@@ -51,6 +51,10 @@ def _retx(qp, pkt: Packet):
     # Karn's algorithm: a retransmitted PSN yields no RTT sample (the
     # eventual ACK is ambiguous between the two transmissions)
     qp._send_time.pop(pkt.psn, None)
+    trc = qp.device.fabric.tracer
+    if trc is not None:
+        trc.retransmit(qp.device.fabric.now, pkt, qp.device.gid,
+                       qp.qpn, reason)
     qp.device.fabric.send(pkt)
 
 
@@ -159,7 +163,7 @@ def _recovery_gate(qp, now) -> bool:
                 and qp.device.fabric.ecn.enabled:
             return False
         for p in qp.inflight:
-            _retx(qp, p)
+            _retx(qp, p, "rnr")
         qp.rnr_resend_pending = False
         qp.last_progress = now
         return False
@@ -170,7 +174,7 @@ def _recovery_gate(qp, now) -> bool:
                 and qp.device.fabric.ecn.enabled:
             return False        # paced: hold go-back-N, don't back off
         for pkt in qp.inflight:
-            _retx(qp, pkt)
+            _retx(qp, pkt, "rto")
         qp.last_progress = now
         qp.rto = min(qp.rto * 2, qp.MAX_RTO)   # RFC 6298 §5.5 backoff
         return False
@@ -263,9 +267,10 @@ def _note_congestion(qp, pkt: Packet):
     qp.cnp_mute_until = now + fab.ecn.cnp_interval
     qp.cnps_sent += 1
     cls = classify(pkt)
-    fab.stats["cnps_sent"] += 1
-    fab.stats[f"cnps_sent@{qp.device.gid}"] += 1
-    fab.stats[f"{cls}_cnps_sent"] += 1
+    fab.metrics.inc("cnps_sent", gid=qp.device.gid, cls=cls)
+    trc = fab.tracer
+    if trc is not None:
+        trc.cnp_sent(now, qp.device.gid, qp.qpn, cls)
     _emit(qp, _mk(qp, Op.CNP, psn=pkt.psn, ecn_class=cls))
 
 
@@ -299,6 +304,11 @@ def responder(qp):
                 pass
             elif qp.last_nak_epsn != qp.epsn:   # one NAK per gap (RoCE)
                 qp.last_nak_epsn = qp.epsn
+                fab = qp.device.fabric
+                fab.metrics.inc("psn_naks", gid=qp.device.gid)
+                trc = fab.tracer
+                if trc is not None:
+                    trc.psn_nak(fab.now, qp.device.gid, qp.qpn, qp.epsn)
                 _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
                               nak_code=NakCode.PSN_SEQ_ERR))
             continue
@@ -331,8 +341,11 @@ def responder(qp):
                 # window is silently dropped above via rnr_nak_sent.
                 qp.rnr_nak_sent = True
                 fab = qp.device.fabric
-                fab.stats["rnr_naks"] += 1
-                fab.stats[f"rnr_naks@{qp.device.gid}"] += 1
+                fab.metrics.inc("rnr_naks", gid=qp.device.gid)
+                trc = fab.tracer
+                if trc is not None:
+                    trc.rnr_nak(fab.now, qp.device.gid, "responder",
+                                qp.dest_gid, qp.dest_qpn, qp.epsn)
                 _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
                               nak_code=NakCode.RNR))
                 continue
@@ -400,6 +413,10 @@ def _handle_rnr_nak(qp, pkt: Packet):
     if cc is not None:
         cc.advance(now, qp.device.fabric.bytes_per_step)
         cc.cut(now)
+        trc = qp.device.fabric.tracer
+        if trc is not None:
+            trc.rate_change(now, qp.device.gid, qp.qpn, cc.rc, cc.rt,
+                            cc.alpha, "rnr")
     # Karn across the pause: ACKs of anything outstanding are ambiguous
     # once the window will be retransmitted
     qp._send_time.clear()
@@ -415,9 +432,8 @@ def _rnr_retry_exhausted(qp):
         qp.modify(QPState.ERROR, system=True)
     else:                               # defensive: exhaustion mid-drain
         qp.state = QPState.ERROR
-    qp.device.fabric.stats["rnr_retries_exhausted"] += 1
-    qp.device.fabric.stats[
-        f"rnr_retries_exhausted@{qp.device.gid}"] += 1
+    qp.device.fabric.metrics.inc("rnr_retries_exhausted",
+                                 gid=qp.device.gid)
     status = WCStatus.RNR_RETRY_EXC_ERR
     while qp.pending_comp:
         _, wr_id, opcode, blen = qp.pending_comp.popleft()
@@ -456,10 +472,13 @@ def _handle_cnp(qp, pkt: Packet):
         return                  # ECN disabled: stray CNP ignored
     cc.advance(fab.now, fab.bytes_per_step)
     cc.on_cnp(fab.now)
-    fab.stats["cnps_handled"] += 1
-    fab.stats[f"cnps_handled@{qp.device.gid}"] += 1
     cls = pkt.ecn_class if pkt.ecn_class is not None else CLASS_APP
-    fab.stats[f"{cls}_cnps_handled"] += 1
+    fab.metrics.inc("cnps_handled", gid=qp.device.gid, cls=cls)
+    trc = fab.tracer
+    if trc is not None:
+        trc.cnp_handled(fab.now, qp.device.gid, qp.qpn, cls)
+        trc.rate_change(fab.now, qp.device.gid, qp.qpn, cc.rc, cc.rt,
+                        cc.alpha, "cnp")
 
 
 def _rtt_sample(qp, sample: float):
@@ -531,6 +550,11 @@ def completer(qp):
                     cc.advance(qp.device.fabric.now,
                                qp.device.fabric.bytes_per_step)
                     cc.cut(qp.device.fabric.now)
+                    trc = qp.device.fabric.tracer
+                    if trc is not None:
+                        trc.rate_change(qp.device.fabric.now,
+                                        qp.device.gid, qp.qpn, cc.rc,
+                                        cc.rt, cc.alpha, "read")
             # single-MTU READ: find the pending read WR, deliver payload
             _ack_up_to(qp, pkt.psn)
         elif pkt.op == Op.NAK:
@@ -564,7 +588,7 @@ def completer(qp):
             # go-back-N: retransmit from the requested psn
             for p in qp.inflight:
                 if p.psn >= pkt.psn:
-                    _retx(qp, p)
+                    _retx(qp, p, "nak")
             qp.last_progress = qp.device.fabric.now
         elif pkt.op == Op.RESUME:                                # [MIGR]
             # Partner migrated: learn its new address (the source of the
@@ -582,5 +606,5 @@ def completer(qp):
             qp._send_time.clear()
             _ack_up_to(qp, pkt.psn)                              # [MIGR]
             for p in qp.inflight:                                # [MIGR]
-                _retx(qp, p)                                     # [MIGR]
+                _retx(qp, p, "resume")                           # [MIGR]
             qp.last_progress = qp.device.fabric.now              # [MIGR]

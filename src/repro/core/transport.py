@@ -36,12 +36,12 @@ overflow/RNR/timeout machinery has to fire.
 from __future__ import annotations
 
 import random
-from collections import defaultdict
 from typing import Dict, List, Optional
 
 from repro.core.packets import MIG_OPS, Packet
-from repro.core.qos import (ECNConfig, EgressPort, IngressConfig,
-                            IngressPort, QoSConfig)
+from repro.core.qos import (CLASS_APP, CLASS_MIG, ECNConfig, EgressPort,
+                            IngressConfig, IngressPort, QoSConfig)
+from repro.obs.metrics import MetricsRegistry
 
 # sim-time -> wall-time conversion: one fabric pump step models roughly a
 # microsecond of NIC time. All MigrationReport second-figures derive from
@@ -70,7 +70,15 @@ class Fabric:
         self._ports: Dict[int, EgressPort] = {}       # src gid -> port
         self._ingress: Dict[int, IngressPort] = {}    # dest gid -> port
         self._devices: Dict[int, "RdmaDevice"] = {}   # gid -> device
-        self.stats = defaultdict(int)
+        # every counter routes through the registry; ``stats`` IS the
+        # registry's counter dict (same object), so the pre-registry
+        # string-dict surface keeps working unchanged
+        self.metrics = MetricsRegistry(window=UTILIZATION_WINDOW)
+        self.stats = self.metrics.counters
+        # typed event tracing (repro.obs.trace), off by default: every
+        # hook site in the stack is one `tracer is None` check, and the
+        # disabled path leaves all pinned figures byte-identical
+        self.tracer = None
         self.trace: Optional[List[Packet]] = None
         self.set_bandwidth(bandwidth_Bps)
 
@@ -113,6 +121,25 @@ class Fabric:
         immediately — existing rate state goes dormant (no admission
         gate is consulted while disabled)."""
         self.ecn = ecn.validate()
+
+    # -- tracing -------------------------------------------------------------
+    def configure_tracing(self, enabled: bool = True, *,
+                          max_events: Optional[int] = None):
+        """Operator knob: attach (or detach, ``enabled=False``) a typed
+        event tracer to the fabric. Returns the ``repro.obs.trace
+        .Tracer`` (or None). Disabled — the default — the hook sites are
+        a single attribute check and the wire model is byte-identical to
+        an untraced run; enabled, every packet/congestion/migration
+        event is recorded against the sim clock, exportable via
+        ``repro.obs.export`` and ``tools/trace_report.py``.
+        ``max_events`` bounds trace memory (overflow is counted, not
+        silent)."""
+        if not enabled:
+            self.tracer = None
+            return None
+        from repro.obs.trace import Tracer
+        self.tracer = Tracer(self, max_events=max_events)
+        return self.tracer
 
     def marking_rate(self, gid: int) -> float:
         """Fraction of bytes CE-marked at a node's *egress* port over
@@ -202,10 +229,10 @@ class Fabric:
         packet parked there was addressed to it."""
         self._devices.pop(gid, None)
         for port in self._ports.values():
-            self.stats["unroutable"] += port.drop_to(gid)
+            self.metrics.inc("unroutable", port.drop_to(gid), gid=gid)
         iport = self._ingress.pop(gid, None)
         if iport is not None:
-            self.stats["unroutable"] += iport.drop_all()
+            self.metrics.inc("unroutable", iport.drop_all(), gid=gid)
 
     def device(self, gid: int):
         return self._devices.get(gid)
@@ -246,14 +273,9 @@ class Fabric:
     # -- wire ----------------------------------------------------------------
     def send(self, pkt: Packet):
         n = pkt.nbytes()
-        self.stats["tx_packets"] += 1
-        self.stats["tx_bytes"] += n
-        if pkt.op in MIG_OPS:       # per-class accounting (CLASS_MIG)
-            self.stats["mig_tx_packets"] += 1
-            self.stats["mig_tx_bytes"] += n
-        else:                       # per-class accounting (CLASS_APP)
-            self.stats["app_tx_packets"] += 1
-            self.stats["app_tx_bytes"] += n
+        cls = CLASS_MIG if pkt.op in MIG_OPS else CLASS_APP
+        self.metrics.inc("tx_packets", gid=pkt.src_gid, cls=cls)
+        self.metrics.inc("tx_bytes", n, gid=pkt.src_gid, cls=cls)
         if self.trace is not None:
             self.trace.append(pkt)
         self.port(pkt.src_gid).enqueue(pkt, self.now)

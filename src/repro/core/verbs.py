@@ -300,7 +300,13 @@ class QueuePair:
         if new_state == QPState.RTS and sq_psn is not None:
             self.sq_psn = sq_psn
             self.una = sq_psn
+        old_state = self.state
         self.state = new_state
+        if old_state != new_state:
+            trc = self.device.fabric.tracer
+            if trc is not None:
+                trc.qp_state(self.device.fabric.now, self.device.gid,
+                             self.qpn, old_state.name, new_state.name)
 
     def post_send(self, wr: SendWR):
         if self.state not in (QPState.RTS, QPState.PAUSED):
@@ -499,7 +505,7 @@ class RdmaDevice:
         if qp is None:
             # dropped; sender's go-back-N recovers after migration — but
             # count it so migration bugs (stale QPNs) are observable
-            self.fabric.stats["unknown_qpn"] += 1
+            self.fabric.metrics.inc("unknown_qpn", gid=self.gid)
             return
         qp.rx.append(pkt)
 

@@ -1,0 +1,23 @@
+"""Fabric observability: sim-clock tracing, metrics, and exporters.
+
+Everything here is driven by the fabric sim clock (``fabric.now``,
+seconds = ``step * STEP_S``) — never a wall clock — so observability
+output is as deterministic as the fabric itself. Tracing is off by
+default and every hook in the core is a single ``tracer is None`` check;
+``MetricsRegistry`` is always on, but it *is* the old ``fabric.stats``
+dict (same object), so the always-on cost is unchanged.
+
+See ``docs/observability.md`` for the event taxonomy, exporter usage,
+and the zero-overhead contract.
+"""
+from repro.obs.export import (build_migration_report, chrome_trace,
+                              render_timeline, write_chrome_trace)
+from repro.obs.metrics import MetricsRegistry, WindowedHistogram
+from repro.obs.trace import EventKind, TraceEvent, Tracer, record_phase
+
+__all__ = [
+    "EventKind", "TraceEvent", "Tracer", "record_phase",
+    "MetricsRegistry", "WindowedHistogram",
+    "chrome_trace", "write_chrome_trace",
+    "build_migration_report", "render_timeline",
+]

@@ -1,0 +1,225 @@
+"""Trace exporters: Chrome trace-event JSON and migration timeline reports.
+
+Two consumers of one ``Tracer``:
+
+* ``chrome_trace`` / ``write_chrome_trace`` — the Chrome trace-event
+  format (the ``{"traceEvents": [...]}`` JSON that Perfetto and
+  ``chrome://tracing`` load). Migration phase spans become complete
+  ("X") events grouped per node; everything else becomes instant ("i")
+  events. Timestamps are sim-clock microseconds: one fabric step is
+  ``STEP_S`` seconds (1 µs), so ``ts`` is literally the step count.
+
+* ``build_migration_report`` / ``render_timeline`` — the attribution
+  the paper's scalars lack: where ``downtime_s``/``transfer_s`` went,
+  by phase, by port (per-node egress bytes inside each phase window),
+  and by traffic class. Phase durations are computed with the same
+  ``step * step_s`` arithmetic, in the same order, as the strategies'
+  ``MigrationReport`` fields — so span sums equal the reported figures
+  exactly, which ``tests/test_obs.py`` and ``tools/trace_report.py``
+  both assert.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+from repro.obs.trace import EventKind, TraceEvent, Tracer
+
+# phases whose spans make up the stop-the-world window (the strategies
+# compute downtime_s = checkpoint_s + transfer_s + restore_s)
+DOWNTIME_PHASES = ("checkpoint", "transfer", "restore")
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace-event JSON
+# ---------------------------------------------------------------------------
+
+
+def chrome_trace(tracer: Tracer) -> Dict:
+    """Render the tracer's events as a Chrome trace-event JSON object.
+
+    Layout: one trace "process" per fabric node (pid = gid), phase spans
+    on a ``migration`` thread, packet/congestion/service instants on a
+    per-kind thread — so Perfetto's timeline groups a node's egress
+    activity, NAK storms, and migration phases into adjacent tracks."""
+    us = tracer.step_s * 1e6            # microseconds per fabric step
+    events: List[Dict] = []
+    nodes = sorted({e.node for e in tracer.events if e.node is not None})
+    for gid in nodes:
+        events.append({"ph": "M", "name": "process_name", "pid": gid,
+                       "tid": 0, "args": {"name": f"node {gid}"}})
+    for e in tracer.events:
+        pid = e.node if e.node is not None else -1
+        if e.kind is EventKind.PHASE:
+            events.append({
+                "ph": "X", "name": e.data["name"], "cat": "migration",
+                "pid": pid, "tid": "migration",
+                "ts": e.data["begin"] * us,
+                "dur": e.data["dur_steps"] * us,
+                "args": {k: v for k, v in e.data.items()
+                         if k not in ("begin", "end")},
+            })
+        else:
+            events.append({
+                "ph": "i", "s": "t", "name": e.kind.value,
+                "cat": e.kind.value.split("_")[0],
+                "pid": pid, "tid": e.kind.value,
+                "ts": e.step * us, "args": dict(e.data),
+            })
+    return {"traceEvents": events, "displayTimeUnit": "ms",
+            "otherData": {"sim_step_s": tracer.step_s,
+                          "dropped_events": tracer.dropped_events}}
+
+
+def write_chrome_trace(tracer: Tracer, path: str) -> str:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(tracer), f)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# migration timeline report
+# ---------------------------------------------------------------------------
+
+
+def _phase_dicts(tracer: Tracer) -> List[Dict]:
+    out = []
+    for e in tracer.phases():
+        d = e.data
+        out.append({"name": d["name"], "node": e.node,
+                    "begin": d["begin"], "end": d["end"],
+                    "begin_s": d["begin"] * tracer.step_s,
+                    "end_s": d["end"] * tracer.step_s,
+                    # same arithmetic as the strategies' rep fields:
+                    # (end - begin) steps, scaled once
+                    "dur_s": d["dur_steps"] * tracer.step_s,
+                    "attrs": {k: v for k, v in d.items()
+                              if k not in ("name", "begin", "end",
+                                           "dur_steps")}})
+    return out
+
+
+def build_migration_report(tracer: Tracer,
+                           now: Optional[int] = None) -> Dict:
+    """Attribute migration time to phases, ports, and traffic classes.
+
+    ``downtime_s`` is the sum of checkpoint/transfer/restore spans and
+    ``transfer_s`` the sum of transfer spans — accumulated in event
+    order with the same float operations the strategies use, so the
+    totals equal the ``MigrationReport`` fields exactly. ``ports`` and
+    ``classes`` attribute wire traffic (EGRESS_TX events) to the phase
+    window each byte was transmitted in; bytes outside every downtime
+    phase land in ``"live"``."""
+    phases = _phase_dicts(tracer)
+    totals: Dict[str, float] = {}
+    for p in phases:
+        totals[p["name"]] = totals.get(p["name"], 0.0) + p["dur_s"]
+    downtime_s = 0.0
+    for name in DOWNTIME_PHASES:
+        downtime_s += totals.get(name, 0.0)
+
+    # wire attribution: which phase window was each transmitted packet
+    # inside (half-open (begin, end]: a packet sent at the step a phase
+    # ended belongs to it — fab.now advanced before the send ran)
+    windows = [(p["begin"], p["end"], p["name"]) for p in phases
+               if p["name"] in DOWNTIME_PHASES or p["name"] == "live"
+               or p["name"] == "precopy_round"]
+
+    def window_of(step: int) -> str:
+        for b, e, name in windows:
+            if b < step <= e:
+                return name
+        return "live"
+
+    ports: Dict[int, Dict] = {}
+    classes: Dict[str, Dict] = {}
+    by_phase: Dict[str, Dict] = {}
+    for e in tracer.of_kind(EventKind.EGRESS_TX):
+        n = e.data["nbytes"]
+        cls = e.data["cls"]
+        ph = window_of(e.step)
+        port = ports.setdefault(e.node, {"tx_bytes": 0, "tx_packets": 0,
+                                         "phases": {}})
+        port["tx_bytes"] += n
+        port["tx_packets"] += 1
+        port["phases"][ph] = port["phases"].get(ph, 0) + n
+        c = classes.setdefault(cls, {"tx_bytes": 0, "tx_packets": 0,
+                                     "phases": {}})
+        c["tx_bytes"] += n
+        c["tx_packets"] += 1
+        c["phases"][ph] = c["phases"].get(ph, 0) + n
+        d = by_phase.setdefault(ph, {"tx_bytes": 0, "app": 0, "mig": 0})
+        d["tx_bytes"] += n
+        d[cls] += n
+
+    counts = {}
+    for e in tracer.events:
+        counts[e.kind.value] = counts.get(e.kind.value, 0) + 1
+
+    fab = tracer.fabric
+    hists = {}
+    if fab is not None:
+        hists = {k: h.summary(now)
+                 for k, h in fab.metrics.histograms.items()}
+    return {
+        "phases": phases,
+        "phase_totals_s": totals,
+        "downtime_s": downtime_s,
+        "transfer_s": totals.get("transfer", 0.0),
+        "live_s": totals.get("live", 0.0),
+        "rounds": [p for p in phases if p["name"] == "precopy_round"],
+        "ports": ports,
+        "classes": classes,
+        "wire_by_phase": by_phase,
+        "event_counts": counts,
+        "histograms": hists,
+        "dropped_events": tracer.dropped_events,
+    }
+
+
+def render_timeline(report: Dict, width: int = 48) -> str:
+    """Text timeline of a migration report: one bar per phase span
+    (scaled to the longest), then the port/class attribution tables."""
+    lines = ["migration timeline (sim clock)", ""]
+    phases = report["phases"]
+    if not phases:
+        return "no phase spans recorded (was tracing enabled?)"
+    t0 = min(p["begin"] for p in phases)
+    longest = max(max(p["end"] for p in phases) - t0, 1)
+    for p in sorted(phases, key=lambda p: (p["begin"], p["end"])):
+        lo = int((p["begin"] - t0) / longest * width)
+        hi = max(int((p["end"] - t0) / longest * width), lo + 1)
+        bar = " " * lo + "#" * (hi - lo)
+        extra = "".join(f" {k}={v}" for k, v in p["attrs"].items()
+                        if k != "node")
+        lines.append(f"  {p['name']:>14} |{bar:<{width}}| "
+                     f"{p['dur_s'] * 1e6:9.1f} us{extra}")
+    lines.append("")
+    lines.append(f"  downtime_s={report['downtime_s']:.6f} "
+                 f"transfer_s={report['transfer_s']:.6f} "
+                 f"live_s={report['live_s']:.6f}")
+    for name in ("checkpoint", "restore"):
+        if name in report["phase_totals_s"]:
+            lines[-1] += (f" {name}_s="
+                          f"{report['phase_totals_s'][name]:.6f}")
+    if report["ports"]:
+        lines.append("")
+        lines.append("  wire bytes by egress port (per phase window):")
+        for gid in sorted(report["ports"]):
+            p = report["ports"][gid]
+            per = " ".join(f"{k}={v}" for k, v in
+                           sorted(p["phases"].items()))
+            lines.append(f"    node {gid}: {p['tx_bytes']} B "
+                         f"/ {p['tx_packets']} pkts  [{per}]")
+    if report["classes"]:
+        lines.append("  wire bytes by traffic class:")
+        for cls in sorted(report["classes"]):
+            c = report["classes"][cls]
+            per = " ".join(f"{k}={v}" for k, v in
+                           sorted(c["phases"].items()))
+            lines.append(f"    {cls}: {c['tx_bytes']} B "
+                         f"/ {c['tx_packets']} pkts  [{per}]")
+    if report["dropped_events"]:
+        lines.append(f"  WARNING: {report['dropped_events']} events "
+                     f"dropped (max_events hit) — totals are partial")
+    return "\n".join(lines)

@@ -1,0 +1,155 @@
+"""Metrics registry: counters, gauges, windowed histograms.
+
+The fabric used to keep an ad-hoc ``defaultdict(int)`` string-dict
+(``fabric.stats``) that grew per-node (``name@gid``) and per-class
+(``mig_``/``app_`` prefixed) twins by hand at each call site — and grew
+them inconsistently (``dropped`` had no node twin, ``rx_dropped`` did).
+``MetricsRegistry`` is the single facade every counter now routes
+through: one ``inc(name, gid=..., cls=...)`` updates the bare counter
+and its node/class twins with one key grammar, so the per-node
+attribution the migration timeline reports need (which *port* paid the
+downtime) exists uniformly by construction.
+
+``fabric.stats`` remains the backwards-compatible view: it is literally
+the registry's counter dict, so every existing ``fabric.stats[...]``
+read (tests, benchmarks, admission) sees exactly the keys it used to.
+
+Gauges and windowed histograms exist for the tracing layer
+(``repro.obs.trace``): queue-depth and per-class latency samples are
+only ever observed from tracer hooks, so with tracing disabled (the
+default) the histogram path costs nothing — the observability analogue
+of the paper's no-overhead-when-not-migrating claim (§5).
+"""
+from __future__ import annotations
+
+from collections import defaultdict, deque
+from typing import Deque, Dict, Optional, Tuple
+
+# key grammar, shared with the pre-registry stats dict:
+#   <name>            fabric-wide counter
+#   <name>@<gid>      per-node twin (sums to the bare counter)
+#   <cls>_<name>      per-class twin (app_/mig_; sum to the bare counter)
+NODE_SEP = "@"
+
+
+class WindowedHistogram:
+    """Fixed-horizon sample window in fabric-step time: ``observe``
+    appends ``(step, value)``, samples older than ``window`` steps fall
+    off, and percentiles are computed over whatever remains. Purely
+    sim-clock driven — identical runs observe identical samples."""
+
+    __slots__ = ("window", "samples")
+
+    def __init__(self, window: int):
+        self.window = window
+        self.samples: Deque[Tuple[int, float]] = deque()
+
+    def observe(self, step: int, value: float):
+        self.samples.append((step, value))
+        self.trim(step)
+
+    def trim(self, now: int):
+        while self.samples and self.samples[0][0] <= now - self.window:
+            self.samples.popleft()
+
+    def __len__(self) -> int:
+        return len(self.samples)
+
+    def percentile(self, q: float, now: Optional[int] = None) -> float:
+        """q-th percentile (0..100) of the windowed samples; 0.0 empty.
+        Nearest-rank definition, so p50 of one sample is that sample."""
+        if now is not None:
+            self.trim(now)
+        if not self.samples:
+            return 0.0
+        vals = sorted(v for _, v in self.samples)
+        rank = max(0, min(len(vals) - 1,
+                          int(q / 100.0 * len(vals) + 0.5) - 1))
+        return vals[rank]
+
+    def summary(self, now: Optional[int] = None) -> Dict[str, float]:
+        if now is not None:
+            self.trim(now)
+        if not self.samples:
+            return {"count": 0, "min": 0.0, "max": 0.0, "mean": 0.0,
+                    "p50": 0.0, "p90": 0.0, "p99": 0.0}
+        vals = [v for _, v in self.samples]
+        return {"count": len(vals), "min": min(vals), "max": max(vals),
+                "mean": sum(vals) / len(vals),
+                "p50": self.percentile(50), "p90": self.percentile(90),
+                "p99": self.percentile(99)}
+
+
+class MetricsRegistry:
+    """Counter/gauge/histogram facade of one fabric.
+
+    ``counters`` is the raw dict — the object ``fabric.stats`` aliases,
+    so the registry subsumes the old surface instead of breaking it.
+    ``node_counters`` records every counter name that was ever
+    incremented with a ``gid``: the per-node-twin invariant
+    (``sum(name@gid) == name``) holds for exactly that set, by
+    construction, and ``tests/test_obs.py`` asserts it."""
+
+    def __init__(self, window: int = 1000):
+        self.window = window
+        self.counters: Dict[str, int] = defaultdict(int)
+        self.gauges: Dict[str, float] = {}
+        self.histograms: Dict[str, WindowedHistogram] = {}
+        self.node_counters: set = set()
+
+    # -- counters ----------------------------------------------------------
+    def inc(self, name: str, value: int = 1, *,
+            gid: Optional[int] = None, cls: Optional[str] = None):
+        """Increment ``name`` and its twins: ``name@gid`` when the event
+        is attributable to one node's port/NIC, ``<cls>_name`` when it is
+        attributable to a traffic class. One call site, every view."""
+        c = self.counters
+        c[name] += value
+        if gid is not None:
+            c[f"{name}{NODE_SEP}{gid}"] += value
+            self.node_counters.add(name)
+        if cls is not None:
+            c[f"{cls}_{name}"] += value
+
+    def node_twin_sums(self) -> Dict[str, Tuple[int, int]]:
+        """(bare value, sum of @gid twins) for every node-attributable
+        counter — the invariant surface: the two must always match."""
+        out = {}
+        for name in sorted(self.node_counters):
+            twin = sum(v for k, v in self.counters.items()
+                       if k.startswith(name + NODE_SEP)
+                       and k[len(name) + 1:].isdigit())
+            out[name] = (self.counters[name], twin)
+        return out
+
+    # -- gauges ------------------------------------------------------------
+    def set_gauge(self, name: str, value: float,
+                  gid: Optional[int] = None):
+        if gid is not None:
+            name = f"{name}{NODE_SEP}{gid}"
+        self.gauges[name] = value
+
+    # -- histograms --------------------------------------------------------
+    def observe(self, name: str, step: int, value: float,
+                gid: Optional[int] = None):
+        if gid is not None:
+            name = f"{name}{NODE_SEP}{gid}"
+        h = self.histograms.get(name)
+        if h is None:
+            h = self.histograms[name] = WindowedHistogram(self.window)
+        h.observe(step, value)
+
+    def histogram(self, name: str,
+                  gid: Optional[int] = None) -> Optional[WindowedHistogram]:
+        if gid is not None:
+            name = f"{name}{NODE_SEP}{gid}"
+        return self.histograms.get(name)
+
+    # -- export ------------------------------------------------------------
+    def snapshot(self, now: Optional[int] = None) -> Dict:
+        """Plain-dict view for reports/JSON: counters, gauges, and
+        histogram summaries (trimmed to ``now`` when given)."""
+        return {"counters": dict(self.counters),
+                "gauges": dict(self.gauges),
+                "histograms": {k: h.summary(now)
+                               for k, h in self.histograms.items()}}

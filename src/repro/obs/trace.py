@@ -1,0 +1,249 @@
+"""Sim-clock fabric tracer: typed, zero-cost-when-disabled event hooks.
+
+The paper's headline numbers (§5: no overhead without migration, bounded
+downtime with it) are scalars; this module records *where* that time
+goes. Every layer of the stack carries hooks — packet lifecycle at the
+egress/ingress ports, NAK/ECN/retransmit decisions in the QP tasks,
+service-channel stream ops, QP state transitions, DCQCN rate cuts, and
+migration phase spans from the strategies — all stamped with the fabric
+sim clock (``fabric.now``; seconds are ``step * STEP_S``), never a wall
+clock, so two seeded runs produce byte-identical event streams.
+
+The zero-overhead contract: ``fabric.tracer`` is ``None`` by default and
+every hook site guards with one attribute load + ``is None`` check — no
+event objects, no histogram samples, no behavioural difference. The
+pinned figures (fig_downtime/fig_contention/fig_incast/fig_ecn) stay
+byte-identical with tracing off; ``tests/test_obs.py`` pins this.
+
+Event taxonomy lives in ``EventKind``; ``tools/check_docs.py`` gates
+that every kind is documented in ``docs/observability.md``.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.packets import MIG_OPS, Packet
+
+
+def _cls(pkt: Packet) -> str:
+    """Traffic class (duplicates ``repro.core.qos.classify`` to keep this
+    module import-light: packets only, no scheduler dependency)."""
+    return "mig" if pkt.op in MIG_OPS else "app"
+
+
+class EventKind(enum.Enum):
+    """The event taxonomy. Each member is one trace-event type; the
+    value string is what exporters and ``docs/observability.md`` use."""
+    # -- packet lifecycle (transport/qos) ---------------------------------
+    EGRESS_ENQUEUE = "egress_enqueue"    # packet filed into a port queue
+    EGRESS_TX = "egress_tx"              # packet serialised onto the wire
+    EGRESS_DROP = "egress_drop"          # loss injection ate it post-tx
+    INGRESS_QUEUE = "ingress_queue"      # landed in a bounded rx queue
+    INGRESS_DELIVER = "ingress_deliver"  # handed to the device
+    INGRESS_DROP = "ingress_drop"        # shed at rx admission (w/ reason)
+    # -- congestion / recovery signals (qos/tasks) ------------------------
+    ECN_MARK = "ecn_mark"                # RED set the CE codepoint
+    CNP_SENT = "cnp_sent"                # notification point fired
+    CNP_HANDLED = "cnp_handled"          # reaction point consumed a CNP
+    RNR_NAK = "rnr_nak"                  # receiver-not-ready NAK emitted
+    PSN_NAK = "psn_nak"                  # sequence-gap NAK emitted
+    RETRANSMIT = "retransmit"            # requester re-offered a packet
+    RATE_CHANGE = "rate_change"          # DCQCN rate cut (CNP/RNR/READ)
+    # -- QP / service channel (verbs/service) -----------------------------
+    QP_STATE = "qp_state"                # verbs state transition
+    SVC_POST = "svc_post"                # service message queued (tx)
+    SVC_DELIVER = "svc_deliver"          # service message reassembled (rx)
+    SVC_ACK = "svc_ack"                  # stream-level MIG_ACK receipt
+    PAGE_PULL = "page_pull"              # post-copy demand/prefetch fill
+    # -- migration phases (migration/strategies/orchestrator) -------------
+    PHASE = "phase"                      # completed span [begin, end]
+
+
+@dataclass
+class TraceEvent:
+    """One typed event: ``kind`` from the taxonomy, ``step`` the fabric
+    sim clock at emission, ``node`` the gid it is attributed to (or
+    None), ``data`` the kind-specific payload. Contains only sim-state
+    values (steps, gids, PSNs, byte counts) — never object identities or
+    wall-clock times — so event streams compare equal across runs."""
+    kind: EventKind
+    step: int
+    node: Optional[int] = None
+    data: Dict = field(default_factory=dict)
+
+    @property
+    def time_s(self) -> float:
+        # populated by exporters via Tracer.step_s; kept here for
+        # hand-rolled inspection of a tracer's events
+        return self.step * 1e-6
+
+
+def _pkt_data(pkt: Packet) -> Dict:
+    return {"op": pkt.op.value, "psn": pkt.psn, "src": pkt.src_gid,
+            "src_qpn": pkt.src_qpn, "dst": pkt.dest_gid,
+            "dst_qpn": pkt.dest_qpn, "nbytes": pkt.nbytes(),
+            "cls": _cls(pkt), "tenant": pkt.tenant}
+
+
+class Tracer:
+    """Event sink of one fabric. Created by ``Fabric.configure_tracing``
+    (off by default). Hooks are plain methods so call sites stay typed:
+    a renamed hook fails loudly instead of silently dropping events.
+
+    ``max_events`` bounds memory on long runs: once full, new events are
+    counted in ``dropped_events`` instead of stored (the count makes the
+    truncation visible — a silently clipped trace reads as a quiet
+    fabric)."""
+
+    def __init__(self, fabric=None, *, max_events: Optional[int] = None):
+        self.fabric = fabric
+        self.step_s = 1e-6 if fabric is None else fabric.step_s()
+        self.max_events = max_events
+        self.events: List[TraceEvent] = []
+        self.dropped_events = 0
+        self._enq: Dict[int, int] = {}   # id(pkt) -> last enqueue step
+
+    # -- core --------------------------------------------------------------
+    def _emit(self, kind: EventKind, step: int, node: Optional[int],
+              data: Dict):
+        if self.max_events is not None \
+                and len(self.events) >= self.max_events:
+            self.dropped_events += 1
+            return
+        self.events.append(TraceEvent(kind, step, node, data))
+
+    def _observe(self, name: str, step: int, value: float,
+                 gid: Optional[int] = None):
+        if self.fabric is not None:
+            self.fabric.metrics.observe(name, step, value, gid=gid)
+
+    def clear(self):
+        self.events.clear()
+        self.dropped_events = 0
+        self._enq.clear()
+
+    def of_kind(self, kind: EventKind) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind is kind]
+
+    # -- packet lifecycle --------------------------------------------------
+    def egress_enqueue(self, step: int, pkt: Packet, gid: int,
+                       backlog_bytes: int):
+        self._enq[id(pkt)] = step
+        self._observe("egress_queue_depth", step, backlog_bytes, gid=gid)
+        self._emit(EventKind.EGRESS_ENQUEUE, step, gid,
+                   {**_pkt_data(pkt), "backlog": backlog_bytes})
+
+    def egress_tx(self, step: int, pkt: Packet, gid: int):
+        self._emit(EventKind.EGRESS_TX, step, gid, _pkt_data(pkt))
+
+    def egress_drop(self, step: int, pkt: Packet, gid: int):
+        self._emit(EventKind.EGRESS_DROP, step, gid, _pkt_data(pkt))
+
+    def ingress_queue(self, step: int, pkt: Packet, gid: int,
+                      backlog_bytes: int):
+        self._observe("ingress_queue_depth", step, backlog_bytes, gid=gid)
+        self._emit(EventKind.INGRESS_QUEUE, step, gid,
+                   {**_pkt_data(pkt), "backlog": backlog_bytes})
+
+    def ingress_deliver(self, step: int, pkt: Packet, gid: int):
+        t0 = self._enq.pop(id(pkt), None)
+        lat = None if t0 is None else step - t0
+        if lat is not None:
+            # per-class port-to-port latency (steps), the percentile
+            # source for the timeline report's latency table
+            self._observe(f"latency_{_cls(pkt)}", step, lat)
+        self._emit(EventKind.INGRESS_DELIVER, step, gid,
+                   {**_pkt_data(pkt), "latency_steps": lat})
+
+    def ingress_drop(self, step: int, pkt: Packet, gid: int, reason: str):
+        self._emit(EventKind.INGRESS_DROP, step, gid,
+                   {**_pkt_data(pkt), "reason": reason})
+
+    # -- congestion / recovery ---------------------------------------------
+    def ecn_mark(self, step: int, pkt: Packet, gid: int, where: str,
+                 occupancy: float):
+        self._emit(EventKind.ECN_MARK, step, gid,
+                   {**_pkt_data(pkt), "where": where,
+                    "occupancy": occupancy})
+
+    def cnp_sent(self, step: int, gid: int, qpn: int, cls: str):
+        self._emit(EventKind.CNP_SENT, step, gid,
+                   {"qpn": qpn, "cls": cls})
+
+    def cnp_handled(self, step: int, gid: int, qpn: int, cls: str):
+        self._emit(EventKind.CNP_HANDLED, step, gid,
+                   {"qpn": qpn, "cls": cls})
+
+    def rnr_nak(self, step: int, gid: int, origin: str, to_gid: int,
+                to_qpn: int, psn: int):
+        self._emit(EventKind.RNR_NAK, step, gid,
+                   {"origin": origin, "to": to_gid, "to_qpn": to_qpn,
+                    "psn": psn})
+
+    def psn_nak(self, step: int, gid: int, qpn: int, epsn: int):
+        self._emit(EventKind.PSN_NAK, step, gid,
+                   {"qpn": qpn, "epsn": epsn})
+
+    def retransmit(self, step: int, pkt: Packet, gid: int, qpn: int,
+                   reason: str):
+        self._emit(EventKind.RETRANSMIT, step, gid,
+                   {**_pkt_data(pkt), "qpn": qpn, "reason": reason})
+
+    def rate_change(self, step: int, gid: int, qpn: int, rc: float,
+                    rt: float, alpha: float, reason: str):
+        if self.fabric is not None:
+            self.fabric.metrics.set_gauge(f"dcqcn_rc@{gid}:{qpn}", rc)
+        self._emit(EventKind.RATE_CHANGE, step, gid,
+                   {"qpn": qpn, "rc": rc, "rt": rt, "alpha": alpha,
+                    "reason": reason})
+
+    # -- QP / service channel ----------------------------------------------
+    def qp_state(self, step: int, gid: int, qpn: int, old: str, new: str):
+        self._emit(EventKind.QP_STATE, step, gid,
+                   {"qpn": qpn, "old": old, "new": new})
+
+    def svc_post(self, step: int, gid: int, peer: int, op: str, xid: int,
+                 nbytes: int):
+        self._emit(EventKind.SVC_POST, step, gid,
+                   {"peer": peer, "op": op, "xid": xid, "nbytes": nbytes})
+
+    def svc_deliver(self, step: int, gid: int, src: int, op: str,
+                    nbytes: int):
+        self._emit(EventKind.SVC_DELIVER, step, gid,
+                   {"src": src, "op": op, "nbytes": nbytes})
+
+    def svc_ack(self, step: int, gid: int, xid: int):
+        self._emit(EventKind.SVC_ACK, step, gid, {"xid": xid})
+
+    def page_pull(self, step: int, gid: int, mrn: int, page: int,
+                  nbytes: int, fault: bool):
+        self._emit(EventKind.PAGE_PULL, step, gid,
+                   {"mrn": mrn, "page": page, "nbytes": nbytes,
+                    "fault": fault})
+
+    # -- migration phases --------------------------------------------------
+    def phase(self, name: str, begin: int, end: int,
+              node: Optional[int] = None, **attrs):
+        """One completed migration phase span ``[begin, end]`` in fabric
+        steps. Strategies call this with the *same* ``fab.now`` reads
+        their ``MigrationReport`` seconds derive from, so span durations
+        and report figures agree exactly (the timeline test pins
+        ``sum(transfer spans) == rep.transfer_s``)."""
+        self._emit(EventKind.PHASE, end, node,
+                   {"name": name, "begin": begin, "end": end,
+                    "dur_steps": end - begin, **attrs})
+
+    def phases(self, name: Optional[str] = None) -> List[TraceEvent]:
+        return [e for e in self.events if e.kind is EventKind.PHASE
+                and (name is None or e.data["name"] == name)]
+
+
+def record_phase(fabric, name: str, begin: int,
+                 node: Optional[int] = None, **attrs):
+    """Hook-site helper: record a phase span ending *now* iff tracing is
+    enabled. One attribute load + None check when disabled."""
+    trc = fabric.tracer
+    if trc is not None:
+        trc.phase(name, begin, fabric.now, node=node, **attrs)

@@ -23,6 +23,7 @@ from repro.core.migration import (MigrationController, MigrationError,
 from repro.core.states import QPState
 from repro.core.transport import STEP_S
 from repro.core.verbs import PAGE_SIZE
+from repro.obs.trace import record_phase
 from repro.orchestrator.strategies import (MigrationStrategy,
                                            choose_migration_strategy,
                                            make_strategy)
@@ -222,7 +223,12 @@ class Orchestrator:
 
     # -- execution -----------------------------------------------------------
     def _execute(self, req: MigrationRequest) -> MigrationReport:
+        fab = self.controller.fabric
+        t_adm = fab.now
         self.admit(req.container, req.dest_node)
+        record_phase(fab, "admission", t_adm,
+                     node=req.dest_node.device.gid,
+                     container=req.container.name)
         strategy = req.strategy
         if strategy == "auto":
             est = sum(mr.size for mr in req.container.ctx.mrs)
@@ -271,6 +277,8 @@ class Orchestrator:
         state the dead attempt parked in service channels (staged pre-copy
         pages at the destination, the post-copy frozen store at the
         source) is released so repeated failures don't leak footprints."""
+        fab = self.controller.fabric
+        t_rb = fab.now
         for qp in container.ctx.qps:
             if qp.state == QPState.STOPPED:
                 qp.modify(QPState.RTS, system=True)              # [MIGR]
@@ -283,6 +291,9 @@ class Orchestrator:
         # (or raise), so even an exception mid-stream cannot leak them
         self.controller.run_cleanups(container)
         container.alive = True
+        record_phase(fab, "rollback", t_rb,
+                     node=container.ctx.device.gid,
+                     container=container.name)
         if rep is not None:
             rep.rolled_back = True
             rep.attempt = None            # the token is dead with the QPs

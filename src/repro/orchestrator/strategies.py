@@ -37,6 +37,7 @@ from repro.core.migration import MigrationReport
 from repro.core.packets import Op
 from repro.core.transport import STEP_S
 from repro.core.verbs import PAGE_SIZE, MemoryRegion
+from repro.obs.trace import record_phase
 
 # pages per MIG_PAGE message: bounds the service scratch MR while keeping
 # per-message overhead small (64 pages = 256 KiB per WQE)
@@ -107,9 +108,12 @@ class MigrationStrategy:
                                  runtime=attempt.get("runtime", "crx"))
         rep.simulated_transfer_s += _sim_transfer_s(ctl, attempt)
         rep.transfer_s += (fab.now - t1) * STEP_S
+        record_phase(fab, "transfer", t1,
+                     node=dest_node.device.gid, retry=True)
         t2 = fab.now
         install(moved)
         rep.restore_s += (fab.now - t2) * STEP_S
+        record_phase(fab, "restore", t2, node=dest_node.device.gid)
         ctl.clear_cleanups(container)
         container.alive = True
         rep.ok = True
@@ -207,6 +211,8 @@ class PreCopy(MigrationStrategy):
         rep.rounds.append({"round": 0, "pages": len(all_pages),
                            "bytes": r0_bytes, "sim_s": r0_bytes / ctl.bw,
                            "wire_s": (fab.now - r0) * STEP_S})
+        record_phase(fab, "precopy_round", r0, node=src_dev.gid,
+                     round=0, pages=len(all_pages), bytes=r0_bytes)
         self._live(ctl, background)
 
         # iterative delta rounds: re-send only what got dirtied while the
@@ -229,8 +235,12 @@ class PreCopy(MigrationStrategy):
                                "bytes": dirty_bytes,
                                "sim_s": dirty_bytes / ctl.bw,
                                "wire_s": (fab.now - rt) * STEP_S})
+            record_phase(fab, "precopy_round", rt, node=src_dev.gid,
+                         round=rnd, pages=len(dirty), bytes=dirty_bytes)
             self._live(ctl, background)
         rep.live_s = (fab.now - t_live) * STEP_S
+        record_phase(fab, "live", t_live, node=src_dev.gid,
+                     rounds=len(rep.rounds))
 
         # -- stop-the-world: residual pages + verbs state + user state ----
         t_stop = fab.now
@@ -249,6 +259,9 @@ class PreCopy(MigrationStrategy):
             image = zlib.decompress(zlib.compress(image, level=1))
         rep.image_bytes = len(image)
         rep.checkpoint_s = (fab.now - t_stop) * STEP_S
+        record_phase(fab, "checkpoint", t_stop, node=src_dev.gid,
+                     image_bytes=len(image),
+                     residual_pages=len(residual))
         if fail_at == "checkpoint":
             rep.ok = False
             rep.stage_failed = "checkpoint"
@@ -271,11 +284,14 @@ class PreCopy(MigrationStrategy):
             return rep
         moved = ctl.stream_image(src_dev, dest_gid, image, runtime=runtime)
         rep.transfer_s = (fab.now - t1) * STEP_S
+        record_phase(fab, "transfer", t1, node=src_dev.gid,
+                     bytes=len(image))
 
         t2 = fab.now
         staged = self._claim_staging(dest_node, stream)
         self._install(ctl, container, moved, staged, dest_node)
         rep.restore_s = (fab.now - t2) * STEP_S
+        record_phase(fab, "restore", t2, node=dest_gid)
         rep.downtime_s = rep.checkpoint_s + rep.transfer_s + rep.restore_s
         ctl.clear_cleanups(container)
         return rep
@@ -387,6 +403,12 @@ class DemandPager:
         if self.report is not None:
             self.report.pages_sent += 1
         self.simulated_pull_s += len(data) / self.bw
+        if self.service is not None:
+            fab = self.service.device.fabric
+            trc = fab.tracer
+            if trc is not None:
+                trc.page_pull(fab.now, self.dest_gid, mr.mrn, pg,
+                              len(data), fault)
         self._charge_wire(mr, pg, data)
         if not self.missing[mr.mrn]:
             mr.pager = None                      # fully resident
@@ -464,6 +486,8 @@ class PostCopy(MigrationStrategy):
             image = zlib.decompress(zlib.compress(image, level=1))
         rep.image_bytes = len(image)
         rep.checkpoint_s = (fab.now - t0) * STEP_S
+        record_phase(fab, "checkpoint", t0, node=src_dev.gid,
+                     image_bytes=len(image))
         if fail_at == "checkpoint":
             rep.ok = False
             rep.stage_failed = "checkpoint"
@@ -494,10 +518,13 @@ class PostCopy(MigrationStrategy):
             return rep
         moved = ctl.stream_image(src_dev, dest_gid, image, runtime=runtime)
         rep.transfer_s = (fab.now - t1) * STEP_S
+        record_phase(fab, "transfer", t1, node=src_dev.gid,
+                     bytes=len(image))
 
         t2 = fab.now
         self._install(ctl, container, moved, pager, dest_node)
         rep.restore_s = (fab.now - t2) * STEP_S
+        record_phase(fab, "restore", t2, node=dest_gid)
         rep.downtime_s = rep.total_s
         rep.pager = pager
         ctl.clear_cleanups(container)

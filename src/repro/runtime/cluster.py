@@ -156,6 +156,18 @@ class SimCluster:
         survives `migrate` (it rides the verbs dump)."""
         self.fabric.configure_ecn(ECNConfig(enabled=enabled, **knobs))
 
+    def configure_tracing(self, enabled: bool = True, *,
+                          max_events: Optional[int] = None):
+        """Operator knob: fabric-wide event tracing (`repro.obs`), off by
+        default. ``enabled`` turns the sim-clock tracer on (returning it)
+        or back off; ``max_events`` bounds the in-memory event list —
+        overflow is counted in ``tracer.dropped_events``, never silent.
+        Disabled, every hook site is a single ``is None`` check and all
+        figures stay byte-identical; enabled, the event stream is as
+        deterministic as the fabric itself (same seed, same events)."""
+        return self.fabric.configure_tracing(enabled,
+                                             max_events=max_events)
+
     def configure_rnr(self, name: Optional[str] = None, *,
                       rnr_retry: Optional[int] = None,
                       min_rnr_timer: Optional[int] = None):

@@ -13,6 +13,10 @@ Three gates:
 3. Operator-knob check: every public ``configure_*`` method on
    ``SimCluster`` and ``Fabric`` must be mentioned somewhere under
    docs/ — an undocumented knob is an unusable knob.
+4. Trace-taxonomy check: every ``EventKind`` member in
+   ``repro.obs.trace`` must appear (by its value string) in
+   docs/observability.md — an event type nobody can look up is noise
+   in every exported trace.
 
 Exit code 0 iff all gates pass; failures are listed one per line.
 """
@@ -111,10 +115,44 @@ def check_configure_knobs(knobs) -> list:
     return errors
 
 
+def event_kinds():
+    """Value strings of every EventKind member in repro.obs.trace,
+    read via AST so the check needs no importable package."""
+    tree = ast.parse((ROOT / "src/repro/obs/trace.py").read_text())
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef) and node.name == "EventKind":
+            for item in node.body:
+                if isinstance(item, ast.Assign) \
+                        and isinstance(item.value, ast.Constant) \
+                        and isinstance(item.value.value, str):
+                    out.append(item.value.value)
+    return out
+
+
+def check_event_taxonomy(kinds) -> list:
+    doc = ROOT / "docs/observability.md"
+    if not doc.exists():
+        return ["docs/observability.md missing (the trace-event "
+                "taxonomy reference)"]
+    text = doc.read_text()
+    errors = []
+    if not kinds:
+        errors.append("taxonomy check found no EventKind members — "
+                      "did repro.obs.trace move?")
+    for kind in kinds:
+        if kind not in text:
+            errors.append(f"EventKind {kind!r} not documented in "
+                          f"docs/observability.md")
+    return errors
+
+
 def main() -> int:
     knobs = configure_knobs()
+    kinds = event_kinds()
     errors = (check_links() + check_core_docstrings()
-              + check_configure_knobs(knobs))
+              + check_configure_knobs(knobs)
+              + check_event_taxonomy(kinds))
     for e in errors:
         print(f"FAIL: {e}")
     n_md = len(list(md_files()))
@@ -122,7 +160,8 @@ def main() -> int:
     if not errors:
         print(f"docs OK: {n_md} markdown files linked, "
               f"{n_py} core modules cite their paper section, "
-              f"{len(knobs)} configure_* knobs documented")
+              f"{len(knobs)} configure_* knobs documented, "
+              f"{len(kinds)} trace-event kinds documented")
     return 1 if errors else 0
 
 

@@ -1,0 +1,71 @@
+"""Render a migration timeline report from a traced fig_downtime run.
+
+Runs one ``benchmarks.fig_downtime`` scenario with the fabric tracer
+enabled, builds the migration report (``repro.obs``), prints the text
+timeline, and *validates* the observability contract: the transfer phase
+spans in the trace must sum exactly to the ``MigrationReport``'s
+``transfer_s``, and the checkpoint+transfer+restore spans to its
+``downtime_s``. Exits non-zero on any mismatch, so CI running this
+catches a hook site drifting away from the report-field arithmetic.
+
+Usage:
+    PYTHONPATH=src python tools/trace_report.py [--strategy pre_copy]
+        [--chrome trace.json] [--events]
+"""
+import argparse
+import json
+import math
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+from benchmarks.fig_downtime import run_strategy                  # noqa
+from repro.obs import (build_migration_report, render_timeline,   # noqa
+                       write_chrome_trace)
+
+
+def check(label: str, got: float, want: float) -> bool:
+    ok = math.isclose(got, want, rel_tol=1e-12, abs_tol=0.0) \
+        or got == want
+    mark = "ok" if ok else "MISMATCH"
+    print(f"# {label}: spans={got!r} report={want!r} [{mark}]")
+    return ok
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--strategy", default="pre_copy",
+                    choices=("stop_and_copy", "pre_copy", "post_copy"))
+    ap.add_argument("--chrome", metavar="PATH", default=None,
+                    help="also export Chrome trace-event JSON to PATH")
+    ap.add_argument("--events", action="store_true",
+                    help="print per-kind event counts")
+    args = ap.parse_args(argv)
+
+    rep, downtime, total, ab, cl = run_strategy(args.strategy, trace=True)
+    tracer = cl.fabric.tracer
+    report = build_migration_report(tracer, now=cl.fabric.now)
+    print(render_timeline(report))
+    print()
+    ok = check("transfer_s", report["transfer_s"], rep.transfer_s)
+    ok &= check("downtime_s", report["downtime_s"], rep.downtime_s)
+    if args.events:
+        for kind, n in sorted(report["event_counts"].items()):
+            print(f"#   {kind}: {n}")
+    if args.chrome:
+        path = write_chrome_trace(tracer, args.chrome)
+        with open(path) as f:
+            n = len(json.load(f)["traceEvents"])
+        print(f"# chrome trace -> {path} ({n} events)")
+    if not ok:
+        print("# FAILED: phase spans disagree with the migration report",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
