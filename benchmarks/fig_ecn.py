@@ -68,13 +68,17 @@ def build(ecn: bool, rnr_retry: int):
 
 def run(ecn: bool, rnr_retry: int = RNR_RETRY):
     cl, receivers = build(ecn, rnr_retry)
+    containers = list(cl.containers.values())
+    error = QPState.ERROR
     for _ in range(STEPS):
         # a real application stops touching a QP once RNR_RETRY_EXC_ERR
         # errors it — fence dead senders instead of re-posting into them
-        for c in cl.containers.values():
-            if any(qp.state == QPState.ERROR for qp in c.ctx.qps):
-                continue
-            c.step()
+        for c in containers:
+            for qp in c.ctx.qps:
+                if qp.state == error:
+                    break
+            else:
+                c.step()
         cl.pump()
     stats = cl.fabric.stats
     # reaction-point rates of the eight sender QPs (bytes/step)

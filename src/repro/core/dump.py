@@ -107,7 +107,14 @@ def dump_object(obj) -> dict:
         # migrated sender resumes at its *learned* rate, not line rate.
         # Conditional keys keep ECN-off images byte-identical.  # [ECN]
         if obj.cc is not None:
-            d["cc"] = obj.cc.dump(obj.device.fabric.now)
+            fab = obj.device.fabric
+            if fab.ecn.enabled:
+                # event scheduler: a parked QP's per-step DCQCN clock is
+                # replayed lazily — materialise it through ``now`` so
+                # the image captures the same tokens/timer phases the
+                # exhaustive scan maintained eagerly
+                obj.cc.advance(fab.now, fab.bytes_per_step)
+            d["cc"] = obj.cc.dump(fab.now)
         if obj.cnps_sent:
             d["cnps_sent"] = obj.cnps_sent
         return d

@@ -58,6 +58,19 @@ CTRL_OPS = frozenset({Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK, Op.CNP})
 RNR_OPS = frozenset({Op.SEND, Op.WRITE, Op.READ_REQ,
                      Op.MIG_PAGE, Op.MIG_STATE, Op.MIG_ACK})
 
+# Precomputed membership flags on the members themselves: ``op in
+# FROZENSET`` routes through Enum's Python-level ``__hash__`` and was
+# measurable on the per-packet paths. The frozensets above remain the
+# canonical definitions; the hot paths read these attributes.
+# ``is_completer`` = the completer's half of a QP's rx queue (pure
+# acks/notifications plus READ_RESP).
+for _op in Op:
+    _op.is_mig = _op in MIG_OPS
+    _op.is_ctrl = _op in CTRL_OPS
+    _op.is_rnr = _op in RNR_OPS
+    _op.is_completer = _op in CTRL_OPS or _op is Op.READ_RESP
+del _op
+
 
 class NakCode(enum.Enum):
     PSN_SEQ_ERR = "PSN_SEQ_ERR"
@@ -71,7 +84,7 @@ class NakCode(enum.Enum):
     RNR = "RNR"
 
 
-@dataclass
+@dataclass(slots=True)
 class Packet:
     op: Op
     src_gid: int

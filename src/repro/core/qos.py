@@ -77,7 +77,7 @@ MIN_BUCKET_BYTES = 4096.0
 def classify(pkt: Packet) -> str:
     """Traffic class of one packet: the migration data plane is exactly
     the service-channel MIG_* ops; everything else is application."""
-    return CLASS_MIG if pkt.op in MIG_OPS else CLASS_APP
+    return CLASS_MIG if pkt.op.is_mig else CLASS_APP
 
 
 @dataclass
@@ -340,8 +340,14 @@ class CongestionControl:
         """Refill the pacing bucket at rc and run the elapsed DCQCN
         timers: alpha decays every alpha_timer steps without a CNP, and
         every increase_timer steps the rate steps toward (then past) the
-        target. Lazy and pure in the step delta — calling it once for a
-        10-step gap equals calling it 10 times."""
+        target. Catch-up over a gap is an *exact per-step replay* of the
+        step-driven call pattern (the requester historically called this
+        once per step): float accumulation is not associative, so a
+        closed-form catch-up would drift from the per-step trajectory by
+        ulps — replaying keeps a QP the event scheduler parked for N
+        steps bit-identical to one advanced N times. Each replayed step
+        is a handful of float ops, and the boundary wakes in
+        ``tasks.next_wake`` bound parked gaps to one timer period."""
         if line_rate != self.line:      # operator re-priced the port
             self.line = line_rate
             self.rc = min(self.rc, line_rate)
@@ -349,25 +355,23 @@ class CongestionControl:
         if now <= self.last:
             return
         cfg = self.cfg
-        # catch-up must be O(1)-ish in the idle gap, not O(gap/timer):
-        # alpha decay is closed-form, and increase events stop mattering
-        # once both rates sit at line (they only bump the event counter)
-        k = (now - self.alpha_last) // cfg.alpha_timer
-        if k > 0:
-            self.alpha *= (1.0 - cfg.g) ** k
-            self.alpha_last += k * cfg.alpha_timer
-        k = (now - self.incr_last) // cfg.increase_timer
-        while k > 0 and (self.rc < self.line or self.rt < self.line):
-            self._increase_event(timer=True)
-            self.incr_last += cfg.increase_timer
-            k -= 1
-        if k > 0:                       # saturated: events are no-ops
-            self.t_events += k
-            self.incr_last += k * cfg.increase_timer
-        # refill after the increases so a long-idle QP resumes at the
-        # recovered rate, not the stale one
-        self.tokens = min(max(self.cfg.burst_bytes, MIN_BUCKET_BYTES),
-                          self.tokens + (now - self.last) * self.rc)
+        cap = max(cfg.burst_bytes, MIN_BUCKET_BYTES)
+        alpha_decay = 1.0 - cfg.g
+        t = self.last
+        while t < now:
+            t += 1
+            if t - self.alpha_last >= cfg.alpha_timer:
+                self.alpha *= alpha_decay
+                self.alpha_last += cfg.alpha_timer
+            if t - self.incr_last >= cfg.increase_timer:
+                if self.rc < self.line or self.rt < self.line:
+                    self._increase_event(timer=True)
+                else:               # saturated: events only count
+                    self.t_events += 1
+                self.incr_last += cfg.increase_timer
+            # refill after the increases so a long-idle QP resumes at
+            # the recovered rate, not the stale one
+            self.tokens = min(cap, self.tokens + self.rc)
         self.last = now
 
     # -- send admission (ahead of the tenant token bucket) -----------------
@@ -491,7 +495,7 @@ class _ClassQueue:
             q = self.tenants[tenant] = deque()
             self.order.append(tenant)
         q.append(pkt)
-        self.backlog_bytes += pkt.nbytes()
+        self.backlog_bytes += 64 + len(pkt.payload)  # nbytes(), inlined
         self.backlog_packets += 1
 
     def drain_all(self) -> List[Packet]:
@@ -579,9 +583,14 @@ class EgressPort:
         self.gid = gid
         self.cfg = cfg
         self.classes: Dict[str, _ClassQueue] = {}
+        self._class_list: List[_ClassQueue] = []    # cached .values()
         self.buckets: Dict[str, TokenBucket] = {}   # tenant -> bucket
         self.delivery: Deque[Tuple[int, Packet]] = deque()
         self.flows: Dict[int, _Flow] = {}           # dest gid -> view
+        # port-level backlog, maintained incrementally (summing the
+        # class counters per access is the old hot-path cost)
+        self.backlog_bytes = 0
+        self.backlog_packets = 0
         self.tx_bytes = 0                           # transmitted (wire)
         self.tx_packets = 0
         self._window: Deque[Tuple[int, int]] = deque()  # (enq_at, nbytes)
@@ -615,6 +624,11 @@ class EgressPort:
             self.classes = {CLASS_APP: _ClassQueue(CLASS_APP, 1.0)}
         for pkt in queued:              # re-queue under the new shape
             self._class_of(pkt).push(self._tenant_of(pkt), pkt)
+        self._class_list = list(self.classes.values())
+        self.backlog_bytes = sum(cq.backlog_bytes
+                                 for cq in self._class_list)
+        self.backlog_packets = sum(cq.backlog_packets
+                                   for cq in self._class_list)
 
     def reconfigure(self, cfg: QoSConfig):
         self.cfg = cfg.validate()
@@ -656,25 +670,44 @@ class EgressPort:
 
     # -- enqueue (called from Fabric.send) -----------------------------------
     def enqueue(self, pkt: Packet, now: int):
-        n = pkt.nbytes()
-        fl = self.flow(pkt.dest_gid)
+        n = 64 + len(pkt.payload)       # pkt.nbytes(), inlined (hot)
+        fl = self.flows.get(pkt.dest_gid)
+        if fl is None:
+            fl = self.flows[pkt.dest_gid] = _Flow(self)
         fl.tx_bytes += n
         fl.tx_packets += 1
         fl.queued_bytes += n
-        self._window.append((now, n))
+        # utilization-window upkeep with _trim(now) inlined (per packet)
+        w = self._window
+        w.append((now, n))
         self._win_bytes += n
-        self._trim(now)
-        self._class_of(pkt).push(self._tenant_of(pkt), pkt)
-        ecn = self.fabric.ecn
+        cut = now - self.fabric.utilization_window
+        while w[0][0] <= cut:
+            self._win_bytes -= w.popleft()[1]
+        mw = self._mark_window
+        while mw and mw[0][0] <= cut:
+            self._mark_bytes -= mw.popleft()[1]
+        # _class_of/_tenant_of, inlined (one call per packet on the wire)
+        if self.cfg.enabled:
+            self.classes[classify(pkt)].push(
+                pkt.tenant if pkt.tenant is not None else UNATTRIBUTED,
+                pkt)
+        else:
+            self.classes[CLASS_APP].push(UNATTRIBUTED, pkt)
+        self.backlog_bytes += n
+        self.backlog_packets += 1
+        fab = self.fabric
+        fab._in_flight += 1
+        ecn = fab.ecn
         if ecn.enabled and ecn.mark_egress:
             # RED at enqueue: occupancy against the reference backlog
             # (egress queues have no hard byte bound of their own)
             occ = self.backlog_bytes / ecn.egress_queue_bytes
-            if maybe_mark(self.fabric, self._ecn_rng, pkt, occ, self.gid,
+            if maybe_mark(fab, self._ecn_rng, pkt, occ, self.gid,
                           where="egress"):
                 self._mark_window.append((now, n))
                 self._mark_bytes += n
-        trc = self.fabric.tracer
+        trc = fab.tracer
         if trc is not None:
             trc.egress_enqueue(now, pkt, self.gid, self.backlog_bytes)
 
@@ -699,14 +732,6 @@ class EgressPort:
         if self._win_bytes <= 0:
             return 0.0
         return min(1.0, self._mark_bytes / self._win_bytes)
-
-    @property
-    def backlog_bytes(self) -> int:
-        return sum(cq.backlog_bytes for cq in self.classes.values())
-
-    @property
-    def backlog_packets(self) -> int:
-        return sum(cq.backlog_packets for cq in self.classes.values())
 
     def in_flight(self) -> int:
         return self.backlog_packets + len(self.delivery)
@@ -754,6 +779,8 @@ class EgressPort:
                 q.popleft()
                 cq.backlog_packets -= 1
                 cq.backlog_bytes -= n
+                self.backlog_packets -= 1
+                self.backlog_bytes -= n
                 cq.deficit -= n
                 if cq.bucket is not None:
                     cq.bucket.take(n)
@@ -774,8 +801,11 @@ class EgressPort:
             fl.queued_bytes -= n
         fab = self.fabric
         trc = fab.tracer
-        if fab.rng.random() < fab.loss_prob:
+        # the loss check is the fabric rng's only consumer, so a
+        # lossless port skips the draw without perturbing any stream
+        if fab.loss_prob and fab.rng.random() < fab.loss_prob:
             # serialisation time was spent before the wire dropped it
+            fab._in_flight -= 1
             fab.metrics.inc("dropped", gid=self.gid, cls=classify(pkt))
             if trc is not None:
                 trc.egress_drop(now, pkt, self.gid)
@@ -790,18 +820,55 @@ class EgressPort:
         throttled class returns its unusable share to the pool."""
         if not self.backlog_packets:
             return
-        # throttling observability: one count per (tenant, step) whose
-        # head packet is waiting on bucket tokens right now
-        for cq in self.classes.values():
-            for t in cq.order:
-                q = cq.tenants.get(t)
-                if not q:
-                    continue
-                b = self._bucket(t)
-                if b is not None and not b.peek(q[0].nbytes(), now):
-                    self.fabric.metrics.inc("qos_bucket_deferrals",
-                                            gid=self.gid)
-        _drr_spend(list(self.classes.values()),
+        cfg = self.cfg
+        if not cfg.enabled:
+            # single-FIFO degenerate mode: one class, one tenant, no
+            # buckets — the DRR loop reduces exactly to "grant the whole
+            # budget, drain heads while the deficit covers them, discard
+            # the leftover when the queue empties" (same float
+            # arithmetic: share = budget * 1.0 / 1.0)
+            budget = self.fabric.bytes_per_step
+            if budget <= 1e-9:
+                return
+            cq = self._class_list[0]
+            # deficit rides a local: most calls only accumulate (the
+            # head packet outweighs one step's budget), and the float
+            # op order is unchanged — one add, one subtract per packet
+            d = cq.deficit + budget
+            q = cq.tenants.get(UNATTRIBUTED)
+            while q:
+                pkt = q[0]
+                n = 64 + len(pkt.payload)   # pkt.nbytes(), inlined
+                if d < n:
+                    break
+                q.popleft()
+                cq.backlog_packets -= 1
+                cq.backlog_bytes -= n
+                self.backlog_packets -= 1
+                self.backlog_bytes -= n
+                d -= n
+                self._transmit(cq, pkt, n, now)
+            if d > 0 and not cq.backlog_packets:
+                d = 0.0             # reclaimed, then discarded unused
+            cq.deficit = d
+            return
+        if cfg.enabled and (cfg.tenant_rate_Bps
+                            or cfg.default_tenant_rate_Bps is not None):
+            # throttling observability: one count per (tenant, step)
+            # whose head packet is waiting on bucket tokens right now.
+            # Guarded per call (not cached): set_tenant_rate mutates the
+            # shared QoSConfig dicts in place. With no rates configured
+            # no bucket can exist, so the class×tenant walk is skipped.
+            for cq in self._class_list:
+                for t in cq.order:
+                    q = cq.tenants.get(t)
+                    if not q:
+                        continue
+                    b = self._bucket(t)
+                    if b is not None and not b.peek(q[0].nbytes(), now):
+                        self.fabric.metrics.inc("qos_bucket_deferrals",
+                                                gid=self.gid)
+        _drr_spend(self._class_list,
                    self.fabric.bytes_per_step,
                    lambda cq: self._eligible_head(cq, now),
                    lambda cq: self._drain_class(cq, now))
@@ -809,7 +876,9 @@ class EgressPort:
     # -- delivery ------------------------------------------------------------
     def pop_due(self, now: int):
         dq = self.delivery
+        fab = self.fabric
         while dq and dq[0][0] <= now:
+            fab._in_flight -= 1
             yield dq.popleft()[1]
 
     def drop_to(self, gid: int) -> int:
@@ -822,8 +891,11 @@ class EgressPort:
                 for pkt in q:
                     if pkt.dest_gid == gid:
                         dropped += 1
+                        n = pkt.nbytes()
                         cq.backlog_packets -= 1
-                        cq.backlog_bytes -= pkt.nbytes()
+                        cq.backlog_bytes -= n
+                        self.backlog_packets -= 1
+                        self.backlog_bytes -= n
                     else:
                         keep.append(pkt)
                 cq.tenants[t] = keep
@@ -834,6 +906,7 @@ class EgressPort:
             else:
                 keep.append((at, pkt))
         self.delivery = keep
+        self.fabric._in_flight -= dropped
         fl = self.flows.pop(gid, None)
         if fl is not None:
             fl.queued_bytes = 0
@@ -906,6 +979,10 @@ class IngressPort:
         self.qos = qos
         self.rx_bytes = 0               # processed (handed to the device)
         self.rx_packets = 0
+        # queue backlog, maintained incrementally (mirrors EgressPort)
+        self.backlog_bytes = 0
+        self.backlog_packets = 0
+        self._class_list: List[_ClassQueue] = []
         self._window: Deque[Tuple[int, int]] = deque()  # (step, nbytes)
         self._win_bytes = 0
         # ECN: marking rng distinct from the egress port's stream
@@ -937,8 +1014,13 @@ class IngressPort:
                             for n, w in weights.items()}
         else:
             self.classes = {CLASS_APP: _ClassQueue(CLASS_APP, 1.0)}
+        self._class_list = list(self.classes.values())
         for pkt in queued:
             self._push(pkt)
+        self.backlog_bytes = sum(cq.backlog_bytes
+                                 for cq in self._class_list)
+        self.backlog_packets = sum(cq.backlog_packets
+                                   for cq in self._class_list)
 
     def reconfigure(self, cfg: Optional[IngressConfig] = None,
                     qos: Optional[QoSConfig] = None):
@@ -950,7 +1032,10 @@ class IngressPort:
         if self.cfg.unlimited:          # pass-through: flush the backlog
             for cq in self.classes.values():
                 for pkt in cq.drain_all():
+                    self.fabric._in_flight -= 1
                     self._deliver(pkt)
+            self.backlog_bytes = 0
+            self.backlog_packets = 0
             self._inq.clear()
             self._run.clear()
 
@@ -959,6 +1044,8 @@ class IngressPort:
         tenant = (pkt.tenant if self.qos.enabled and pkt.tenant is not None
                   else UNATTRIBUTED)
         self.classes[cls].push(tenant, pkt)
+        self.backlog_bytes += pkt.nbytes()
+        self.backlog_packets += 1
 
     # -- capacity ------------------------------------------------------------
     @property
@@ -966,14 +1053,6 @@ class IngressPort:
         if self.cfg.unlimited:
             return float("inf")
         return self.cfg.rx_bandwidth_Bps * self.fabric.step_s()
-
-    @property
-    def backlog_bytes(self) -> int:
-        return sum(cq.backlog_bytes for cq in self.classes.values())
-
-    @property
-    def backlog_packets(self) -> int:
-        return sum(cq.backlog_packets for cq in self.classes.values())
 
     def in_flight(self) -> int:
         return self.backlog_packets
@@ -1000,34 +1079,49 @@ class IngressPort:
 
     # -- arrival (wire latency expired) --------------------------------------
     def enqueue(self, pkt: Packet, now: int):
-        n = pkt.nbytes()
-        self._window.append((now, n))
+        n = 64 + len(pkt.payload)       # pkt.nbytes(), inlined (hot)
+        # utilization-window upkeep with _trim(now) inlined (per packet)
+        w = self._window
+        w.append((now, n))
         self._win_bytes += n
-        self._trim(now)
+        cut = now - self.fabric.utilization_window
+        while w[0][0] <= cut:
+            self._win_bytes -= w.popleft()[1]
+        mw = self._mark_window
+        while mw and mw[0][0] <= cut:
+            self._mark_bytes -= mw.popleft()[1]
         if self.cfg.unlimited:
             self._deliver(pkt)          # free receive processing (PR 3)
             return
-        if pkt.op in CTRL_OPS:
+        if pkt.op.is_ctrl:
             self._deliver(pkt)          # control never queues behind data
             return
+        fab = self.fabric
         key = (pkt.src_gid, pkt.src_qpn)
-        epsn = self._qp_epsn(pkt)
+        # _qp_epsn, inlined (one lookup per admitted data packet)
+        if pkt.op is Op.READ_RESP:
+            epsn = None
+        else:
+            dev = fab._devices.get(self.gid)    # fab.device(), inlined
+            qps = getattr(dev, "qps", None)     # bare test doubles
+            qp = qps.get(pkt.dest_qpn) if qps is not None else None
+            epsn = None if qp is None else qp.epsn
         if epsn is not None:            # order is knowable for this flow
-            if pkt.psn < epsn and pkt.op in RNR_OPS:
+            if pkt.psn < epsn and pkt.op.is_rnr:
                 # stale duplicate: line-rate dup-detect in the BTH
                 # pipeline answers the cumulative re-ACK itself — the
                 # responder already has this payload, so spending queue
                 # space and receive-processing on it buys nothing
                 # (matches the responder's own psn<epsn re-ACK path)
-                self.fabric.metrics.inc("rx_dup_acked", gid=self.gid)
-                trc = self.fabric.tracer
+                fab.metrics.inc("rx_dup_acked", gid=self.gid)
+                trc = fab.tracer
                 if trc is not None:
                     trc.ingress_drop(now, pkt, self.gid, "dup_acked")
-                self.fabric.send(Packet(op=Op.ACK, src_gid=pkt.dest_gid,
-                                        src_qpn=pkt.dest_qpn,
-                                        dest_gid=pkt.src_gid,
-                                        dest_qpn=pkt.src_qpn,
-                                        psn=epsn - 1))
+                fab.send(Packet(op=Op.ACK, src_gid=pkt.dest_gid,
+                                src_qpn=pkt.dest_qpn,
+                                dest_gid=pkt.src_gid,
+                                dest_qpn=pkt.src_qpn,
+                                psn=epsn - 1))
                 return
             run = self._run.get(key)
             exp = epsn if run is None else max(epsn, run)
@@ -1041,8 +1135,8 @@ class IngressPort:
             if run is not None and epsn <= pkt.psn < run:
                 # duplicate of a packet still sitting in this queue: it
                 # will be processed from here, a second copy adds nothing
-                self.fabric.metrics.inc("rx_dup_dropped", gid=self.gid)
-                trc = self.fabric.tracer
+                fab.metrics.inc("rx_dup_dropped", gid=self.gid)
+                trc = fab.tracer
                 if trc is not None:
                     trc.ingress_drop(now, pkt, self.gid, "dup_queued")
                 return
@@ -1052,18 +1146,19 @@ class IngressPort:
         if epsn is not None and pkt.psn == exp:
             self._run[key] = exp + 1
         self._inq[key] = self._inq.get(key, 0) + 1
-        self.fabric.metrics.inc("rx_queued", gid=self.gid)
+        fab.metrics.inc("rx_queued", gid=self.gid)
+        fab._in_flight += 1
         self._push(pkt)
-        trc = self.fabric.tracer
+        trc = fab.tracer
         if trc is not None:
             trc.ingress_queue(now, pkt, self.gid, self.backlog_bytes)
-        ecn = self.fabric.ecn
+        ecn = fab.ecn
         if ecn.enabled and ecn.mark_ingress:
             # RED against the bounded queue itself: marking starts at
             # ~kmin occupancy, well before overflow draws an RNR NAK —
             # the DCQCN ordering (slow down first, drop last)
             occ = self.backlog_bytes / self.cfg.queue_bytes
-            if maybe_mark(self.fabric, self._ecn_rng, pkt, occ, self.gid,
+            if maybe_mark(fab, self._ecn_rng, pkt, occ, self.gid,
                           where="ingress"):
                 self._mark_window.append((now, n))
                 self._mark_bytes += n
@@ -1086,7 +1181,7 @@ class IngressPort:
             trc.ingress_drop(now, pkt, self.gid,
                              "out_of_order" if nak_psn is not None
                              else "overflow")
-        if self.cfg.rnr_nak and pkt.op in RNR_OPS:
+        if self.cfg.rnr_nak and pkt.op.is_rnr:
             self._emit_rnr_nak(pkt, now, psn=nak_psn)
 
     def _note_dequeue(self, pkt: Packet):
@@ -1126,16 +1221,17 @@ class IngressPort:
 
     # -- processing ----------------------------------------------------------
     def _deliver(self, pkt: Packet):
-        self.rx_bytes += pkt.nbytes()
+        self.rx_bytes += 64 + len(pkt.payload)  # pkt.nbytes(), inlined
         self.rx_packets += 1
-        dev = self.fabric.device(pkt.dest_gid)
+        fab = self.fabric
+        dev = fab._devices.get(pkt.dest_gid)    # fab.device(), inlined
         if dev is None:
             # [MIGR] old address
-            self.fabric.metrics.inc("unroutable", gid=self.gid)
+            fab.metrics.inc("unroutable", gid=self.gid)
             return
-        trc = self.fabric.tracer
+        trc = fab.tracer
         if trc is not None:
-            trc.ingress_deliver(self.fabric.now, pkt, self.gid)
+            trc.ingress_deliver(fab.now, pkt, self.gid)
         dev.receive(pkt)
 
     def service(self, now: int):
@@ -1145,7 +1241,38 @@ class IngressPort:
         first)."""
         if not self.backlog_packets or self.cfg.unlimited:
             return
-        _drr_spend(list(self.classes.values()), self.rx_bytes_per_step,
+        if not self.qos.enabled:
+            # single-FIFO degenerate mode, mirroring EgressPort.service:
+            # one class, one tenant, eligibility is just backlog — the
+            # DRR loop reduces to spend-then-drain with the same floats
+            budget = self.rx_bytes_per_step
+            if budget <= 1e-9:
+                return
+            cq = self._class_list[0]
+            # local deficit accumulator, as in EgressPort.service: same
+            # float op order, one attribute write instead of several
+            d = cq.deficit + budget
+            q = cq.tenants.get(UNATTRIBUTED)
+            while q:
+                n = 64 + len(q[0].payload)  # pkt.nbytes(), inlined
+                if d < n:
+                    break
+                pkt = q.popleft()
+                cq.backlog_packets -= 1
+                cq.backlog_bytes -= n
+                self.backlog_packets -= 1
+                self.backlog_bytes -= n
+                self.fabric._in_flight -= 1
+                d -= n
+                cq.tx_bytes += n
+                cq.tx_packets += 1
+                self._note_dequeue(pkt)
+                self._deliver(pkt)
+            if d > 0 and not cq.backlog_packets:
+                d = 0.0             # reclaimed, then discarded unused
+            cq.deficit = d
+            return
+        _drr_spend(self._class_list, self.rx_bytes_per_step,
                    lambda cq: cq.backlog_packets > 0, self._drain)
 
     def _drain(self, cq: _ClassQueue) -> int:
@@ -1165,6 +1292,9 @@ class IngressPort:
                 pkt = q.popleft()
                 cq.backlog_packets -= 1
                 cq.backlog_bytes -= n
+                self.backlog_packets -= 1
+                self.backlog_bytes -= n
+                self.fabric._in_flight -= 1
                 cq.deficit -= n
                 cq.tx_bytes += n
                 cq.tx_packets += 1
@@ -1180,6 +1310,9 @@ class IngressPort:
         dropped = 0
         for cq in self.classes.values():
             dropped += len(cq.drain_all())
+        self.backlog_bytes = 0
+        self.backlog_packets = 0
+        self.fabric._in_flight -= dropped
         self._inq.clear()
         self._run.clear()
         return dropped

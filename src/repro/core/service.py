@@ -127,8 +127,6 @@ class ServiceChannel:
         elapsed pump steps ARE the transfer time (``fabric.now`` delta)."""
         fabric = self.device.fabric
         xid = self.post(peer_gid, op, meta, data)
-        if tick is None:
-            tick = fabric.pump
         if max_steps is None:
             # generous: 20x the no-contention serialisation time at the
             # slower end of the path — a bounded receiver ingress rate
@@ -141,11 +139,20 @@ class ServiceChannel:
                 per_step = min(per_step, rx_cap * fabric.step_s())
             ser = (len(data) + 4096) / max(per_step, 1e-9)
             max_steps = int(20 * ser) + 100_000
-        for _ in range(max_steps):
-            if xid in self.acked:
+        if tick is None:
+            # let the event scheduler skip the dead air between wire
+            # events (RTO waits, latency pipes) instead of stepping it
+            if fabric.pump_until(lambda: xid in self.acked, max_steps):
                 self.acked.discard(xid)
                 return xid
-            tick()
+        else:
+            # caller-supplied tick (containers stepping alongside): the
+            # per-step loop is the contract
+            for _ in range(max_steps):
+                if xid in self.acked:
+                    self.acked.discard(xid)
+                    return xid
+                tick()
         # the stream is hopeless: abort it. Leaving the WQE in place would
         # retransmit the image forever (the device never goes idle) and a
         # late delivery would orphan the blob in the receiver's inbox.

@@ -9,9 +9,12 @@ actually migrating — mirroring the paper's minimal-changes claim, which
 """
 from __future__ import annotations
 
-from repro.core.packets import CTRL_OPS, MIG_OPS, NakCode, Op, Packet
-from repro.core.qos import CLASS_APP, CongestionControl, classify
+from repro.core.packets import NakCode, Op, Packet
+from repro.core.qos import (CLASS_APP, MIN_BUCKET_BYTES, CongestionControl,
+                            classify)
 from repro.core.states import QPState, can_receive, can_send
+
+_FAR = float("inf")
 
 
 def _wc(*args, **kw):
@@ -36,7 +39,7 @@ def _retx(qp, pkt: Packet, reason: str = "rto"):
     pkt.dest_gid, pkt.dest_qpn = qp.dest_gid, qp.dest_qpn        # [MIGR]
     # ECN codepoints are per-transmission: a CE mark belongs to the
     # previous traversal's queues, and ECT tracks the current config
-    pkt.ect = qp.device.fabric.ecn.enabled and pkt.op not in CTRL_OPS
+    pkt.ect = qp.device.fabric.ecn.enabled and not pkt.op.is_ctrl
     pkt.ce = False
     # DCQCN paces the QP's *entire* egress, retransmissions included —
     # but go-back-N must stay atomic (a partially retransmitted window
@@ -59,13 +62,13 @@ def _retx(qp, pkt: Packet, reason: str = "rto"):
 
 
 def _mk(qp, op, **kw) -> Packet:
-    return Packet(op=op, src_gid=qp.device.gid, src_qpn=qp.qpn,
+    dev = qp.device
+    return Packet(op=op, src_gid=dev.gid, src_qpn=qp.qpn,
                   dest_gid=qp.dest_gid, dest_qpn=qp.dest_qpn,
                   tenant=qp.tenant,
                   # ECT on data ops only: control must never be marked
                   # (a CE'd ACK could only ask the victim to slow down)
-                  ect=(qp.device.fabric.ecn.enabled
-                       and op not in CTRL_OPS),
+                  ect=(dev.fabric.ecn.enabled and not op.is_ctrl),
                   **kw)
 
 
@@ -79,12 +82,6 @@ def _ensure_cc(qp) -> "CongestionControl":
         qp.cc = CongestionControl(fab.ecn, fab.bytes_per_step, fab.now,
                                   fab.step_s())
     return qp.cc
-
-
-def _track_send(qp, pkt: Packet):
-    """First transmission of a new PSN: record its send step so the ACK
-    can produce an RTT sample (RFC 6298 §3)."""
-    qp._send_time[pkt.psn] = qp.device.fabric.now
 
 
 # ---------------------------------------------------------------------------
@@ -102,11 +99,12 @@ def requester(qp):
     whatever this pipeline admits. Retransmissions bypass (3)/(4): they
     re-offer bytes the window already admitted, and their pacing is the
     RTO/min_rnr_timer backoff itself."""
-    now = qp.device.fabric.now
-    if qp.cc is not None and qp.device.fabric.ecn.enabled:
+    fab = qp.device.fabric
+    now = fab.now
+    if qp.cc is not None and fab.ecn.enabled:
         # run the DCQCN timers even while parked or blocked: rate
         # recovery is wall-clock (step-clock) driven, not send-driven
-        qp.cc.advance(now, qp.device.fabric.bytes_per_step)
+        qp.cc.advance(now, fab.bytes_per_step)
     if not _migration_gate(qp, now):
         return
     if not _recovery_gate(qp, now):
@@ -187,11 +185,14 @@ def _admit_fresh(qp, now):
     fabric so an over-limit QP leaves its WQE queued (no duplicate
     state to unwind), and the egress port's tenant bucket still applies
     downstream."""
-    budget = qp.WINDOW - len(qp.inflight)
+    inflight = qp.inflight
+    budget = qp.WINDOW - len(inflight)
     if budget > 0 and (qp.sq or qp.cur_wqe is not None):
         cc = _ensure_cc(qp)
     else:
         cc = None
+    fab_send = qp.device.fabric.send
+    send_time = qp._send_time
     while budget > 0:
         if qp.cur_wqe is None:
             if not qp.sq:
@@ -212,9 +213,9 @@ def _admit_fresh(qp, now):
                       rkey=wr.rkey, length=wr.sge.length, wr_id=wr.wr_id)
             wr.last_psn = qp.sq_psn
             qp.sq_psn += 1
-            qp.inflight.append(pkt)
-            _track_send(qp, pkt)
-            _emit(qp, pkt)
+            inflight.append(pkt)
+            send_time[pkt.psn] = now    # RTT stamp (RFC 6298 §3)
+            fab_send(pkt)               # _emit, inlined
             if cc is not None:
                 cc.on_send(n)
             qp.pending_comp.append((wr.last_psn, wr.wr_id, "READ",
@@ -235,9 +236,9 @@ def _admit_fresh(qp, now):
         wr.sent += chunk
         wr.last_psn = qp.sq_psn
         qp.sq_psn += 1
-        qp.inflight.append(pkt)
-        _track_send(qp, pkt)
-        _emit(qp, pkt)
+        inflight.append(pkt)
+        send_time[pkt.psn] = now        # RTT stamp (RFC 6298 §3)
+        fab_send(pkt)                   # _emit, inlined
         if cc is not None:
             cc.on_send(64 + chunk)
         budget -= 1
@@ -245,6 +246,101 @@ def _admit_fresh(qp, now):
             qp.pending_comp.append((wr.last_psn, wr.wr_id,
                                     wr.opcode.value, wr.sge.length))
             qp.cur_wqe = None
+
+
+# ---------------------------------------------------------------------------
+# Wake calculator: the step at which this QP's task triple must run again
+# ---------------------------------------------------------------------------
+
+
+def _head_need(qp):
+    """Pacing-bucket charge of the next fresh packet ``_admit_fresh``
+    will offer — mirrors its charging rules exactly (READ by elicited
+    response size; else header + next chunk, honoring a restored WR's
+    partial ``sent`` cursor)."""
+    wr = qp.cur_wqe if qp.cur_wqe is not None else qp.sq[0]
+    if wr.opcode == Op.READ_REQ:
+        return 64 + 64 + wr.sge.length
+    return 64 + min(qp.MTU, wr.sge.length - wr.sent)
+
+
+def _pacing_wake(qp, cc, now):
+    """Earliest step at which the DCQCN bucket could admit the head
+    packet, from the refill arithmetic ``advance`` will replay (rate
+    ``rc`` per step, capped). Deliberately rounds *down* (plus a one-
+    step safety margin against float drift): a spurious early wake
+    re-runs admission and re-parks; a late one would stall the flow."""
+    cap = cc.cfg.burst_bytes
+    if cap < MIN_BUCKET_BYTES:
+        cap = MIN_BUCKET_BYTES
+    need = _head_need(qp)
+    if need > cap:
+        need = cap
+    # materialise the bucket as advance(now) would leave it: rc is
+    # constant over the stale interval (any rate event would have run
+    # the triple and re-stamped ``last``)
+    tokens = cc.tokens + (now - cc.last) * cc.rc
+    if tokens > cap:
+        tokens = cap
+    if tokens >= need or cc.rc <= 0:
+        return now + 1
+    k = int((need - tokens) / cc.rc) - 1
+    if k < 1:
+        k = 1
+    return now + k
+
+
+def next_wake(qp, now):
+    """Earliest future step at which running this QP's triple could do
+    anything — the event scheduler parks the QP until then. Mirrors the
+    requester's gate order exactly; every estimate rounds down and the
+    caller clamps to ``now + 1``, so errors are only ever *early*
+    (trajectory-safe no-op runs), never late.
+
+    DCQCN alpha/increase boundaries are folded in unconditionally
+    (before any state gate): the per-step model ran ``cc.advance`` every
+    step even while PAUSED/STOPPED, and end-of-run reads (``fig_ecn``'s
+    ``cc.rc``, ``cc.dump``) must observe rate state materialised through
+    every boundary, not just through the last packet event."""
+    if qp.rx:
+        return now + 1          # queued packets: responder/completer work
+    fab = qp.device.fabric
+    wake = _FAR
+    cc = qp.cc
+    if cc is not None and fab.ecn.enabled:
+        b = cc.alpha_last + cc.cfg.alpha_timer
+        if b < wake:
+            wake = b
+        b = cc.incr_last + cc.cfg.increase_timer
+        if b < wake:
+            wake = b
+    st = qp.state
+    if st == QPState.PAUSED or st == QPState.STOPPED:
+        return wake             # unparked by packets/modify, not time
+    if qp.resume_pending and st == QPState.RTS:
+        b = qp.last_resume_tx + qp.RETRANS_TIMEOUT
+        return b if b < wake else wake
+    if not can_send(st):
+        return wake
+    if now < qp.rnr_wait_until:
+        b = qp.rnr_wait_until
+        return b if b < wake else wake
+    if qp.rnr_resend_pending:
+        return now + 1          # deferral re-evaluated every step
+    if qp.inflight:
+        # retransmit fires when now - last_progress > rto (rto is a
+        # float); once due but held by pacing debt, the clamp downstream
+        # yields every-step wakes until the debt repays
+        b = int(qp.last_progress + qp.rto) + 1
+        if b < wake:
+            wake = b
+    if (qp.sq or qp.cur_wqe is not None) and len(qp.inflight) < qp.WINDOW:
+        if cc is None or not fab.ecn.enabled:
+            return now + 1      # sendable head, no pacing: run now
+        b = _pacing_wake(qp, cc, now)
+        if b < wake:
+            wake = b
+    return wake
 
 
 # ---------------------------------------------------------------------------
@@ -275,14 +371,22 @@ def _note_congestion(qp, pkt: Packet):
 
 
 def responder(qp):
-    n = len(qp.rx)
+    rx = qp.rx
+    n = len(rx)
+    if not n:
+        return
+    stopped = QPState.STOPPED
+    dev = qp.device
+    fab_send = dev.fabric.send
     for _ in range(n):
-        pkt = qp.rx.popleft()
-        if pkt.op in (Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK,
-                      Op.READ_RESP, Op.CNP):
-            qp.rx.append(pkt)         # completer-class packet; requeue
+        pkt = rx.popleft()
+        op = pkt.op
+        if op.is_completer:
+            rx.append(pkt)            # completer-class packet; requeue
             continue
-        if qp.state == QPState.STOPPED:                          # [MIGR]
+        # qp.state re-read per packet: a service message mid-loop can
+        # transition the QP (migration stop/restore)
+        if qp.state == stopped:                                  # [MIGR]
             _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,               # [MIGR]
                           nak_code=NakCode.STOPPED))             # [MIGR]
             continue                                             # [MIGR]
@@ -312,7 +416,7 @@ def responder(qp):
                 _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
                               nak_code=NakCode.PSN_SEQ_ERR))
             continue
-        if pkt.op in MIG_OPS:
+        if op.is_mig:
             # service-channel message (kernel QPs only): same PSN/ACK
             # discipline as SEND, but the payload reassembles into the
             # device's service inbox instead of consuming an RR.  # [MIGR]
@@ -321,13 +425,16 @@ def responder(qp):
             qp.svc_assembly += pkt.payload
             qp.epsn += 1
             qp.last_nak_epsn = -1
-            _emit(qp, _mk(qp, Op.ACK, psn=pkt.psn))
+            # _mk(qp, Op.ACK, psn=pkt.psn), spelled out: one ACK per
+            # delivered data packet, and ect is always False on control
+            fab_send(Packet(Op.ACK, dev.gid, qp.qpn, qp.dest_gid,
+                            qp.dest_qpn, pkt.psn, tenant=qp.tenant))
             if pkt.last:
                 qp.device.on_service_message(pkt.op,
                                              bytes(qp.svc_assembly),
                                              pkt.src_gid)
                 qp.svc_assembly = bytearray()
-        elif pkt.op == Op.SEND:
+        elif op is Op.SEND:
             if pkt.first and qp.cur_rr is None:
                 qp.cur_rr = qp.next_rr()
             rr = qp.cur_rr
@@ -354,12 +461,15 @@ def responder(qp):
             rr.received += len(pkt.payload)
             qp.epsn += 1
             qp.last_nak_epsn = -1
-            _emit(qp, _mk(qp, Op.ACK, psn=pkt.psn))
+            # _mk(qp, Op.ACK, psn=pkt.psn), spelled out: one ACK per
+            # delivered data packet, and ect is always False on control
+            fab_send(Packet(Op.ACK, dev.gid, qp.qpn, qp.dest_gid,
+                            qp.dest_qpn, pkt.psn, tenant=qp.tenant))
             if pkt.last:
                 qp.recv_cq.push(_wc(rr.wr_id, _success(), "RECV",
                                     rr.received, qp.qpn))
                 qp.cur_rr = None
-        elif pkt.op == Op.WRITE:
+        elif op is Op.WRITE:
             mr = qp.device.rkey_lookup(pkt.rkey)
             if mr is None:
                 _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
@@ -371,8 +481,11 @@ def responder(qp):
             mr.write(pkt.raddr, pkt.payload)
             qp.epsn += 1
             qp.last_nak_epsn = -1
-            _emit(qp, _mk(qp, Op.ACK, psn=pkt.psn))
-        elif pkt.op == Op.READ_REQ:
+            # _mk(qp, Op.ACK, psn=pkt.psn), spelled out: one ACK per
+            # delivered data packet, and ect is always False on control
+            fab_send(Packet(Op.ACK, dev.gid, qp.qpn, qp.dest_gid,
+                            qp.dest_qpn, pkt.psn, tenant=qp.tenant))
+        elif op is Op.READ_REQ:
             mr = qp.device.rkey_lookup(pkt.rkey)
             if mr is None:
                 _emit(qp, _mk(qp, Op.NAK, psn=qp.epsn,
@@ -499,12 +612,14 @@ def _ack_up_to(qp, psn: int):
     now = qp.device.fabric.now
     # RTT sample from the cumulative-ACK edge (Karn: only if that PSN was
     # never retransmitted), BEFORE the per-PSN bookkeeping is released
-    t_sent = qp._send_time.get(psn)
+    send_time = qp._send_time
+    t_sent = send_time.get(psn)
     if t_sent is not None:
         _rtt_sample(qp, now - t_sent)
-    while qp.inflight and qp.inflight[0].psn <= psn:
-        p = qp.inflight.popleft()
-        qp._send_time.pop(p.psn, None)
+    inflight = qp.inflight
+    while inflight and inflight[0].psn <= psn:
+        p = inflight.popleft()
+        send_time.pop(p.psn, None)
     if psn >= qp.una:
         qp.una = psn + 1
         qp.last_progress = now
@@ -521,18 +636,22 @@ def _ack_up_to(qp, psn: int):
 
 
 def completer(qp):
-    n = len(qp.rx)
+    rx = qp.rx
+    n = len(rx)
+    if not n:
+        return
+    op_ack = Op.ACK
     for _ in range(n):
-        pkt = qp.rx.popleft()
-        if pkt.op not in (Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK,
-                          Op.READ_RESP, Op.CNP):
-            qp.rx.append(pkt)
+        pkt = rx.popleft()
+        op = pkt.op
+        if not op.is_completer:
+            rx.append(pkt)
             continue
-        if pkt.op == Op.ACK:
+        if op is op_ack:
             _ack_up_to(qp, pkt.psn)
-        elif pkt.op == Op.CNP:                                   # [ECN]
+        elif op is Op.CNP:                                       # [ECN]
             _handle_cnp(qp, pkt)                                 # [ECN]
-        elif pkt.op == Op.READ_RESP:
+        elif op is Op.READ_RESP:
             if pkt.ce and pkt.ect:                               # [ECN]
                 # a marked response: WE are the congestion source (our
                 # READ_REQs elicit these bytes, and their admission is
@@ -557,7 +676,7 @@ def completer(qp):
                                         cc.rt, cc.alpha, "read")
             # single-MTU READ: find the pending read WR, deliver payload
             _ack_up_to(qp, pkt.psn)
-        elif pkt.op == Op.NAK:
+        elif op is Op.NAK:
             if pkt.nak_code == NakCode.STOPPED:                  # [MIGR]
                 if qp.state == QPState.RTS:                      # [MIGR]
                     qp.modify(QPState.PAUSED, system=True)       # [MIGR]
@@ -590,7 +709,7 @@ def completer(qp):
                 if p.psn >= pkt.psn:
                     _retx(qp, p, "nak")
             qp.last_progress = qp.device.fabric.now
-        elif pkt.op == Op.RESUME:                                # [MIGR]
+        elif op is Op.RESUME:                                    # [MIGR]
             # Partner migrated: learn its new address (the source of the
             # resume), leave PAUSED, ack the last packet we received.
             qp.dest_gid = pkt.src_gid                            # [MIGR]
@@ -598,7 +717,7 @@ def completer(qp):
             if qp.state == QPState.PAUSED:                       # [MIGR]
                 qp.modify(QPState.RTS, system=True)              # [MIGR]
             _emit(qp, _mk(qp, Op.RESUME_ACK, psn=qp.epsn - 1))   # [MIGR]
-        elif pkt.op == Op.RESUME_ACK:                            # [MIGR]
+        elif op is Op.RESUME_ACK:                                # [MIGR]
             qp.resume_pending = False                            # [MIGR]
             # pre-migration send stamps span the whole pause — not a
             # round trip; drop them so the cumulative ack below cannot

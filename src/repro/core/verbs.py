@@ -20,6 +20,8 @@ from repro.core.states import QPState, can_send, check_transition
 
 PAGE_SIZE = 4096        # dirty-tracking / demand-paging granularity # [MIGR]
 
+_WAKE_FAR = float("inf")    # parked: no armed deadline
+
 
 class CQOverrunError(RuntimeError):
     """A completion was pushed into a full CQ. The wire already committed
@@ -37,7 +39,7 @@ class WCStatus(enum.Enum):
     RNR_RETRY_EXC_ERR = "RNR_RETRY_EXC_ERR"
 
 
-@dataclass
+@dataclass(slots=True)
 class WorkCompletion:
     wr_id: int
     status: WCStatus
@@ -46,7 +48,7 @@ class WorkCompletion:
     qpn: int = 0
 
 
-@dataclass
+@dataclass(slots=True)
 class AsyncEvent:
     """ibv_get_async_event-style affiliated event, delivered to the
     owning context's event queue (``Context.poll_async``)."""
@@ -54,14 +56,14 @@ class AsyncEvent:
     srqn: Optional[int] = None
 
 
-@dataclass
+@dataclass(slots=True)
 class SGE:
     mr: "MemoryRegion"
     offset: int
     length: int
 
 
-@dataclass
+@dataclass(slots=True)
 class SendWR:
     wr_id: int
     opcode: Op                      # SEND / WRITE / READ_REQ
@@ -74,7 +76,7 @@ class SendWR:
     last_psn: int = -1
 
 
-@dataclass
+@dataclass(slots=True)
 class RecvWR:
     wr_id: int
     sge: SGE
@@ -148,9 +150,12 @@ class CompletionQueue:
         self.tail += 1
 
     def poll(self, n: int = 1) -> List[WorkCompletion]:
+        ring = self.ring
+        if not ring:
+            return []               # the common idle-app poll
         out = []
-        while self.ring and len(out) < n:
-            out.append(self.ring.popleft())
+        while ring and len(out) < n:
+            out.append(ring.popleft())
             self.head += 1
         return out
 
@@ -284,6 +289,11 @@ class QueuePair:
         self.resume_pending = False     # REFILL queues a resume  # [MIGR]
         self.last_resume_tx = -10**9    # resume retry timer      # [MIGR]
         self.svc_assembly = bytearray() # service-msg reassembly  # [MIGR]
+        # event scheduler: earliest step at which the task triple could
+        # do work (repro.core.tasks.next_wake). 0 = run at next pump;
+        # refreshed after every run and forced down by the wake hooks
+        # (receive/post_send/modify) — never allowed to be late.
+        self._wake = 0
 
     # -- user API --------------------------------------------------------------
     def modify(self, new_state: QPState, *, dest_gid: int = None,
@@ -302,6 +312,7 @@ class QueuePair:
             self.una = sq_psn
         old_state = self.state
         self.state = new_state
+        self.device.wake(self)      # gates changed: re-evaluate next run
         if old_state != new_state:
             trc = self.device.fabric.tracer
             if trc is not None:
@@ -312,6 +323,7 @@ class QueuePair:
         if self.state not in (QPState.RTS, QPState.PAUSED):
             raise RuntimeError(f"post_send in {self.state}")
         self.sq.append(wr)
+        self.device.wake(self)
 
     def post_recv(self, wr: RecvWR):
         self.rq.append(wr)
@@ -411,6 +423,13 @@ class RdmaDevice:
         # rkey -> MR index: every inbound RDMA WRITE/READ resolves its rkey
         # here, so lookup must be O(1), not a scan over contexts × MRs.
         self.mr_by_rkey: Dict[int, MemoryRegion] = {}
+        # event scheduler: earliest wake over this device's QPs, the
+        # cached QP iteration snapshot, and the memoised idle() answer
+        self._wake = 0
+        self._qp_list: List[QueuePair] = []
+        self._qps_dirty = True
+        self._idle_dirty = True
+        self._idle_cache = True
 
     # -- numbering ---------------------------------------------------------------
     def next_pdn(self):
@@ -476,6 +495,8 @@ class RdmaDevice:
         qp = QueuePair(pd, qpn, send_cq, recv_cq, srq)
         self.qps[qpn] = qp
         pd.ctx.qps.append(qp)
+        self._qps_dirty = True
+        self.wake(qp)
         return qp
 
     def destroy_qp(self, qpn: int):
@@ -485,6 +506,8 @@ class RdmaDevice:
                 qp.ctx.qps.remove(qp)
             except ValueError:
                 pass
+            self._qps_dirty = True
+            self._idle_dirty = True
 
     # -- service channel (kernel migration data plane) ----------------- # [MIGR]
     @property
@@ -500,6 +523,19 @@ class RdmaDevice:
         self.service.on_message(op, blob, src_gid)
 
     # -- fabric interface ------------------------------------------------------------
+    def wake(self, qp: Optional[QueuePair] = None):
+        """Wake hook: an external event (packet arrival, posted work,
+        state change, QP creation) may have unparked a QP — pull its
+        wake (and the device's) down to ``now`` so the next pump step
+        runs the triple. Spurious wakes are trajectory-safe no-ops;
+        the one invariant is that no unparking event skips this."""
+        now = self.fabric.now
+        if qp is not None and qp._wake > now:
+            qp._wake = now
+        if self._wake > now:
+            self._wake = now
+        self._idle_dirty = True
+
     def receive(self, pkt: Packet):
         qp = self.qps.get(pkt.dest_qpn)
         if qp is None:
@@ -508,17 +544,75 @@ class RdmaDevice:
             self.fabric.metrics.inc("unknown_qpn", gid=self.gid)
             return
         qp.rx.append(pkt)
+        now = self.fabric.now       # wake(), inlined: this path is hot
+        if qp._wake > now:
+            qp._wake = now
+        if self._wake > now:
+            self._wake = now
+        self._idle_dirty = True
 
     def run_tasks(self):
-        for qp in list(self.qps.values()):
-            qptasks.responder(qp)
-            qptasks.completer(qp)
-            qptasks.requester(qp)
-        if self._service is not None:
-            self._service.reap()
+        fab = self.fabric
+        if not fab.event_driven:
+            # legacy exhaustive scan (the determinism-suite reference)
+            for qp in list(self.qps.values()):
+                qptasks.responder(qp)
+                qptasks.completer(qp)
+                qptasks.requester(qp)
+            if self._service is not None:
+                self._service.reap()
+            return
+        now = fab.now
+        if self._qps_dirty:
+            self._qp_list = list(self.qps.values())
+            self._qps_dirty = False
+        ecn_on = fab.ecn.enabled
+        bps = fab.bytes_per_step
+        nxt = _WAKE_FAR
+        ran = False
+        # park tentatively at +inf; wake hooks firing mid-loop (service
+        # rendezvous creating QPs, handlers posting sends) pull this
+        # back to ``now`` and must survive the final min below
+        self._wake = _WAKE_FAR
+        try:
+            for qp in self._qp_list:
+                w = qp._wake
+                if w > now:
+                    if w < nxt:
+                        nxt = w
+                    continue
+                ran = True
+                cc = qp.cc
+                if cc is not None and ecn_on and cc.last < now - 1:
+                    # parked QP: replay the DCQCN per-step clock up to
+                    # the boundary the exhaustive scan would have
+                    # reached *entering* this step — the completer
+                    # charges retransmit debt against pre-refill tokens,
+                    # so the catch-up cannot wait for the requester
+                    cc.advance(now - 1, bps)
+                qptasks.responder(qp)
+                qptasks.completer(qp)
+                qptasks.requester(qp)
+                w = qptasks.next_wake(qp, now)
+                qp._wake = w
+                if w < nxt:
+                    nxt = w
+        except BaseException:
+            self._wake = now        # defensive: retry next step
+            raise
+        if nxt < self._wake:
+            self._wake = nxt
+        if ran:
+            self._idle_dirty = True
+        svc = self._service
+        if svc is not None and svc.cq.ring:
+            svc.reap()
 
     def idle(self) -> bool:
-        return all(qp.idle() for qp in self.qps.values())
+        if self._idle_dirty:
+            self._idle_cache = all(qp.idle() for qp in self.qps.values())
+            self._idle_dirty = False
+        return self._idle_cache
 
     def rkey_lookup(self, rkey: int):
         return self.mr_by_rkey.get(rkey)

@@ -27,6 +27,7 @@ class SendBwApp:
     def __init__(self, msg_size: int = 4096, window: int = 16,
                  n_qps: int = 1, buf_size: Optional[int] = None):
         self.msg_size = msg_size
+        self._payload = b"x" * msg_size     # built once, sent many times
         self.window = window
         self.n_qps = n_qps
         self.buf_size = buf_size or max(msg_size, 4096)
@@ -42,7 +43,9 @@ class SendBwApp:
         self.container = container
         self.is_sender = sender
         for _ in range(self.n_qps):
-            self.channels.append(Channel(container.ctx, self.buf_size))
+            ch = Channel(container.ctx, self.buf_size)
+            ch._posted = 0              # receiver-side posted-RR count
+            self.channels.append(ch)
 
     def rebind(self, container, session):
         for ch in self.channels:
@@ -52,7 +55,7 @@ class SendBwApp:
         for ch in self.channels:
             if self.is_sender:
                 while self.inflight < self.window:
-                    ch.post_send_bytes(b"x" * self.msg_size)
+                    ch.post_send_bytes(self._payload)
                     self.inflight += 1
                     self.sent += 1
                 for wc in ch.poll(64):
@@ -61,7 +64,7 @@ class SendBwApp:
                         self.completed += 1
             else:
                 # keep receives posted
-                posted = getattr(ch, "_posted", 0)
+                posted = ch._posted
                 while posted < self.window:
                     ch.post_recv(self.msg_size)
                     posted += 1

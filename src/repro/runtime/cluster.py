@@ -168,6 +168,18 @@ class SimCluster:
         return self.fabric.configure_tracing(enabled,
                                              max_events=max_events)
 
+    def configure_pump(self, event_driven: bool = True):
+        """Operator knob: select the fabric pump core. ``True`` (the
+        default) is the event/active-set scheduler — pump steps touch
+        only ports with queued work and devices whose QP wake deadline
+        arrived, and idle stretches are skipped in one sim-clock jump
+        (the ``pump_steps_skipped`` gauge counts them). ``False`` falls
+        back to the legacy exhaustive per-step scan. Both cores produce
+        bit-identical sim-clock trajectories, figures, and counters
+        (``tests/test_determinism.py`` pins this), so the knob exists
+        for cross-checking and debugging, not for tuning."""
+        self.fabric.configure_pump(event_driven)
+
     def configure_rnr(self, name: Optional[str] = None, *,
                       rnr_retry: Optional[int] = None,
                       min_rnr_timer: Optional[int] = None):

@@ -1,0 +1,136 @@
+"""Benchmark wall-clock gate: BENCH_summary.json vs the committed baseline.
+
+``benchmarks.run --json`` leaves a per-figure summary with each figure's
+wall-clock ``wall_s``. This tool compares it against the committed
+``BENCH_baseline.json`` and exits non-zero when the suite has regressed
+past the tolerance — the CI backstop for the event-driven pump core: an
+accidental fallback to per-step scanning (or any O(n)-per-step creep on
+the hot paths) shows up as a multiple, not a few percent.
+
+Two gates, both against ``ratio`` (default 1.5x):
+
+* the **suite total** — the hard gate. Totals average out per-figure
+  jitter, so 1.5x on the sum is a real regression, not noise.
+* **per figure**, but only for figures whose baseline wall_s is at
+  least ``--floor`` seconds (default 0.5). Sub-floor figures finish in
+  milliseconds, where interpreter warmup noise swamps any signal; they
+  are reported but never gate.
+
+Any figure that failed (``ok: false``) or is missing from the summary
+fails the check outright. Absolute seconds differ across machines, so
+the baseline should be refreshed (``--update``) on the reference runner
+whenever the suite's expected cost legitimately changes — the gate
+catches multiples, and CI runners are within 1.5x of each other for
+this pure-Python suite.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run --json
+    python tools/perf_check.py [--ratio 1.5] [--update]
+"""
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+DEFAULT_SUMMARY = os.path.join(ROOT, "BENCH_summary.json")
+DEFAULT_BASELINE = os.path.join(ROOT, "BENCH_baseline.json")
+
+
+def load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def totals(summary: dict) -> float:
+    return sum(e.get("wall_s") or 0.0 for e in summary.values())
+
+
+def update_baseline(summary: dict, path: str) -> None:
+    """Freeze the current summary's wall clocks as the new baseline.
+    Only names and wall_s are kept — metrics pinning is the figures'
+    own assertions' job, not this gate's."""
+    base = {name: {"wall_s": entry.get("wall_s")}
+            for name, entry in sorted(summary.items())}
+    with open(path, "w") as f:
+        json.dump(base, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# baseline updated -> {path} "
+          f"(total {totals(base):.2f}s, {len(base)} figures)")
+
+
+def check(summary: dict, baseline: dict, ratio: float,
+          floor: float) -> int:
+    failures = []
+    for name, entry in sorted(summary.items()):
+        if not entry.get("ok"):
+            failures.append(f"{name}: figure FAILED "
+                            f"({entry.get('error', 'no result')})")
+    for name, base in sorted(baseline.items()):
+        entry = summary.get(name)
+        if entry is None:
+            failures.append(f"{name}: missing from summary "
+                            f"(figure dropped without a baseline update?)")
+            continue
+        got = entry.get("wall_s") or 0.0
+        want = base.get("wall_s") or 0.0
+        gates = want >= floor
+        verdict = "ok"
+        if want > 0 and got > want * ratio:
+            verdict = "REGRESSED" if gates else "slow (sub-floor, no gate)"
+            if gates:
+                failures.append(
+                    f"{name}: {got:.3f}s vs baseline {want:.3f}s "
+                    f"(> {ratio:.2f}x)")
+        print(f"# {name}: {got:.3f}s baseline={want:.3f}s [{verdict}]")
+
+    got_total = totals(summary)
+    want_total = totals(baseline)
+    print(f"# total: {got_total:.2f}s baseline={want_total:.2f}s "
+          f"(gate {want_total * ratio:.2f}s)")
+    if got_total > want_total * ratio:
+        failures.append(
+            f"suite total {got_total:.2f}s vs baseline "
+            f"{want_total:.2f}s (> {ratio:.2f}x)")
+
+    if failures:
+        print("# perf check FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"#   {f}", file=sys.stderr)
+        return 1
+    print("# perf check ok")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--summary", default=DEFAULT_SUMMARY,
+                    help="benchmarks.run --json output "
+                         "(default BENCH_summary.json)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help="committed baseline (default BENCH_baseline.json)")
+    ap.add_argument("--ratio", type=float, default=1.5,
+                    help="fail when wall_s exceeds baseline*ratio "
+                         "(default 1.5)")
+    ap.add_argument("--floor", type=float, default=0.5,
+                    help="per-figure gating floor in baseline seconds; "
+                         "faster figures report but never gate "
+                         "(default 0.5)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current summary "
+                         "instead of checking")
+    args = ap.parse_args(argv)
+
+    summary = load(args.summary)
+    if args.update:
+        update_baseline(summary, args.baseline)
+        return 0
+    if not os.path.exists(args.baseline):
+        print(f"# no baseline at {args.baseline}; run with --update "
+              f"to create one", file=sys.stderr)
+        return 1
+    return check(summary, load(args.baseline), args.ratio, args.floor)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
