@@ -22,13 +22,13 @@ from __future__ import annotations
 
 import zlib
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import msgpack
 
 from repro.core import dump as dumplib
 from repro.core.packets import Op
-from repro.core.service import ServiceError
+from repro.core.service import ServiceError, StreamPreempted
 from repro.core.states import QPState
 from repro.core.transport import STEP_S
 from repro.obs.trace import record_phase
@@ -50,18 +50,76 @@ class MigrationReport:
     rounds: List[Dict] = field(default_factory=list)   # per pre-copy round
     pages_total: int = 0
     pages_sent: int = 0                # includes re-sent dirty pages
-    stage_failed: Optional[str] = None   # "checkpoint" | "transfer"
+    #   "checkpoint" | "transfer" | "paused" | "aborted" | "admission"
+    stage_failed: Optional[str] = None
     retries: int = 0
     rolled_back: bool = False
     # retry token: strategy-private state (captured image / staged pages)
-    # the orchestrator hands back to resume a failed transfer.
-    attempt: Optional[Dict] = field(default=None, repr=False, compare=False)
+    # the orchestrator hands back to resume a failed transfer. A *paused*
+    # migration parks a serialisable MigrationAttempt here instead.
+    attempt: Optional[object] = field(default=None, repr=False,
+                                      compare=False)
     # post-copy demand pager, still serving faults after migrate() returns
     pager: Optional[object] = field(default=None, repr=False, compare=False)
+    # -- preemption accounting ----------------------------------------- [PRE]
+    # sim time spent parked between a pause yield and its resume/abort.
+    # Deliberately OUTSIDE transfer_s/live_s/downtime_s: those fields sum
+    # only spans the migration was actively working, so an operator pause
+    # never inflates the wire-attribution figures.
+    paused_s: float = 0.0
+    preemptions: int = 0               # pause yields taken mid-flight
+    container: Optional[str] = None    # set by the orchestrator
 
     @property
     def total_s(self):
         return self.checkpoint_s + self.transfer_s + self.restore_s
+
+
+@dataclass
+class MigrationAttempt:
+    """Serialisable checkpoint of an *in-flight* migration, taken at a
+    round/page boundary when the orchestrator pauses it (the preemption
+    counterpart of the per-QP dump: strategy, rounds completed, pages
+    sent, service-channel stream cursor, and the service QP's learned
+    congestion/RTO state all ride the token). ``resume`` re-enters the
+    strategy from it — on the original destination or, if that node was
+    drained meanwhile, a new one. ``refs`` carries live in-process
+    objects (the post-copy pager) and is excluded from the wire form;
+    ``from_bytes`` rebuilds them from fabric state."""
+    container: str = ""
+    strategy: str = ""
+    runtime: str = "crx"
+    src_gid: int = 0
+    dest_gid: int = 0
+    phase: str = "live"               # "live" | "stopped"
+    reason: str = "pause"             # "pause" | "auto" | "detach"
+    rounds_done: int = 0
+    pages_sent: int = 0
+    stream: Optional[int] = None      # service-channel stream cursor
+    pending: List = field(default_factory=list)  # [(mrn, pg)] round rest
+    round_pages: int = 0              # progress inside the split round
+    round_bytes: int = 0
+    round_steps: int = 0
+    image: Optional[bytes] = None     # stopped-phase checkpoint image
+    service_qp: Dict = field(default_factory=dict)  # RTO/RTT + DCQCN
+    paused_at: int = 0                # fabric.now at the yield
+    refs: Dict = field(default_factory=dict, repr=False, compare=False)
+
+    _WIRE = ("container", "strategy", "runtime", "src_gid", "dest_gid",
+             "phase", "reason", "rounds_done", "pages_sent", "stream",
+             "pending", "round_pages", "round_bytes", "round_steps",
+             "image", "service_qp", "paused_at")
+
+    def to_bytes(self) -> bytes:
+        return msgpack.packb(
+            {k: getattr(self, k) for k in self._WIRE},
+            use_bin_type=True)
+
+    @classmethod
+    def from_bytes(cls, blob: bytes) -> "MigrationAttempt":
+        d = msgpack.unpackb(blob, raw=False, strict_map_key=False)
+        d["pending"] = [tuple(p) for p in d.get("pending", [])]
+        return cls(**d)
 
 
 class MigrationError(RuntimeError):
@@ -132,7 +190,8 @@ class MigrationController:
 
     # -- data plane -------------------------------------------------------------
     def stream_image(self, src_dev, dest_gid: int, image: bytes, *,
-                     runtime: str = "crx") -> bytes:
+                     runtime: str = "crx",
+                     preempt: Optional[Callable] = None) -> bytes:
         """Move a checkpoint image over the service channel and return the
         bytes that actually arrived at the destination. The call pumps the
         bare fabric until delivery, so the elapsed sim steps ARE the
@@ -142,11 +201,17 @@ class MigrationController:
         drivers see only the fabric advance). The docker runtime crosses
         the wire twice (into 'storage', then out)."""
         svc = src_dev.service
-        dest_svc = self.fabric.device(dest_gid).service
+        dest_dev = self.fabric.device(dest_gid)
+        if dest_dev is None:
+            # the destination left the fabric between yield points (e.g.
+            # drained during a pre-copy settle window): suspend, exactly
+            # as if the detach had landed mid-stream
+            raise StreamPreempted("detach", -1)
+        dest_svc = dest_dev.service
         delivered = bytes(image)
         for _hop in range(2 if runtime == "docker" else 1):
             xid = svc.transfer(dest_gid, Op.MIG_STATE, {"kind": "image"},
-                               delivered)
+                               delivered, preempt=preempt)
             delivered = dest_svc.take_image(xid)
         if delivered != image:
             raise MigrationError("image corrupted in transit")
@@ -154,7 +219,8 @@ class MigrationController:
 
     # -- flow -------------------------------------------------------------------
     def migrate(self, container, dest_node, *, runtime: str = "crx",
-                fail_at: Optional[str] = None) -> MigrationReport:
+                fail_at: Optional[str] = None,
+                preempt: Optional[Callable] = None) -> MigrationReport:
         src_node = container.node
         if dest_node is src_node:
             # explicit no-op: nothing was dumped, moved, or restored
@@ -203,7 +269,33 @@ class MigrationController:
             return rep
         try:
             moved = self.stream_image(src_dev, dest_node.device.gid, image,
-                                      runtime=runtime)
+                                      runtime=runtime, preempt=preempt)
+        except StreamPreempted as e:
+            # operator/policy yield mid-transfer: the source QPs stay
+            # STOPPED (peers paused — exactly the fail_at="transfer" wire
+            # state) and the complete image rides the attempt token. The
+            # parked gap itself is accounted by the orchestrator into
+            # paused_s at resume time, never into transfer_s.
+            container.alive = False
+            rep.ok = False
+            rep.transfer_s = (fab.now - t1) * STEP_S
+            record_phase(fab, "transfer", t1, node=src_dev.gid,
+                         suspended=True)
+            if e.reason == "abort":
+                rep.stage_failed = "aborted"
+                return rep
+            rep.stage_failed = "paused"
+            rep.preemptions += 1
+            rep.attempt = MigrationAttempt(
+                container=container.name, strategy=rep.strategy,
+                runtime=runtime, src_gid=src_dev.gid,
+                dest_gid=dest_node.device.gid, phase="stopped",
+                reason=e.reason, pages_sent=rep.pages_sent,
+                image=bytes(image),
+                service_qp=src_dev.service.take_suspend_state(
+                    dest_node.device.gid),
+                paused_at=fab.now)
+            return rep
         except (MigrationError, ServiceError) as e:
             # a real wire failure (stream timeout, corruption) lands in
             # the same state as fail_at="transfer": source QPs STOPPED,

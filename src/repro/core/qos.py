@@ -602,6 +602,13 @@ class EgressPort:
                                       + gid * 7919 + 1)
         self._mark_window: Deque[Tuple[int, int]] = deque()
         self._mark_bytes = 0
+        # migration-class slice of the utilization window (mig is the
+        # rare class, so only it is tracked; app = total - mig). The
+        # auto-preemption policy reads the app share: a port busy only
+        # with the migration's own stream must never read as app
+        # pressure and pause the migration against itself.
+        self._mig_window: Deque[Tuple[int, int]] = deque()
+        self._mig_bytes = 0
         self._build_classes()
 
     # -- configuration -------------------------------------------------------
@@ -687,6 +694,12 @@ class EgressPort:
         mw = self._mark_window
         while mw and mw[0][0] <= cut:
             self._mark_bytes -= mw.popleft()[1]
+        if pkt.op.is_mig:
+            gw = self._mig_window
+            gw.append((now, n))
+            self._mig_bytes += n
+            while gw[0][0] <= cut:
+                self._mig_bytes -= gw.popleft()[1]
         # _class_of/_tenant_of, inlined (one call per packet on the wire)
         if self.cfg.enabled:
             self.classes[classify(pkt)].push(
@@ -719,10 +732,19 @@ class EgressPort:
         while self._mark_window and \
                 self._mark_window[0][0] <= now - horizon:
             self._mark_bytes -= self._mark_window.popleft()[1]
+        while self._mig_window and \
+                self._mig_window[0][0] <= now - horizon:
+            self._mig_bytes -= self._mig_window.popleft()[1]
 
     def window_bytes(self, now: int) -> int:
         self._trim(now)
         return self._win_bytes
+
+    def app_window_bytes(self, now: int) -> int:
+        """App-class bytes offered over the trailing window (total minus
+        the migration class) — the auto-preemption policy's signal."""
+        self._trim(now)
+        return self._win_bytes - self._mig_bytes
 
     def marking_rate(self, now: int) -> float:
         """Fraction of bytes offered to this port over the trailing

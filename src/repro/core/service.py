@@ -24,12 +24,27 @@ from collections import deque
 from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.packets import Op
+from repro.core.qos import CongestionControl
 from repro.core.states import QPState
 from repro.core.verbs import Context, MemoryRegion, QueuePair, SGE, SendWR
 
 
 class ServiceError(RuntimeError):
     pass
+
+
+class StreamPreempted(Exception):
+    """A service transfer was *suspended* mid-stream — operator
+    pause/abort, an auto-preemption policy yield, or the peer leaving the
+    fabric — rather than failing. Deliberately NOT a ``ServiceError``:
+    failure handlers (retry loops, rollback-on-wire-error) must never
+    mistake a suspension for a dead stream. Callers convert it into a
+    paused ``MigrationAttempt`` token instead."""
+
+    def __init__(self, reason: str, xid: int):
+        super().__init__(f"service stream suspended ({reason}) xid={xid}")
+        self.reason = reason
+        self.xid = xid
 
 
 class ServiceChannel:
@@ -60,6 +75,13 @@ class ServiceChannel:
         #   ^ stream -> {(mrn, page): bytes}: pre-copy pages that arrived
         self.page_store: Dict[int, Dict[int, bytes]] = {}
         #   ^ stream -> {mrn: frozen buf}: post-copy source-side store
+        # preemption: peer gid -> reason while a stream toward that peer
+        # is suspended (an in-flight transfer() exits via StreamPreempted
+        # instead of its timeout-abort path), and the suspended kernel
+        # QP's learned wire state (RTO estimator, DCQCN rate) so a
+        # resumed attempt starts from it rather than from scratch
+        self._suspended: Dict[int, str] = {}
+        self.suspend_state: Dict[int, dict] = {}
 
     # -- identifiers ---------------------------------------------------------
     def next_xid(self) -> int:
@@ -99,6 +121,13 @@ class ServiceChannel:
              data: bytes = b"") -> int:
         """Queue one service message (fire-and-forget); returns its xid."""
         xid = meta.setdefault("xid", self.next_xid())
+        if self._suspended \
+                and self.device.fabric.device(peer_gid) is not None:
+            # a suspension nobody observed (pause verdict latched with no
+            # transfer in flight) must not poison the next, unrelated
+            # message — but a detach flag persists until the peer is
+            # actually back on the fabric
+            self._suspended.pop(peer_gid, None)
         blob = msgpack.packb({"meta": meta, "data": data},
                              use_bin_type=True)
         # kernel-private scratch MR: built directly (never registered with
@@ -120,11 +149,20 @@ class ServiceChannel:
 
     def transfer(self, peer_gid: int, op: Op, meta: dict, data: bytes,
                  *, tick: Optional[Callable] = None,
-                 max_steps: Optional[int] = None) -> int:
+                 max_steps: Optional[int] = None,
+                 preempt: Optional[Callable] = None) -> int:
         """Stream one message and pump the fabric until the receiver's
         MIG_ACK receipt arrives — i.e. until the bytes have actually been
         serialised over the shared links, retransmissions included. The
-        elapsed pump steps ARE the transfer time (``fabric.now`` delta)."""
+        elapsed pump steps ARE the transfer time (``fabric.now`` delta).
+
+        ``preempt`` (optional) is polled between pump steps; a truthy
+        return ("pause" / "auto" / "abort") suspends the stream — the
+        partially-sent WQE is torn down, the kernel QP's learned wire
+        state is snapshotted for the resume, and ``StreamPreempted``
+        carries the reason out. A suspension set externally
+        (``suspend_peer`` / ``peer_detached`` from a caller tick) exits
+        the same way instead of tripping the timeout-abort path."""
         fabric = self.device.fabric
         xid = self.post(peer_gid, op, meta, data)
         if max_steps is None:
@@ -140,11 +178,27 @@ class ServiceChannel:
             ser = (len(data) + 4096) / max(per_step, 1e-9)
             max_steps = int(20 * ser) + 100_000
         if tick is None:
-            # let the event scheduler skip the dead air between wire
-            # events (RTO waits, latency pipes) instead of stepping it
-            if fabric.pump_until(lambda: xid in self.acked, max_steps):
-                self.acked.discard(xid)
-                return xid
+            if preempt is None:
+                # fast path: the exact pre-preemption predicate — with
+                # ``tick=None`` nothing external runs between steps, so
+                # no suspension can appear mid-pump either
+                # (let the event scheduler skip the dead air between
+                # wire events — RTO waits, latency pipes)
+                if fabric.pump_until(lambda: xid in self.acked,
+                                     max_steps):
+                    self.acked.discard(xid)
+                    return xid
+            else:
+                def _done():
+                    if xid in self.acked:
+                        return True
+                    return self._poll_suspend(peer_gid, preempt) \
+                        is not None
+                if fabric.pump_until(_done, max_steps):
+                    if xid in self.acked:
+                        self.acked.discard(xid)
+                        return xid
+                    self._suspend(peer_gid, xid)
         else:
             # caller-supplied tick (containers stepping alongside): the
             # per-step loop is the contract
@@ -152,6 +206,11 @@ class ServiceChannel:
                 if xid in self.acked:
                     self.acked.discard(xid)
                     return xid
+                if preempt is not None or self._suspended:
+                    # a caller tick can pause/detach externally, so the
+                    # suspension flag is checked even without preempt
+                    if self._poll_suspend(peer_gid, preempt) is not None:
+                        self._suspend(peer_gid, xid)
                 tick()
         # the stream is hopeless: abort it. Leaving the WQE in place would
         # retransmit the image forever (the device never goes idle) and a
@@ -228,6 +287,86 @@ class ServiceChannel:
                 svc.device.destroy_qp(qp.qpn)
             svc._tx_mrs = {w: (g, mr) for w, (g, mr)
                            in svc._tx_mrs.items() if g != gid}
+
+    # -- preemption ----------------------------------------------------------
+    def _poll_suspend(self, peer_gid: int, preempt) -> Optional[str]:
+        """Suspension reason for the stream toward ``peer_gid``, if any:
+        an externally-set flag wins, else the caller's preempt callable
+        is consulted (its verdict is latched into the flag so the reason
+        survives until the transfer loop acts on it)."""
+        r = self._suspended.get(peer_gid)
+        if r is None and preempt is not None:
+            r = preempt()
+            if r:
+                self._suspended[peer_gid] = r
+        return r or None
+
+    def _suspend(self, peer_gid: int, xid: int):
+        """Common exit of a suspended transfer: tear the stream down
+        (snapshotting the QP's wire state), scrub the half-delivered
+        message from the receiver, and raise ``StreamPreempted``."""
+        reason = self._suspended.pop(peer_gid, "pause")
+        if peer_gid in self._peers:
+            self.suspend_peer(peer_gid, reason)
+            self._suspended.pop(peer_gid, None)
+        peer_dev = self.device.fabric.device(peer_gid)
+        if peer_dev is not None and peer_dev._service is not None:
+            peer_dev._service.images.pop(xid, None)
+        self.acked.discard(xid)
+        raise StreamPreempted(reason, xid)
+
+    def suspend_peer(self, peer_gid: int, reason: str = "pause"):
+        """Suspend the stream toward a peer: ``reset_peer`` mechanics
+        (tear down the kernel QP pair, abandon in-flight WQEs) but with
+        pause semantics — the QP's learned wire state (RFC 6298 RTO
+        estimator, DCQCN rate) is snapshotted into ``suspend_state``
+        first so a resumed attempt re-applies it, and the suspension is
+        flagged so an in-flight ``transfer`` exits via
+        ``StreamPreempted`` instead of its timeout-abort path."""
+        qp = self._peers.get(peer_gid)
+        if qp is not None:
+            self.suspend_state[peer_gid] = self._snapshot_wire_state(qp)
+        self._suspended[peer_gid] = reason
+        self.reset_peer(peer_gid)
+
+    def peer_detached(self, gid: int):
+        """Fabric hook: ``gid`` left the fabric. A stream toward it must
+        suspend *now* — left armed, its WQEs would retransmit into the
+        void until the transfer timeout fired and aborted the whole
+        migration (the pre-preemption failure mode). The suspension is a
+        pause, not an error: the attempt can resume toward a new
+        destination."""
+        if gid in self._peers \
+                or any(g == gid for g, _ in self._tx_mrs.values()):
+            self.suspend_peer(gid, reason="detach")
+
+    def _snapshot_wire_state(self, qp: QueuePair) -> dict:
+        d = {"rto": qp.rto, "srtt": qp.srtt, "rttvar": qp.rttvar}
+        if qp.cc is not None:
+            fab = self.device.fabric
+            if fab.ecn.enabled:
+                qp.cc.advance(fab.now, fab.bytes_per_step)
+            d["cc"] = qp.cc.dump(fab.now)
+        return d
+
+    def take_suspend_state(self, peer_gid: int) -> dict:
+        return self.suspend_state.pop(peer_gid, {})
+
+    def apply_wire_state(self, peer_gid: int, d: dict):
+        """Re-apply a suspended stream's learned wire state onto the
+        fresh kernel QP the resume's rendezvous creates (only meaningful
+        toward the *same* peer — RTO/rate are path-learned)."""
+        if not d:
+            return
+        qp = self.qp_for(peer_gid)
+        qp.rto = d["rto"]
+        qp.srtt = d["srtt"]
+        qp.rttvar = d["rttvar"]
+        fab = self.device.fabric
+        if "cc" in d and fab.ecn.enabled:
+            qp.cc = CongestionControl.restore(
+                fab.ecn, d["cc"], fab.now, fab.bytes_per_step,
+                fab.step_s())
 
     # -- housekeeping --------------------------------------------------------
     def reap(self):

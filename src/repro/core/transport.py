@@ -364,9 +364,18 @@ class Fabric:
         could only ever hit the unroutable path at delivery time, and
         leaving them queued would keep ``in_flight()`` from quiescing.
         The departed node's own ingress queue drains the same way: every
-        packet parked there was addressed to it."""
+        packet parked there was addressed to it. Service-channel streams
+        toward the departed gid are *suspended*, not left armed: a
+        mid-migration transfer exits via the preemption path (a paused
+        attempt, resumable toward a new destination) instead of
+        retransmitting into the void until its timeout aborted the
+        migration."""
         self._devices.pop(gid, None)
         self._devices_dirty = True
+        for dev in self._devices.values():
+            svc = getattr(dev, "_service", None)
+            if svc is not None:
+                svc.peer_detached(gid)
         for port in self._ports.values():
             self.metrics.inc("unroutable", port.drop_to(gid), gid=gid)
         iport = self._ingress.pop(gid, None)
@@ -410,6 +419,19 @@ class Fabric:
         """Back-compat alias: capacity is a property of the *source
         node's egress port* now, not of a (src, dest) pair."""
         return self.port_utilization(src_gid)
+
+    def app_utilization(self, gid: int) -> float:
+        """App-class share of the node's egress capacity over the
+        trailing window — what the auto-preemption policy reads. The
+        migration class is excluded, so a port busy only with the
+        migration's own stream never reads as app pressure (a policy
+        fed ``port_utilization`` would pause every migration against
+        itself)."""
+        port = self._ports.get(gid)
+        if port is None or self.bytes_per_step <= 0:
+            return 0.0
+        cap = self.utilization_window * self.bytes_per_step
+        return min(1.0, port.app_window_bytes(self.now) / cap)
 
     # -- wire ----------------------------------------------------------------
     def send(self, pkt: Packet):

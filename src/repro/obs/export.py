@@ -50,7 +50,7 @@ def chrome_trace(tracer: Tracer) -> Dict:
                        "tid": 0, "args": {"name": f"node {gid}"}})
     for e in tracer.events:
         pid = e.node if e.node is not None else -1
-        if e.kind is EventKind.PHASE:
+        if e.kind is EventKind.PHASE or e.kind is EventKind.PAUSED:
             events.append({
                 "ph": "X", "name": e.data["name"], "cat": "migration",
                 "pid": pid, "tid": "migration",

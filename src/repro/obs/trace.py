@@ -59,6 +59,7 @@ class EventKind(enum.Enum):
     PAGE_PULL = "page_pull"              # post-copy demand/prefetch fill
     # -- migration phases (migration/strategies/orchestrator) -------------
     PHASE = "phase"                      # completed span [begin, end]
+    PAUSED = "paused"                    # preemption gap [pause, resume]
 
 
 @dataclass
@@ -235,8 +236,21 @@ class Tracer:
                    {"name": name, "begin": begin, "end": end,
                     "dur_steps": end - begin, **attrs})
 
+    def paused(self, begin: int, end: int, node: Optional[int] = None,
+               **attrs):
+        """One preemption gap ``[begin, end]``: the span a migration sat
+        parked between its pause yield and the matching resume/abort.
+        Phase-shaped payload so exporters render it alongside the real
+        phases, but a distinct kind — the downtime/wire attribution maths
+        must never sum it into ``transfer``/``live`` spans."""
+        self._emit(EventKind.PAUSED, end, node,
+                   {"name": "paused", "begin": begin, "end": end,
+                    "dur_steps": end - begin, **attrs})
+
     def phases(self, name: Optional[str] = None) -> List[TraceEvent]:
-        return [e for e in self.events if e.kind is EventKind.PHASE
+        return [e for e in self.events
+                if (e.kind is EventKind.PHASE
+                    or e.kind is EventKind.PAUSED)
                 and (name is None or e.data["name"] == name)]
 
 

@@ -6,9 +6,12 @@ and below ``SimCluster``. ``strategies`` holds the pluggable engines
 (stop-and-copy / pre-copy / post-copy), ``orchestrator`` the cluster-wide
 control plane (admission, queueing, retry, rollback).
 """
+from repro.core.migration import MigrationAttempt  # noqa: F401
 from repro.orchestrator.orchestrator import (AdmissionError,  # noqa: F401
                                              MigrationPlan,
-                                             MigrationRequest, Orchestrator)
+                                             MigrationRequest, Orchestrator,
+                                             PausedMigration,
+                                             PreemptionPolicy)
 from repro.orchestrator.strategies import (STRATEGIES,  # noqa: F401
                                            DemandPager, MigrationStrategy,
                                            PostCopy, PreCopy, StopAndCopy,

@@ -16,10 +16,10 @@ from __future__ import annotations
 
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.migration import (MigrationController, MigrationError,
-                                  MigrationReport)
+from repro.core.migration import (MigrationAttempt, MigrationController,
+                                  MigrationError, MigrationReport)
 from repro.core.states import QPState
 from repro.core.transport import STEP_S
 from repro.core.verbs import PAGE_SIZE
@@ -53,6 +53,34 @@ class MigrationRequest:
     runtime: str = "crx"
     fail_at: Optional[str] = None
     retries: int = 1
+    # lifecycle: queued | held | running | paused | done | failed | aborted
+    state: str = "queued"
+    # the instance actually executing (resolved from ``strategy`` at run
+    # time); a paused request resumes on the SAME instance so strategy
+    # tunables (round caps, thresholds) survive the pause
+    resolved_strategy: Optional[object] = field(default=None, repr=False)
+
+
+@dataclass
+class PreemptionPolicy:
+    """Auto-preemption knobs: pause an in-flight migration when the
+    source node's *application* egress utilization crosses
+    ``pause_util`` (the migration's own stream is excluded from the
+    signal, so a migration can never pause itself), resume a policy-
+    paused one once the app load drains below ``resume_util`` and it has
+    been parked at least ``min_paused_steps``."""
+    pause_util: float = 0.9
+    resume_util: float = 0.5
+    min_paused_steps: int = 200
+
+
+@dataclass
+class PausedMigration:
+    """A parked in-flight migration: the request, its partial report,
+    and the serialisable attempt token to re-enter the strategy from."""
+    req: MigrationRequest
+    rep: MigrationReport
+    attempt: MigrationAttempt
 
 
 class Orchestrator:
@@ -70,16 +98,42 @@ class Orchestrator:
         self.max_downtime_s = max_downtime_s   # budget for strategy="auto"
         self.queue: deque = deque()
         self.history: List[MigrationReport] = []
+        # -- preemption state ------------------------------------------ [PRE]
+        self.paused: Dict[str, PausedMigration] = {}   # name -> parked
+        # name -> (reason, deadline step | None): a pending pause/abort
+        # verdict the running strategy picks up at its next yield point
+        self._preempt: Dict[str, Tuple[str, Optional[int]]] = {}
+        self._active: Optional[MigrationRequest] = None
+        # post-copy reports whose pager is still draining (pause/resume
+        # of the pull phase operates on these after migrate() returned)
+        self._pagers: Dict[str, MigrationReport] = {}
+        self._pager_paused: Dict[str, int] = {}        # name -> pause step
+        self.preemption: Optional[PreemptionPolicy] = None
+        self._auto_last: Tuple[int, Optional[str]] = (-1, None)
+
+    def configure_preemption(self, enabled: bool = True, *,
+                             pause_util: float = 0.9,
+                             resume_util: float = 0.5,
+                             min_paused_steps: int = 200):
+        """Arm (or disarm) the auto-preemption policy; see
+        ``PreemptionPolicy`` for the knob semantics."""
+        self.preemption = PreemptionPolicy(
+            pause_util=pause_util, resume_util=resume_util,
+            min_paused_steps=min_paused_steps) if enabled else None
+        return self.preemption
 
     @property
     def relocated(self) -> Dict[int, int]:
         return self.controller.relocated
 
     # -- admission -----------------------------------------------------------
-    def admit(self, container, dest_node) -> MigrationPlan:
+    def admit(self, container, dest_node, *,
+              resuming: bool = False) -> MigrationPlan:
         if dest_node is container.node:
             raise AdmissionError("destination is the source node")
-        if not container.alive:
+        if not container.alive and not resuming:
+            # a stopped-phase pause token legitimately re-admits a
+            # checkpoint-frozen (not-alive) container
             raise AdmissionError(f"container {container.name!r} not alive")
         checks = []
         cap = getattr(dest_node, "capacity", None)
@@ -198,10 +252,16 @@ class Orchestrator:
         serialised; admission re-runs at execution time, so a request
         invalidated by an earlier one is rejected, not corrupted). A
         rejected request yields a failed report — it never aborts the
-        rest of the queue."""
+        rest of the queue. Requests an operator ``pause``d while still
+        queued (state ``"held"``) are skipped and stay queued until
+        ``resume``d."""
         out = []
+        held = []
         while self.queue:
             req = self.queue.popleft()
+            if req.state == "held":
+                held.append(req)
+                continue
             try:
                 out.append(self._execute(req))
             except AdmissionError as e:
@@ -209,6 +269,7 @@ class Orchestrator:
                 rep.admission_error = e
                 self.history.append(rep)
                 out.append(rep)
+        self.queue.extend(held)
         return out
 
     def migrate(self, container, dest_node, **kw) -> MigrationReport:
@@ -248,10 +309,14 @@ class Orchestrator:
         from repro.core.service import ServiceError
         rep = MigrationReport(ok=False, strategy=strat.name,
                               stage_failed="transfer")
+        req.resolved_strategy = strat
+        self._active = req
+        req.state = "running"
         try:
             rep = strat.run(self.controller, req.container, req.dest_node,
                             runtime=req.runtime, fail_at=req.fail_at,
-                            background=self.background)
+                            background=self.background,
+                            preempt=self._preempt_check(req))
             while (not rep.ok and rep.stage_failed == "transfer"
                    and rep.attempt is not None
                    and rep.retries < req.retries):
@@ -261,10 +326,237 @@ class Orchestrator:
         except (MigrationError, ServiceError) as e:
             rep.ok = False
             rep.transfer_error = e
+        finally:
+            self._active = None
+            self._preempt.pop(req.container.name, None)
+        return self._settle(req, rep)
+
+    def _settle(self, req: MigrationRequest,
+                rep: MigrationReport) -> MigrationReport:
+        """Classify a strategy's outcome: park a paused attempt, roll
+        back a failed/aborted one, record the rest. The single exit path
+        for both ``_execute`` and ``resume``."""
+        name = req.container.name
+        rep.container = name
+        fab = self.controller.fabric
+        if not rep.ok and rep.stage_failed == "paused" \
+                and rep.attempt is not None:
+            req.state = "paused"
+            self.paused[name] = PausedMigration(req, rep, rep.attempt)
+            fab.metrics.inc("migration_pauses", gid=rep.attempt.src_gid)
+            return rep
         if not rep.ok:
             self.rollback(req.container, rep)
+            if rep.stage_failed == "aborted":
+                req.state = "aborted"
+                fab.metrics.inc("migration_aborts",
+                                gid=req.container.ctx.device.gid)
+            else:
+                req.state = "failed"
+        else:
+            req.state = "done"
+            pager = rep.pager
+            if pager is not None and pager.remaining_pages:
+                self._pagers[name] = rep
         self.history.append(rep)
         return rep
+
+    # -- preemption ----------------------------------------------------------
+    def _preempt_check(self, req: MigrationRequest) -> Callable:
+        """Build the yield-point predicate the strategy polls at every
+        round/page boundary (and the service channel at every pump):
+        a pending operator verdict wins; otherwise the auto-preemption
+        policy compares the source node's app-class egress utilization
+        (the migration's own stream is excluded, so it never pauses
+        itself) against ``pause_util``. The policy read is memoised per
+        fabric step — boundaries are far denser than the clock."""
+        fab = self.controller.fabric
+        name = req.container.name
+
+        def check() -> Optional[str]:
+            v = self._preempt.get(name)
+            if v is not None:
+                reason, at = v
+                if at is None or fab.now >= at:
+                    return reason
+            pol = self.preemption
+            if pol is not None:
+                step, verdict = self._auto_last
+                if step != fab.now:
+                    util = fab.app_utilization(req.container.node.gid)
+                    verdict = "auto" if util > pol.pause_util else None
+                    self._auto_last = (fab.now, verdict)
+                return verdict
+            return None
+
+        return check
+
+    def pause(self, container, *, at: Optional[int] = None) -> bool:
+        """Operator pause. The active in-flight migration yields at its
+        next round/page boundary (or the first boundary at/after step
+        ``at``); a still-queued request is held in place; a post-copy
+        pager still draining after a completed migration stops
+        prefetching (demand faults keep serving). Returns True if there
+        was anything to pause."""
+        name = container.name
+        if self._active is not None and self._active.container is container:
+            self._preempt[name] = ("pause", at)
+            return True
+        if at is not None:
+            # deadline pause may be armed BEFORE the (synchronous)
+            # migrate call that it targets: the flag is only consulted
+            # at in-flight yield points and is cleared when the request
+            # settles, so arming early is harmless
+            self._preempt[name] = ("pause", at)
+            return True
+        for req in self.queue:
+            if req.container is container and req.state == "queued":
+                req.state = "held"
+                return True
+        rep = self._pagers.get(name)
+        if rep is not None and rep.pager.remaining_pages:
+            rep.pager.paused = True
+            self._pager_paused.setdefault(name, self.controller.fabric.now)
+            return True
+        return name in self.paused
+
+    def abort(self, container) -> bool:
+        """Abort the container's migration wherever it is in the
+        lifecycle: a running one yields and rolls back, a paused one is
+        rolled back immediately (source QPs re-arm, admission budget and
+        parked service-channel state released), a queued one is dropped.
+        Returns True if there was anything to abort."""
+        name = container.name
+        fab = self.controller.fabric
+        if self._active is not None and self._active.container is container:
+            self._preempt[name] = ("abort", None)
+            return True
+        pm = self.paused.pop(name, None)
+        if pm is not None:
+            self._account_pause(pm.rep, pm.attempt)
+            pm.rep.stage_failed = "aborted"
+            pm.rep.container = name
+            self.rollback(container, pm.rep)
+            pm.req.state = "aborted"
+            fab.metrics.inc("migration_aborts",
+                            gid=container.ctx.device.gid)
+            self.history.append(pm.rep)
+            return True
+        for req in list(self.queue):
+            if req.container is container:
+                self.queue.remove(req)
+                req.state = "aborted"
+                return True
+        return False
+
+    def resume(self, container, dest_node=None) -> Optional[MigrationReport]:
+        """Resume the container's paused migration — on the original
+        destination, or on ``dest_node`` if given (mandatory when the
+        original left the fabric). Re-admits against *current* cluster
+        state, re-applies the service QP's parked congestion/RTO state,
+        and re-enters the strategy from the attempt token. Also unpauses
+        a held queued request (returns None) or a paused post-copy
+        pager (returns its report)."""
+        name = container.name
+        fab = self.controller.fabric
+        for req in self.queue:
+            if req.container is container and req.state == "held":
+                req.state = "queued"
+                if dest_node is not None:
+                    req.dest_node = dest_node
+                return None
+        rep = self._pagers.get(name)
+        if rep is not None and rep.pager.paused:
+            rep.pager.paused = False
+            t0 = self._pager_paused.pop(name, None)
+            if t0 is not None:
+                rep.paused_s += (fab.now - t0) * STEP_S
+                trc = fab.tracer
+                if trc is not None:
+                    trc.paused(t0, fab.now,
+                               node=container.ctx.device.gid,
+                               container=name, reason="pager")
+            return rep
+        pm = self.paused.get(name)
+        if pm is None:
+            raise MigrationError(f"no paused migration for {name!r}")
+        req, rep, attempt = pm.req, pm.rep, pm.attempt
+        if dest_node is not None:
+            req.dest_node = dest_node
+        elif fab.device(req.dest_node.device.gid) is None:
+            raise MigrationError(
+                f"original destination {req.dest_node.device.gid} left "
+                f"the fabric; resume {name!r} with a new destination")
+        del self.paused[name]
+        t_adm = fab.now
+        try:
+            self.admit(container, req.dest_node, resuming=True)
+        except AdmissionError:
+            # stay parked: the pause span keeps running until a resume
+            # actually goes through
+            self.paused[name] = pm
+            raise
+        record_phase(fab, "admission", t_adm,
+                     node=req.dest_node.device.gid, container=name)
+        self._account_pause(rep, attempt)
+        fab.metrics.inc("migration_resumes", gid=attempt.src_gid)
+        strat = req.resolved_strategy
+        if strat is None:
+            # a deserialised token crossed orchestrator instances
+            strat = make_strategy(attempt.strategy or req.strategy,
+                                  **req.strategy_params)
+            req.resolved_strategy = strat
+        from repro.core.service import ServiceError
+        self._active = req
+        req.state = "running"
+        try:
+            rep = strat.resume_paused(self.controller, container,
+                                      req.dest_node, attempt, rep,
+                                      background=self.background,
+                                      preempt=self._preempt_check(req))
+        except (MigrationError, ServiceError) as e:
+            rep.ok = False
+            rep.stage_failed = "transfer"
+            rep.transfer_error = e
+        finally:
+            self._active = None
+            self._preempt.pop(name, None)
+        return self._settle(req, rep)
+
+    def _account_pause(self, rep: MigrationReport,
+                       attempt: MigrationAttempt):
+        """Attribute the parked gap to ``paused_s`` (and a PAUSED trace
+        span) — never to transfer/live/downtime, which sum only spans
+        the migration was actively working."""
+        fab = self.controller.fabric
+        rep.paused_s += (fab.now - attempt.paused_at) * STEP_S
+        trc = fab.tracer
+        if trc is not None:
+            trc.paused(attempt.paused_at, fab.now, node=attempt.src_gid,
+                       container=attempt.container, reason=attempt.reason)
+
+    def poll_preemption(self):
+        """Policy tick (the cluster step loop calls this once per step
+        when a policy is armed): resume auto-paused migrations whose
+        source app load has drained below ``resume_util`` after at least
+        ``min_paused_steps`` parked. One resume per tick — the resumed
+        migration runs synchronously inside the tick."""
+        pol = self.preemption
+        if pol is None or self._active is not None or not self.paused:
+            return
+        fab = self.controller.fabric
+        for name in list(self.paused):
+            pm = self.paused[name]
+            att = pm.attempt
+            if att.reason != "auto":
+                continue               # operator pauses need an operator
+            if fab.now - att.paused_at < pol.min_paused_steps:
+                continue
+            if fab.device(pm.req.dest_node.device.gid) is None:
+                continue               # destination gone: operator call
+            if fab.app_utilization(att.src_gid) < pol.resume_util:
+                self.resume(pm.req.container)
+                return
 
     # -- rollback ------------------------------------------------------------
     def rollback(self, container,

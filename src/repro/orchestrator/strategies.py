@@ -33,8 +33,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 import msgpack
 
 from repro.core import dump as dumplib
-from repro.core.migration import MigrationReport
+from repro.core.migration import MigrationAttempt, MigrationReport
 from repro.core.packets import Op
+from repro.core.service import StreamPreempted
 from repro.core.transport import STEP_S
 from repro.core.verbs import PAGE_SIZE, MemoryRegion
 from repro.obs.trace import record_phase
@@ -53,6 +54,28 @@ def _sim_transfer_s(ctl, attempt: Dict) -> float:
     return sim
 
 
+def _sim_attempt_s(ctl, attempt: MigrationAttempt) -> float:
+    """As ``_sim_transfer_s``, for a pause token."""
+    sim = len(attempt.image) / ctl.bw
+    if attempt.runtime == "docker":
+        sim *= 2
+    return sim
+
+
+class _RoundPreempted(Exception):
+    """Internal: a page round yielded mid-way. Carries what the round
+    still owes (``remaining``) and the bytes that DID cross the wire so
+    the split round's accounting stays exact across the pause."""
+
+    def __init__(self, reason: str,
+                 remaining: List[Tuple[MemoryRegion, int]],
+                 sent_bytes: int):
+        super().__init__(f"page round preempted ({reason})")
+        self.reason = reason
+        self.remaining = remaining
+        self.sent_bytes = sent_bytes
+
+
 def _page(mr: MemoryRegion, pg: int) -> bytes:
     return bytes(mr.buf[pg * PAGE_SIZE:(pg + 1) * PAGE_SIZE])
 
@@ -62,39 +85,117 @@ def _page_len(mr: MemoryRegion, pg: int) -> int:
 
 
 def _stream_pages(ctl, src_dev, dest_gid: int, stream: int,
-                  pages: List[Tuple[MemoryRegion, int]], tick) -> int:
+                  pages: List[Tuple[MemoryRegion, int]], tick,
+                  preempt: Optional[Callable] = None) -> int:
     """Stream a page set over the service channel in MIG_PAGE batches;
     blocks (pumping via ``tick``) until each batch is receipt-acked.
-    Returns the number of payload bytes that crossed the wire."""
+    Returns the number of payload bytes that crossed the wire.
+
+    ``preempt`` makes every batch boundary (and, via the service
+    channel, every pump step inside a batch) a yield point: a truthy
+    verdict raises ``_RoundPreempted`` with the round's remaining pages.
+    A batch cut off mid-transfer counts as unsent — its receipt was
+    never acked, so the resend is idempotent (staging overwrites the
+    same keys with the same bytes)."""
     svc = src_dev.service
     total = 0
-    for lo in range(0, len(pages), PAGE_BATCH):
+    lo = 0
+    while lo < len(pages):
+        if preempt is not None:
+            r = preempt()
+            if r:
+                raise _RoundPreempted(r, pages[lo:], total)
         metas, datas = [], []
         for mr, pg in pages[lo:lo + PAGE_BATCH]:
             data = _page(mr, pg)
             metas.append((mr.mrn, pg, len(data)))
             datas.append(data)
-            total += len(data)
-        svc.transfer(dest_gid, Op.MIG_PAGE,
-                     {"stream": stream, "pages": metas},
-                     b"".join(datas), tick=tick)
+        try:
+            svc.transfer(dest_gid, Op.MIG_PAGE,
+                         {"stream": stream, "pages": metas},
+                         b"".join(datas), tick=tick, preempt=preempt)
+        except StreamPreempted as e:
+            raise _RoundPreempted(e.reason, pages[lo:], total) from None
+        total += sum(m[2] for m in metas)
+        lo += PAGE_BATCH
     return total
 
 
 class MigrationStrategy:
     """Interface: ``run`` performs a migration end to end; ``resume``
-    retries the transfer+restore half from a captured attempt token."""
+    retries the transfer+restore half from a captured attempt token;
+    ``resume_paused`` re-enters a migration the orchestrator preempted
+    mid-flight (a ``MigrationAttempt`` pause token, possibly re-pointed
+    at a new destination)."""
 
     name = "base"
 
     def run(self, ctl, container, dest_node, *, runtime: str = "crx",
             fail_at: Optional[str] = None,
-            background: Optional[Callable] = None) -> MigrationReport:
+            background: Optional[Callable] = None,
+            preempt: Optional[Callable] = None) -> MigrationReport:
         raise NotImplementedError
 
     def resume(self, ctl, container, dest_node, attempt: Dict,
                rep: MigrationReport) -> MigrationReport:
         raise NotImplementedError
+
+    def resume_paused(self, ctl, container, dest_node,
+                      attempt: MigrationAttempt, rep: MigrationReport, *,
+                      background: Optional[Callable] = None,
+                      preempt: Optional[Callable] = None
+                      ) -> MigrationReport:
+        raise NotImplementedError
+
+    def _resume_stopped(self, ctl, container, dest_node, attempt, rep,
+                        install, *, preempt=None) -> MigrationReport:
+        """Shared ``resume_paused`` core for stopped-phase tokens: the
+        container is checkpoint-frozen and the complete image rides the
+        token, so resuming is re-streaming it (re-preemptible) and
+        installing. The service QP's learned wire state is re-applied
+        when the destination is unchanged (RTO/rate are path-learned —
+        a re-pointed attempt starts fresh)."""
+        fab = ctl.fabric
+        src_dev = container.ctx.device
+        dest_gid = dest_node.device.gid
+        if dest_gid == attempt.dest_gid and attempt.service_qp:
+            src_dev.service.apply_wire_state(dest_gid, attempt.service_qp)
+            attempt.service_qp = {}
+        t1 = fab.now
+        try:
+            moved = ctl.stream_image(src_dev, dest_gid, attempt.image,
+                                     runtime=attempt.runtime,
+                                     preempt=preempt)
+        except StreamPreempted as e:
+            rep.transfer_s += (fab.now - t1) * STEP_S
+            record_phase(fab, "transfer", t1, node=src_dev.gid,
+                         suspended=True)
+            if e.reason == "abort":
+                rep.stage_failed = "aborted"
+                rep.attempt = None
+                return rep
+            rep.stage_failed = "paused"
+            rep.preemptions += 1
+            attempt.dest_gid = dest_gid
+            attempt.reason = e.reason
+            attempt.paused_at = fab.now
+            attempt.service_qp = \
+                src_dev.service.take_suspend_state(dest_gid)
+            rep.attempt = attempt
+            return rep
+        rep.simulated_transfer_s += _sim_attempt_s(ctl, attempt)
+        rep.transfer_s += (fab.now - t1) * STEP_S
+        record_phase(fab, "transfer", t1, node=dest_gid, resumed=True)
+        t2 = fab.now
+        install(moved)
+        rep.restore_s += (fab.now - t2) * STEP_S
+        record_phase(fab, "restore", t2, node=dest_gid)
+        ctl.clear_cleanups(container)
+        container.alive = True
+        rep.ok = True
+        rep.stage_failed = None
+        rep.attempt = None
+        return rep
 
     def _stream_and_install(self, ctl, container, dest_node, attempt,
                             rep: MigrationReport, install) -> MigrationReport:
@@ -131,11 +232,11 @@ class StopAndCopy(MigrationStrategy):
     name = "stop_and_copy"
 
     def run(self, ctl, container, dest_node, *, runtime="crx", fail_at=None,
-            background=None):
+            background=None, preempt=None):
         # delegate to the controller so the flow (pump counts, staging,
         # image layout) is exactly the seed's
         return ctl.migrate(container, dest_node, runtime=runtime,
-                           fail_at=fail_at)
+                           fail_at=fail_at, preempt=preempt)
 
     def resume(self, ctl, container, dest_node, attempt, rep):
         def install(moved):
@@ -147,6 +248,20 @@ class StopAndCopy(MigrationStrategy):
         rep.pages_sent = rep.pages_total   # the retry moved every page
         rep.downtime_s = rep.total_s
         rep.simulated_downtime_s = rep.simulated_transfer_s
+        return rep
+
+    def resume_paused(self, ctl, container, dest_node, attempt, rep, *,
+                      background=None, preempt=None):
+        def install(moved):
+            ctl._teardown_source(container)
+            ctl._restore(container, moved, dest_node)
+
+        rep = self._resume_stopped(ctl, container, dest_node, attempt,
+                                   rep, install, preempt=preempt)
+        if rep.ok:
+            rep.pages_sent = rep.pages_total
+            rep.downtime_s = rep.total_s
+            rep.simulated_downtime_s = rep.simulated_transfer_s
         return rep
 
 
@@ -178,16 +293,13 @@ class PreCopy(MigrationStrategy):
                 ctl.fabric.pump()
 
     def run(self, ctl, container, dest_node, *, runtime="crx", fail_at=None,
-            background=None):
+            background=None, preempt=None):
         if dest_node is container.node:
             return MigrationReport(strategy="noop")
         rep = MigrationReport(strategy=self.name)
-        fab = ctl.fabric
         ctx = container.ctx
         src_dev = ctx.device
-        dest_gid = dest_node.device.gid
         mrs = list(ctx.mrs)
-        live_tick = background if background is not None else fab.pump
         ctl.run_cleanups(container)     # release any earlier dead attempt
         stream = src_dev.service.next_stream()
         # from the first streamed page on, the destination service holds
@@ -196,7 +308,6 @@ class PreCopy(MigrationStrategy):
         ctl.register_cleanup(container,
                              lambda: dest_svc.discard_stream(stream))
 
-        t_live = fab.now
         for mr in mrs:
             mr.start_dirty_tracking()
         # round 0: the full footprint streams to the destination's service
@@ -204,44 +315,123 @@ class PreCopy(MigrationStrategy):
         # exactly the pages touched while the copy was on the wire
         all_pages = [(mr, pg) for mr in mrs for pg in range(mr.n_pages)]
         rep.pages_total = len(all_pages)
-        r0 = fab.now
-        r0_bytes = _stream_pages(ctl, src_dev, dest_gid, stream, all_pages,
-                                 live_tick)
-        rep.pages_sent = len(all_pages)
-        rep.rounds.append({"round": 0, "pages": len(all_pages),
-                           "bytes": r0_bytes, "sim_s": r0_bytes / ctl.bw,
-                           "wire_s": (fab.now - r0) * STEP_S})
-        record_phase(fab, "precopy_round", r0, node=src_dev.gid,
-                     round=0, pages=len(all_pages), bytes=r0_bytes)
-        self._live(ctl, background)
+        st = {"stream": stream, "round": 0, "pending": all_pages,
+              "round_pages": 0, "round_bytes": 0, "round_steps": 0}
+        return self._rounds(ctl, container, dest_node, rep, st,
+                            runtime=runtime, fail_at=fail_at,
+                            background=background, preempt=preempt)
 
-        # iterative delta rounds: re-send only what got dirtied while the
-        # previous round's copy was in flight
+    def _rounds(self, ctl, container, dest_node, rep, st, *, runtime,
+                fail_at, background, preempt):
+        """Round engine shared by ``run`` and live-phase ``resume_paused``:
+        stream (the rest of) round ``st["round"]``, then iterate delta
+        rounds — re-sending only what got dirtied while the previous
+        round's copy was in flight — until the delta converges below the
+        threshold or the round cap. Any preemption verdict inside a round
+        yields a pause token carrying the split round's exact progress."""
+        fab = ctl.fabric
+        ctx = container.ctx
+        src_dev = ctx.device
+        dest_gid = dest_node.device.gid
+        mrs = list(ctx.mrs)
+        live_tick = background if background is not None else fab.pump
+        t_leg = fab.now
         residual = []
-        for rnd in range(1, self.max_rounds + 1):
+        while True:
+            pending = st["pending"]
+            rt = fab.now
+            try:
+                sent = _stream_pages(ctl, src_dev, dest_gid, st["stream"],
+                                     pending, live_tick, preempt=preempt)
+            except _RoundPreempted as e:
+                done = len(pending) - len(e.remaining)
+                st["pending"] = e.remaining
+                st["round_pages"] += done
+                st["round_bytes"] += e.sent_bytes
+                st["round_steps"] += fab.now - rt
+                rep.pages_sent += done
+                record_phase(fab, "precopy_round", rt, node=src_dev.gid,
+                             round=st["round"], suspended=True)
+                return self._yield(ctl, container, dest_node, rep, st,
+                                   e.reason, runtime, t_leg)
+            pages_rnd = st["round_pages"] + len(pending)
+            bytes_rnd = st["round_bytes"] + sent
+            rep.pages_sent += len(pending)
+            rep.rounds.append({"round": st["round"], "pages": pages_rnd,
+                               "bytes": bytes_rnd,
+                               "sim_s": bytes_rnd / ctl.bw,
+                               "wire_s": (st["round_steps"] +
+                                          fab.now - rt) * STEP_S})
+            record_phase(fab, "precopy_round", rt, node=src_dev.gid,
+                         round=st["round"], pages=pages_rnd,
+                         bytes=bytes_rnd)
+            self._live(ctl, background)
+            st["round"] += 1
+            st["round_pages"] = st["round_bytes"] = st["round_steps"] = 0
             dirty = [(mr, pg) for mr in mrs
                      for pg in sorted(mr.collect_dirty())]
             dirty_bytes = sum(_page_len(mr, pg) for mr, pg in dirty)
             if dirty_bytes <= self.threshold_bytes \
-                    or rnd == self.max_rounds:
+                    or st["round"] == self.max_rounds:
                 # converged (or round cap): fall back to stop-and-copy of
                 # exactly this residual
                 residual = dirty
                 break
-            rt = fab.now
-            _stream_pages(ctl, src_dev, dest_gid, stream, dirty, live_tick)
-            rep.pages_sent += len(dirty)
-            rep.rounds.append({"round": rnd, "pages": len(dirty),
-                               "bytes": dirty_bytes,
-                               "sim_s": dirty_bytes / ctl.bw,
-                               "wire_s": (fab.now - rt) * STEP_S})
-            record_phase(fab, "precopy_round", rt, node=src_dev.gid,
-                         round=rnd, pages=len(dirty), bytes=dirty_bytes)
-            self._live(ctl, background)
-        rep.live_s = (fab.now - t_live) * STEP_S
-        record_phase(fab, "live", t_live, node=src_dev.gid,
+            st["pending"] = dirty
+        rep.live_s += (fab.now - t_leg) * STEP_S
+        record_phase(fab, "live", t_leg, node=src_dev.gid,
                      rounds=len(rep.rounds))
+        return self._finish(ctl, container, dest_node, rep, st, residual,
+                            runtime=runtime, fail_at=fail_at,
+                            preempt=preempt)
 
+    def _yield(self, ctl, container, dest_node, rep, st, reason, runtime,
+               t_leg):
+        """Capture a live-phase pause token. The container keeps running —
+        dirty tracking stays armed, so pages touched while paused are
+        swept into the next delta collection — while the service stream
+        to the destination is suspended with its wire state snapshotted
+        into the token."""
+        fab = ctl.fabric
+        src_dev = container.ctx.device
+        dest_gid = dest_node.device.gid
+        svc = src_dev.service
+        rep.live_s += (fab.now - t_leg) * STEP_S
+        record_phase(fab, "live", t_leg, node=src_dev.gid, suspended=True)
+        rep.ok = False
+        if reason == "abort":
+            # nothing to park: the orchestrator's rollback stops dirty
+            # tracking and releases the staged pages via cleanups
+            rep.stage_failed = "aborted"
+            rep.attempt = None
+            return rep
+        if dest_gid in svc._peers:
+            # the preempt verdict landed at a batch boundary, so the
+            # stream was never torn mid-flight — suspend it here
+            svc.suspend_peer(dest_gid, reason)
+        svc._suspended.pop(dest_gid, None)
+        rep.stage_failed = "paused"
+        rep.preemptions += 1
+        rep.attempt = MigrationAttempt(
+            container=container.name, strategy=self.name, runtime=runtime,
+            src_gid=src_dev.gid, dest_gid=dest_gid, phase="live",
+            reason=reason, rounds_done=len(rep.rounds),
+            pages_sent=rep.pages_sent, stream=st["stream"],
+            pending=[(mr.mrn, pg) for mr, pg in st["pending"]],
+            round_pages=st["round_pages"], round_bytes=st["round_bytes"],
+            round_steps=st["round_steps"],
+            service_qp=svc.take_suspend_state(dest_gid),
+            paused_at=fab.now)
+        return rep
+
+    def _finish(self, ctl, container, dest_node, rep, st, residual, *,
+                runtime, fail_at, preempt):
+        fab = ctl.fabric
+        ctx = container.ctx
+        src_dev = ctx.device
+        dest_gid = dest_node.device.gid
+        mrs = list(ctx.mrs)
+        stream = st["stream"]
         # -- stop-the-world: residual pages + verbs state + user state ----
         t_stop = fab.now
         verbs_image = dumplib.dump_context(ctx, stop=True)       # [MIGR]
@@ -282,18 +472,47 @@ class PreCopy(MigrationStrategy):
             rep.attempt = {"image": bytes(image), "stream": stream,
                            "runtime": runtime}
             return rep
-        moved = ctl.stream_image(src_dev, dest_gid, image, runtime=runtime)
-        rep.transfer_s = (fab.now - t1) * STEP_S
+        try:
+            moved = ctl.stream_image(src_dev, dest_gid, image,
+                                     runtime=runtime, preempt=preempt)
+        except StreamPreempted as e:
+            # paused inside the stop window: the source QPs stay STOPPED
+            # (peers parked on NAK_STOPPED) and the residual image rides
+            # the token — the staged rounds stay put at the destination
+            container.alive = False
+            rep.ok = False
+            rep.transfer_s += (fab.now - t1) * STEP_S
+            record_phase(fab, "transfer", t1, node=src_dev.gid,
+                         suspended=True)
+            if e.reason == "abort":
+                rep.stage_failed = "aborted"
+                rep.attempt = None
+                return rep
+            rep.stage_failed = "paused"
+            rep.preemptions += 1
+            rep.attempt = MigrationAttempt(
+                container=container.name, strategy=self.name,
+                runtime=runtime, src_gid=src_dev.gid, dest_gid=dest_gid,
+                phase="stopped", reason=e.reason,
+                rounds_done=len(rep.rounds), pages_sent=rep.pages_sent,
+                stream=stream, image=bytes(image),
+                service_qp=src_dev.service.take_suspend_state(dest_gid),
+                paused_at=fab.now)
+            return rep
+        rep.transfer_s += (fab.now - t1) * STEP_S
         record_phase(fab, "transfer", t1, node=src_dev.gid,
                      bytes=len(image))
 
         t2 = fab.now
         staged = self._claim_staging(dest_node, stream)
         self._install(ctl, container, moved, staged, dest_node)
-        rep.restore_s = (fab.now - t2) * STEP_S
+        rep.restore_s += (fab.now - t2) * STEP_S
         record_phase(fab, "restore", t2, node=dest_gid)
         rep.downtime_s = rep.checkpoint_s + rep.transfer_s + rep.restore_s
         ctl.clear_cleanups(container)
+        rep.ok = True
+        rep.stage_failed = None
+        rep.attempt = None
         return rep
 
     def resume(self, ctl, container, dest_node, attempt, rep):
@@ -309,6 +528,78 @@ class PreCopy(MigrationStrategy):
         rep.simulated_downtime_s += _sim_transfer_s(ctl, attempt)
         rep.downtime_s = rep.checkpoint_s + rep.transfer_s + rep.restore_s
         return rep
+
+    def resume_paused(self, ctl, container, dest_node, attempt, rep, *,
+                      background=None, preempt=None):
+        fab = ctl.fabric
+        ctx = container.ctx
+        src_dev = ctx.device
+        dest_gid = dest_node.device.gid
+        if attempt.phase == "stopped":
+            if dest_gid != attempt.dest_gid:
+                # the staged rounds died with the old destination; the QPs
+                # are stopped so memory is static — fold the full footprint
+                # into the residual and point the stream at the new node
+                img = msgpack.unpackb(attempt.image, raw=False,
+                                      strict_map_key=False)
+                img["residual"] = {
+                    mr.mrn: {pg: _page(mr, pg)
+                             for pg in range(mr.n_pages)}
+                    for mr in ctx.mrs}
+                attempt.image = msgpack.packb(img, use_bin_type=True)
+                rep.image_bytes = len(attempt.image)
+                self._redirect_stream(ctl, container, dest_node, attempt)
+
+            def install(moved):
+                staged = self._claim_staging(dest_node, attempt.stream)
+                self._install(ctl, container, moved, staged, dest_node)
+
+            rep = self._resume_stopped(ctl, container, dest_node, attempt,
+                                       rep, install, preempt=preempt)
+            if rep.ok:
+                rep.simulated_downtime_s += _sim_attempt_s(ctl, attempt)
+                rep.downtime_s = rep.checkpoint_s + rep.transfer_s \
+                    + rep.restore_s
+            return rep
+        # live phase: the container never stopped — re-enter the round
+        # engine exactly where the split round yielded
+        if dest_gid != attempt.dest_gid:
+            # nothing staged survives the old destination: restart the
+            # current round over the full footprint (later delta rounds
+            # still shrink it — dirty tracking never stopped)
+            self._redirect_stream(ctl, container, dest_node, attempt)
+            pending = [(mr, pg) for mr in ctx.mrs
+                       for pg in range(mr.n_pages)]
+            st = {"stream": attempt.stream, "round": attempt.rounds_done,
+                  "pending": pending, "round_pages": 0, "round_bytes": 0,
+                  "round_steps": 0}
+        else:
+            if attempt.service_qp:
+                src_dev.service.apply_wire_state(dest_gid,
+                                                 attempt.service_qp)
+                attempt.service_qp = {}
+            mr_by_n = {mr.mrn: mr for mr in ctx.mrs}
+            st = {"stream": attempt.stream, "round": attempt.rounds_done,
+                  "pending": [(mr_by_n[mrn], pg)
+                              for mrn, pg in attempt.pending],
+                  "round_pages": attempt.round_pages,
+                  "round_bytes": attempt.round_bytes,
+                  "round_steps": attempt.round_steps}
+        return self._rounds(ctl, container, dest_node, rep, st,
+                            runtime=attempt.runtime, fail_at=None,
+                            background=background, preempt=preempt)
+
+    def _redirect_stream(self, ctl, container, dest_node, attempt):
+        """The original destination is gone (or drained): discard its
+        staged state via the registered cleanup and re-register against
+        the new destination's service channel."""
+        ctl.run_cleanups(container)
+        dest_svc = dest_node.device.service
+        stream = attempt.stream
+        ctl.register_cleanup(container,
+                             lambda: dest_svc.discard_stream(stream))
+        attempt.dest_gid = dest_node.device.gid
+        attempt.service_qp = {}
 
     @staticmethod
     def _claim_staging(dest_node, stream):
@@ -369,6 +660,10 @@ class DemandPager:
         self.faults = 0
         self.fault_bytes = 0
         self.simulated_pull_s = 0.0
+        # operator pause: background prefetch stops, but demand faults
+        # keep serving — a paused post-copy must never wedge the running
+        # destination container on an absent page
+        self.paused = False
 
     def capture(self, mrs):
         for mr in mrs:
@@ -431,6 +726,8 @@ class DemandPager:
 
     def prefetch(self, n_pages: int = 1) -> int:
         """Background pull of up to ``n_pages``; returns pages moved."""
+        if self.paused:
+            return 0
         moved = 0
         for mrn in list(self.mrs):
             mr = self.mrs.get(mrn)
@@ -464,7 +761,7 @@ class PostCopy(MigrationStrategy):
     name = "post_copy"
 
     def run(self, ctl, container, dest_node, *, runtime="crx", fail_at=None,
-            background=None):
+            background=None, preempt=None):
         if dest_node is container.node:
             return MigrationReport(strategy="noop")
         rep = MigrationReport(strategy=self.name)
@@ -516,8 +813,34 @@ class PostCopy(MigrationStrategy):
             rep.attempt = {"image": bytes(image), "pager": pager,
                            "runtime": runtime}
             return rep
-        moved = ctl.stream_image(src_dev, dest_gid, image, runtime=runtime)
-        rep.transfer_s = (fab.now - t1) * STEP_S
+        try:
+            moved = ctl.stream_image(src_dev, dest_gid, image,
+                                     runtime=runtime, preempt=preempt)
+        except StreamPreempted as e:
+            # paused inside the (short) stop window: the verbs image rides
+            # the token; the frozen page store stays parked in the source
+            # service channel, referenced by the stream cursor
+            container.alive = False
+            rep.ok = False
+            rep.transfer_s += (fab.now - t1) * STEP_S
+            record_phase(fab, "transfer", t1, node=src_dev.gid,
+                         suspended=True)
+            if e.reason == "abort":
+                rep.stage_failed = "aborted"
+                rep.attempt = None
+                return rep
+            rep.stage_failed = "paused"
+            rep.preemptions += 1
+            rep.attempt = MigrationAttempt(
+                container=container.name, strategy=self.name,
+                runtime=runtime, src_gid=src_dev.gid, dest_gid=dest_gid,
+                phase="stopped", reason=e.reason,
+                pages_sent=rep.pages_sent, stream=pager.stream,
+                image=bytes(image),
+                service_qp=src_dev.service.take_suspend_state(dest_gid),
+                paused_at=fab.now, refs={"pager": pager})
+            return rep
+        rep.transfer_s += (fab.now - t1) * STEP_S
         record_phase(fab, "transfer", t1, node=src_dev.gid,
                      bytes=len(image))
 
@@ -540,6 +863,42 @@ class PostCopy(MigrationStrategy):
         rep.simulated_downtime_s += _sim_transfer_s(ctl, attempt)
         rep.downtime_s = rep.total_s
         rep.pager = attempt["pager"]
+        return rep
+
+    def resume_paused(self, ctl, container, dest_node, attempt, rep, *,
+                      background=None, preempt=None):
+        src_dev = container.ctx.device
+        pager = attempt.refs.get("pager")
+        if pager is None:
+            # the token crossed a serialisation boundary: rebuild the
+            # pager around the kernel-parked page store. No page was
+            # installed before the pause (install is what drains pulls),
+            # so "everything missing" is exact.
+            pager = DemandPager(ctl.bw, service=src_dev.service,
+                                dest_gid=dest_node.device.gid,
+                                stream=attempt.stream)
+            store = src_dev.service.page_store.get(attempt.stream)
+            if store is not None:
+                pager.source = store
+                for mr in container.ctx.mrs:
+                    pager.missing[mr.mrn] = set(range(mr.n_pages))
+            else:
+                pager.capture(container.ctx.mrs)
+            ctl.clear_cleanups(container)
+            ctl.register_cleanup(container, pager.release)
+        pager.dest_gid = dest_node.device.gid
+        pager.report = rep
+        attempt.refs["pager"] = pager
+
+        def install(moved):
+            self._install(ctl, container, moved, pager, dest_node)
+
+        rep = self._resume_stopped(ctl, container, dest_node, attempt,
+                                   rep, install, preempt=preempt)
+        if rep.ok:
+            rep.simulated_downtime_s += _sim_attempt_s(ctl, attempt)
+            rep.downtime_s = rep.total_s
+            rep.pager = pager
         return rep
 
     def _install(self, ctl, container, image_bytes, pager, dest_node):

@@ -201,6 +201,22 @@ class SimCluster:
                 if min_rnr_timer is not None:
                     qp.min_rnr_timer = min_rnr_timer
 
+    def configure_preemption(self, enabled: bool = True, *,
+                             pause_util: float = 0.9,
+                             resume_util: float = 0.5,
+                             min_paused_steps: int = 200):
+        """Operator knob: auto-preemption of in-flight migrations, off
+        by default. Armed, the orchestrator pauses a migration at its
+        next round/page boundary when the source node's *application*
+        egress utilization (migration traffic excluded) exceeds
+        ``pause_util``, and the step loop resumes it once app load
+        drains below ``resume_util`` after at least ``min_paused_steps``
+        parked. Disarmed (the default), the migration path is
+        byte-identical to a preemption-free build."""
+        return self.orchestrator.configure_preemption(
+            enabled, pause_util=pause_util, resume_util=resume_util,
+            min_paused_steps=min_paused_steps)
+
     def migrate(self, name: str, dest_idx: int, *,
                 strategy: Optional[str] = None, **kw):
         """Migrate a container. ``strategy=None`` keeps the seed
@@ -214,6 +230,27 @@ class SimCluster:
             return self.migrator.migrate(c, dest, **kw)
         return self.orchestrator.migrate(c, dest, strategy=strategy, **kw)
 
+    # -- preemption (operator surface) ---------------------------------------
+    def pause_migration(self, name: str, *, at: Optional[int] = None):
+        """Pause ``name``'s in-flight (or queued) migration at its next
+        round/page boundary — or the first boundary at/after fabric step
+        ``at``. See ``Orchestrator.pause``."""
+        return self.orchestrator.pause(self.containers[name], at=at)
+
+    def resume_migration(self, name: str,
+                         dest_idx: Optional[int] = None):
+        """Resume ``name``'s paused migration, optionally re-pointing it
+        at node ``dest_idx`` (mandatory if the original destination was
+        drained from the fabric). See ``Orchestrator.resume``."""
+        dest = None if dest_idx is None else self.nodes[dest_idx]
+        return self.orchestrator.resume(self.containers[name], dest)
+
+    def abort_migration(self, name: str):
+        """Abort ``name``'s migration wherever it is in the lifecycle
+        (running, paused, or queued); the source container rolls back to
+        RTS. See ``Orchestrator.abort``."""
+        return self.orchestrator.abort(self.containers[name])
+
     def pump(self, steps: int = 1):
         self.fabric.pump(steps)
 
@@ -224,3 +261,5 @@ class SimCluster:
         for c in self.containers.values():
             c.step()
         self.pump()
+        if self.orchestrator.preemption is not None:
+            self.orchestrator.poll_preemption()

@@ -3,7 +3,9 @@ round-cap fallback, post-copy demand faulting, admission, queueing,
 retry-after-failed-transfer, and rollback (no leaked stopped QPs)."""
 import pytest
 
+from repro.core.migration import MigrationError
 from repro.core.states import QPState
+from repro.core.transport import STEP_S
 from repro.core.verbs import (PAGE_SIZE, CompletionQueue, CQOverrunError,
                               WCStatus, WorkCompletion)
 from repro.orchestrator import (AdmissionError, DemandPager, PreCopy,
@@ -311,6 +313,169 @@ def test_stop_and_copy_strategy_matches_seed_controller():
         return rep.image_bytes, ab.received, ab.sent
 
     assert scenario(None) == scenario("stop_and_copy")
+
+
+# ---------------------------------------------------------------------------
+# preemption: pause/resume/abort lifecycle, rollback, destination drain
+# ---------------------------------------------------------------------------
+
+
+def test_precopy_pause_mid_round_resume_preserves_image_and_accounting():
+    """Acceptance scenario: pre-copy paused mid-round with app traffic
+    still bursting, parked, resumed — the destination ends up with the
+    same memory image (planted pattern included) and the parked gap is
+    attributed to paused_s, never transfer_s."""
+    cl = SimCluster(3, link_bandwidth_Bps=1e8)    # slow wire: rounds span
+    aa, ab = make_sendbw_pair(cl)                 # many steps, so the
+    _run(cl, 50)                                  # deadline lands mid-round
+    ch = ab.channels[0]
+    pattern = b"\x5aPAUSE-RESUME" * 8
+    ch.h.mr(ch.mrn_send).write(0, pattern)        # app never writes here
+    cl.pause_migration("recv", at=cl.fabric.now + 5)
+    rep = cl.migrate("recv", 2, strategy="pre_copy")
+    assert not rep.ok and rep.attempt is not None
+    assert rep.attempt.phase == "live"            # yielded mid-round
+    assert cl.orchestrator.paused["recv"].req.state == "paused"
+    paused_at = rep.attempt.paused_at
+    _run(cl, 300)                                 # app burst while parked
+    resumed_at = cl.fabric.now
+    rep = cl.resume_migration("recv")
+    assert rep.ok and rep.preemptions >= 1
+    # the parked gap lands in paused_s — exactly, and nowhere else
+    assert rep.paused_s == pytest.approx(
+        (resumed_at - paused_at) * STEP_S, rel=1e-9)
+    assert rep.paused_s >= 300 * STEP_S
+    assert rep.transfer_s + rep.downtime_s < rep.paused_s
+    assert ch.h.ctx.device.gid == 2
+    assert ch.h.mr(ch.mrn_send).read(0, len(pattern)) == pattern
+    before = ab.received
+    _run(cl, 400)
+    assert ab.received > before
+
+
+def test_abort_while_paused_rolls_back_and_releases_budget():
+    """Aborting a parked migration rolls the source back to RTS in
+    place, settles the report into history, and releases the admission
+    state — a fresh migration of the same container is admitted and
+    completes."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    cl.pause_migration("recv", at=cl.fabric.now + 10)
+    rep = cl.migrate("recv", 2, strategy="pre_copy")
+    assert not rep.ok and "recv" in cl.orchestrator.paused
+    _run(cl, 100)
+    assert cl.abort_migration("recv")
+    assert "recv" not in cl.orchestrator.paused
+    settled = cl.orchestrator.history[-1]
+    assert settled.stage_failed == "aborted" and settled.rolled_back
+    assert settled.paused_s > 0.0
+    assert cl.containers["recv"].alive
+    _run(cl, 600)
+    assert _qp(aa).state == QPState.RTS
+    assert _qp(ab).state == QPState.RTS
+    assert ch_gid(ab) == 1                        # never moved
+    before = ab.received
+    _run(cl, 200)
+    assert ab.received > before                   # traffic recovered
+    rep2 = cl.migrate("recv", 2, strategy="pre_copy")
+    assert rep2.ok                                # budget released
+
+
+def test_abort_mid_round_rolls_back_to_source():
+    """An abort landing at an in-flight round boundary (not while
+    parked) rolls back: source QPs leave STOPPED, no attempt token
+    survives, and the container is re-migratable."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    orch = cl.orchestrator
+    base = orch.background
+    calls = {"n": 0}
+
+    def bg():
+        calls["n"] += 1
+        if calls["n"] == 8:
+            cl.abort_migration("recv")
+        base()
+
+    orch.background = bg
+    try:
+        rep = cl.migrate("recv", 2, strategy="pre_copy")
+    finally:
+        orch.background = base
+    assert not rep.ok and rep.stage_failed == "aborted"
+    assert rep.rolled_back and rep.attempt is None
+    assert "recv" not in orch.paused
+    _run(cl, 600)
+    assert _qp(aa).state == QPState.RTS
+    assert not [q for q in cl.containers["recv"].ctx.qps
+                if q.state == QPState.STOPPED]
+    assert ch_gid(ab) == 1
+    before = ab.received
+    _run(cl, 200)
+    assert ab.received > before
+    rep2 = cl.migrate("recv", 2, strategy="pre_copy")
+    assert rep2.ok
+
+
+def test_resume_after_destination_drain_needs_new_destination():
+    """Regression for draining a node mid-migration: the in-flight
+    transfer suspends with reason='detach' instead of tripping the
+    timeout-abort path, a blind resume is refused (original destination
+    gone), and a redirected resume lands the container on the new
+    node."""
+    cl = SimCluster(4)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    orch = cl.orchestrator
+    base = orch.background
+    calls = {"n": 0}
+
+    def bg():
+        calls["n"] += 1
+        if calls["n"] == 10:
+            cl.fabric.detach(2)               # drain the destination
+        base()
+
+    orch.background = bg
+    try:
+        rep = cl.migrate("recv", 2, strategy="pre_copy")
+    finally:
+        orch.background = base
+    assert not rep.ok and rep.attempt is not None
+    assert rep.attempt.reason == "detach"
+    _run(cl, 100)
+    with pytest.raises(MigrationError, match="left the fabric"):
+        cl.resume_migration("recv")
+    assert "recv" in orch.paused              # refusal left it parked
+    rep = cl.resume_migration("recv", dest_idx=3)
+    assert rep.ok
+    assert ch_gid(ab) == 3
+    before = ab.received
+    _run(cl, 400)
+    assert ab.received > before
+
+
+def test_pause_holds_queued_request_until_resumed():
+    """Pausing a still-queued request holds it across drain() without
+    executing it; resume re-queues and the next drain runs it."""
+    cl = SimCluster(3)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 50)
+    orch = cl.orchestrator
+    orch.submit(cl.containers["recv"], cl.nodes[2], strategy="pre_copy")
+    assert cl.pause_migration("recv")
+    assert orch.drain() == []                 # held, not executed
+    assert orch.queue[0].state == "held"
+    assert cl.resume_migration("recv") is None
+    reports = orch.drain()
+    assert len(reports) == 1 and reports[0].ok
+    assert ch_gid(ab) == 2
+
+
+def ch_gid(app):
+    return app.channels[0].h.ctx.device.gid
 
 
 # ---------------------------------------------------------------------------

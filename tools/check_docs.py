@@ -82,6 +82,7 @@ def check_core_docstrings() -> list:
 _KNOB_CLASSES = {
     "src/repro/runtime/cluster.py": "SimCluster",
     "src/repro/core/transport.py": "Fabric",
+    "src/repro/orchestrator/orchestrator.py": "Orchestrator",
 }
 
 
