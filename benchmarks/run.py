@@ -25,7 +25,7 @@ sys.path.insert(0, ROOT)
 from benchmarks import (fig7_overhead, fig8_shadow, fig9_creation,  # noqa
                         fig10_mr_reg, fig11_qps, fig13_training_migration,
                         fig_contention, fig_downtime, fig_ecn, fig_incast,
-                        fig_qos, roofline_table, table1_sloc,
+                        fig_pfc, fig_qos, roofline_table, table1_sloc,
                         table2_dump_sizes)
 
 MODULES = [
@@ -42,6 +42,7 @@ MODULES = [
     ("fig_qos", fig_qos),
     ("fig_incast", fig_incast),
     ("fig_ecn", fig_ecn),
+    ("fig_pfc", fig_pfc),
     ("roofline_table", roofline_table),
 ]
 

@@ -117,6 +117,17 @@ def dump_object(obj) -> dict:
             d["cc"] = obj.cc.dump(fab.now)
         if obj.cnps_sent:
             d["cnps_sent"] = obj.cnps_sent
+        # PFC: the sender's view of a paused peer (remaining pause
+        # steps per class toward this QP's destination) travels with
+        # the QP, so a migrated sender resumes *respecting* the pause
+        # instead of blasting into the still-congested receiver.
+        # Conditional key keeps PFC-off images byte-identical.  # [PFC]
+        fab = obj.device.fabric
+        if fab.pfc.enabled:
+            rem = fab.port(obj.device.gid).pfc_dump(obj.dest_gid,
+                                                    fab.now)
+            if rem:
+                d["pfc"] = rem
         return d
     raise TypeError(type(obj))
 
@@ -255,6 +266,12 @@ def restore_object(session: RestoreSession, cmd: str, entry: dict,
                     dev.fabric.ecn, entry["cc"], dev.fabric.now,
                     dev.fabric.bytes_per_step, dev.fabric.step_s())
             qp.cnps_sent = entry.get("cnps_sent", 0)
+            # pause latch toward the peer, re-armed on the new node's
+            # egress port (.get(): pre-PFC images)              # [PFC]
+            pfc_rem = entry.get("pfc")
+            if pfc_rem and dev.fabric.pfc.enabled:
+                dev.fabric.port(dev.gid).pfc_restore(
+                    qp.dest_gid, pfc_rem, dev.fabric.now)
             qp.sq = deque(session._rsend(w) for w in entry["sq"])
             qp.rq = deque(session._rrecv(w) for w in entry["rq"])
             qp.pending_comp = deque(tuple(t_) for t_ in

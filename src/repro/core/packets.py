@@ -27,6 +27,16 @@ class Op(enum.Enum):
     # CE-marked (congestion experienced) arrival with a CNP so the sender
     # cuts its rate before queues overflow into RNR NAKs / timeouts
     CNP = "CNP"                      # [ECN]
+    # PFC link-level flow control (802.1Qbb-style): an ingress queue
+    # crossing its per-class XOFF watermark answers with PAUSE frames
+    # toward its senders; UNPAUSE is the XON frame (the wire name
+    # ``RESUME`` is taken by the migration handshake above). The class
+    # rides the payload and the pause lifetime (in steps — the quanta
+    # field of a real PFC frame) rides ``length``. Link-level: these
+    # terminate at the receiving node's *egress port* latches and never
+    # reach a QP.
+    PAUSE = "PAUSE"                  # [PFC]
+    UNPAUSE = "UNPAUSE"              # [PFC]
     # service-channel (kernel QP) data plane: checkpoint images, pre-copy
     # page rounds, and post-copy demand pulls are streamed as ordinary
     # PSN-sequenced traffic and contend with app SEND/WRITE for links.
@@ -48,7 +58,15 @@ MIG_OPS = frozenset({Op.MIG_PAGE, Op.MIG_STATE, Op.MIG_ACK})
 # reason DCQCN gives them the highest priority class on real fabrics: a
 # congestion notification queued behind the congestion it reports is
 # useless.
-CTRL_OPS = frozenset({Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK, Op.CNP})
+CTRL_OPS = frozenset({Op.ACK, Op.NAK, Op.RESUME, Op.RESUME_ACK, Op.CNP,
+                      Op.PAUSE, Op.UNPAUSE})
+
+# PFC pause/resume frames: intercepted at the ingress boundary and
+# applied to the node's egress-port pause latches — a flow-control
+# signal queued behind the data it governs would be useless, so like
+# CNPs they bypass the bounded queue; unlike CNPs they are never
+# delivered to any QP.
+PFC_OPS = frozenset({Op.PAUSE, Op.UNPAUSE})
 
 # reliable *request* ops: an ingress-queue overflow on one of these draws
 # a receiver-not-ready NAK so the sender backs off (IBA RNR semantics)
@@ -68,7 +86,9 @@ for _op in Op:
     _op.is_mig = _op in MIG_OPS
     _op.is_ctrl = _op in CTRL_OPS
     _op.is_rnr = _op in RNR_OPS
-    _op.is_completer = _op in CTRL_OPS or _op is Op.READ_RESP
+    _op.is_pfc = _op in PFC_OPS
+    _op.is_completer = (_op in CTRL_OPS or _op is Op.READ_RESP) \
+        and _op not in PFC_OPS
 del _op
 
 

@@ -47,6 +47,19 @@ reaction point does DCQCN multiplicative decrease / additive+hyper
 increase on its send rate, enforced at send admission ahead of the
 tenant token bucket. Disabled by default: no marking, no CNPs, no rate
 state — the wire model is byte-identical to the ECN-less one.
+
+The last layer is **PFC link-level flow control** (``PFCConfig``,
+802.1Qbb-style, the lossless-RoCE substrate the paper's §5 zero-overhead
+argument assumes): when a bounded ingress queue crosses a traffic
+class's XOFF occupancy watermark, the port answers its senders with
+per-class ``PAUSE`` frames; crossing back below XON sends ``UNPAUSE``.
+Senders latch the pause per (destination, class) on their egress port
+and hold that class's packets off the wire until the XON frame — or the
+frame's own lifetime — releases them, so in lossless mode nothing
+overflows and congestion feedback rides ECN/CNP alone (the DCQCN + PFC
+deployment stack). Disabled by default: no watermarks are evaluated, no
+latch ever exists, and the wire model is byte-identical to the PFC-less
+fabric.
 """
 from __future__ import annotations
 
@@ -209,6 +222,14 @@ class ECNConfig:
     kmin: float = 0.8
     kmax: float = 1.0
     pmax: float = 0.2
+    # per-traffic-class (kmin, kmax, pmax) overrides — real DCQCN+PFC
+    # deployments run *per-priority* ECN: shallow thresholds for
+    # latency-sensitive app flows (mark early, keep queues short), deep
+    # thresholds for migration bulk (tolerate standing queue, keep
+    # throughput). Classes not listed fall back to the flat knobs above;
+    # ``None`` (default) is the flat single-threshold model,
+    # byte-identical to the pre-per-class fabric.
+    per_class: Optional[Dict[str, Tuple[float, float, float]]] = None
     # egress ports have no hard queue bound, so occupancy is measured
     # against this reference backlog; ingress occupancy uses the port's
     # own queue_bytes bound
@@ -249,17 +270,38 @@ class ECNConfig:
                         ("min_rate_Bps", self.min_rate_Bps)):
             if v is not None and v <= 0:
                 raise ValueError(f"{name} must be > 0 (or None)")
+        if self.per_class is not None:
+            for cname, t in self.per_class.items():
+                if len(t) != 3:
+                    raise ValueError(f"per_class[{cname!r}] must be "
+                                     f"(kmin, kmax, pmax)")
+                km, kx, pm = t
+                if not (0.0 <= km <= kx):
+                    raise ValueError(f"per_class[{cname!r}]: need "
+                                     f"0 <= kmin <= kmax")
+                if not (0.0 < pm <= 1.0):
+                    raise ValueError(f"per_class[{cname!r}]: pmax must "
+                                     f"be in (0, 1]")
         return self
 
-    def mark_probability(self, occupancy: float) -> float:
+    def mark_probability(self, occupancy: float,
+                         cls: Optional[str] = None) -> float:
         """RED curve: 0 below kmin, linear ramp to pmax at kmax, 1 at or
-        above kmax (the queue is effectively full — mark everything)."""
-        if occupancy < self.kmin:
+        above kmax (the queue is effectively full — mark everything).
+        With ``per_class`` thresholds configured, ``cls`` selects that
+        class's (kmin, kmax, pmax) triple; unknown/None classes use the
+        flat knobs — the exact pre-per-class arithmetic."""
+        kmin, kmax, pmax = self.kmin, self.kmax, self.pmax
+        if cls is not None and self.per_class is not None:
+            t = self.per_class.get(cls)
+            if t is not None:
+                kmin, kmax, pmax = t
+        if occupancy < kmin:
             return 0.0
-        if occupancy >= self.kmax:
+        if occupancy >= kmax:
             return 1.0
-        span = max(self.kmax - self.kmin, 1e-12)
-        return self.pmax * (occupancy - self.kmin) / span
+        span = max(kmax - kmin, 1e-12)
+        return pmax * (occupancy - kmin) / span
 
 
 def maybe_mark(fabric, rng, pkt: Packet, occupancy: float,
@@ -270,17 +312,87 @@ def maybe_mark(fabric, rng, pkt: Packet, occupancy: float,
     stream; it is only consulted inside the ramp (0 < p < 1)."""
     if not pkt.ect or pkt.ce:
         return False
-    p = fabric.ecn.mark_probability(occupancy)
+    cls = classify(pkt)
+    p = fabric.ecn.mark_probability(occupancy, cls)
     if p <= 0.0:
         return False
     if p < 1.0 and rng.random() >= p:
         return False
     pkt.ce = True
-    fabric.metrics.inc("ecn_marked", gid=gid, cls=classify(pkt))
+    fabric.metrics.inc("ecn_marked", gid=gid, cls=cls)
     trc = fabric.tracer
     if trc is not None:
         trc.ecn_mark(fabric.now, pkt, gid, where, occupancy)
     return True
+
+
+# ---------------------------------------------------------------------------
+# PFC link-level flow control (802.1Qbb-style)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class PFCConfig:
+    """Operator knobs for per-class link-level pause (the lossless-RoCE
+    substrate: docs/fabric-qos.md has the operator table).
+
+    ``enabled=False`` (default) turns the subsystem off completely: no
+    watermark is ever evaluated, no PAUSE frame exists on the wire, no
+    latch is allocated — byte-identical to the PFC-less fabric.
+
+    Enabling PFC switches the fabric to **lossless mode**: a bounded
+    ingress queue stops dropping reliable requests on overflow (real PFC
+    reserves headroom for the packets already in flight when XOFF fires;
+    we waive the hard bound the same way) and the RNR-NAK rate-cut path
+    in ``CongestionControl`` goes inert — congestion feedback rides
+    ECN/CNP alone, the DCQCN-over-PFC deployment stack.
+
+    Watermarks are fractions of the ingress queue bound (``backlog /
+    queue_bytes``): class ``c`` pauses its senders when its occupancy
+    reaches ``xoff[c]`` and releases them when it falls to ``xon[c]``.
+    With QoS class queues enabled each class is judged on its OWN
+    backlog (802.1Qbb pauses on the priority's buffer usage — another
+    priority's standing queue must never hold a latch closed); in
+    single-FIFO mode there is only the shared counter, so every class
+    reads total occupancy — global-pause semantics. Defaults pause the
+    app class first (shallower XOFF) so migration bulk keeps flowing a
+    little longer before the link quiets entirely.
+    """
+    enabled: bool = False
+    # per-class XOFF/XON occupancy watermarks (fractions of queue_bytes);
+    # classes not listed are never paused
+    xoff: Dict[str, float] = field(default_factory=lambda: {
+        CLASS_APP: 0.60, CLASS_MIG: 0.75})
+    xon: Dict[str, float] = field(default_factory=lambda: {
+        CLASS_APP: 0.35, CLASS_MIG: 0.45})
+    # lifetime of one PAUSE frame, in steps (the quanta field of a real
+    # 802.1Qbb frame): a latch whose XON frame is lost — or whose issuer
+    # departed mid-pause — self-releases after this long, which is the
+    # progress guarantee against permanent pause deadlock
+    pause_steps: int = 512
+    # while occupancy stays above XOFF, the ingress re-broadcasts PAUSE
+    # this often so latches are refreshed before they expire
+    refresh_steps: int = 256
+
+    def validate(self) -> "PFCConfig":
+        for cname, hi in self.xoff.items():
+            lo = self.xon.get(cname)
+            if lo is None:
+                raise ValueError(f"xoff[{cname!r}] has no xon watermark")
+            if not (0.0 < lo < hi <= 1.0):
+                raise ValueError(f"class {cname!r}: need "
+                                 f"0 < xon < xoff <= 1, got "
+                                 f"xon={lo} xoff={hi}")
+        for cname in self.xon:
+            if cname not in self.xoff:
+                raise ValueError(f"xon[{cname!r}] has no xoff watermark")
+        if self.pause_steps < 2:
+            raise ValueError("pause_steps must be >= 2")
+        if not (0 < self.refresh_steps < self.pause_steps):
+            raise ValueError("need 0 < refresh_steps < pause_steps "
+                             "(a refresh after expiry is a gap, not a "
+                             "refresh)")
+        return self
 
 
 class CongestionControl:
@@ -407,7 +519,10 @@ class CongestionControl:
         overflowed; marking should have slowed us sooner), and a flow
         whose packets all drop at admission never gets CE feedback at
         all, so without this the incast losers would starve while the
-        winners get politely rate-controlled."""
+        winners get politely rate-controlled. On a lossless (PFC)
+        fabric the RNR caller gates this path off: nothing overflows
+        there, every packet earns CE feedback, and a spurious RNR cut
+        would double-punish below the CNP-derived rate."""
         self.rate_cuts += 1
         cfg = self.cfg
         self.alpha = (1.0 - cfg.g) * self.alpha + cfg.g
@@ -609,6 +724,10 @@ class EgressPort:
         # pressure and pause the migration against itself.
         self._mig_window: Deque[Tuple[int, int]] = deque()
         self._mig_bytes = 0
+        # PFC pause latches: (dest gid, class) -> latch expiry step. The
+        # dict is empty whenever PFC is off, so every hot-path
+        # consultation is a single falsy-dict test.
+        self._pfc_until: Dict[Tuple[int, str], int] = {}
         self._build_classes()
 
     # -- configuration -------------------------------------------------------
@@ -764,11 +883,18 @@ class EgressPort:
         buckets would let on the wire right now."""
         if not cq.backlog_packets:
             return False
+        pfc = self._pfc_until
         for t in cq.order:
             q = cq.tenants.get(t)
             if not q:
                 continue
-            n = q[0].nbytes()
+            pkt = q[0]
+            if pfc and not pkt.op.is_pfc and pfc.get(
+                    (pkt.dest_gid,
+                     CLASS_MIG if pkt.op.is_mig else CLASS_APP),
+                    0) > now:
+                continue            # PFC-paused toward this destination
+            n = pkt.nbytes()
             if cq.bucket is not None and not cq.bucket.peek(n, now):
                 return False        # class cap gates every tenant in it
             b = self._bucket(t)
@@ -781,6 +907,7 @@ class EgressPort:
         tenants while the DRR deficit covers them; returns packets sent."""
         sent = 0
         progress = True
+        pfc = self._pfc_until
         while progress and cq.backlog_packets:
             progress = False
             for _ in range(len(cq.order)):
@@ -790,6 +917,11 @@ class EgressPort:
                 if not q:
                     continue
                 pkt = q[0]
+                if pfc and not pkt.op.is_pfc and pfc.get(
+                        (pkt.dest_gid,
+                         CLASS_MIG if pkt.op.is_mig else CLASS_APP),
+                        0) > now:
+                    continue        # PFC-paused toward this destination
                 n = pkt.nbytes()
                 if cq.deficit < n:
                     continue
@@ -853,13 +985,33 @@ class EgressPort:
             if budget <= 1e-9:
                 return
             cq = self._class_list[0]
+            q = cq.tenants.get(UNATTRIBUTED)
+            pfc = self._pfc_until
+            if pfc and q:
+                pkt = q[0]
+                if not pkt.op.is_pfc and pfc.get(
+                        (pkt.dest_gid,
+                         CLASS_MIG if pkt.op.is_mig else CLASS_APP),
+                        0) > now:
+                    # PFC-paused head: the single FIFO has no
+                    # per-priority lanes, so the pause head-of-line
+                    # blocks the whole port (the classic PFC HoL
+                    # failure mode, docs/fabric-qos.md). The event-
+                    # driven pump skips these steps wholesale, so this
+                    # call must stay a strict no-op: no budget granted,
+                    # the stored deficit untouched.
+                    return
             # deficit rides a local: most calls only accumulate (the
             # head packet outweighs one step's budget), and the float
             # op order is unchanged — one add, one subtract per packet
             d = cq.deficit + budget
-            q = cq.tenants.get(UNATTRIBUTED)
             while q:
                 pkt = q[0]
+                if pfc and not pkt.op.is_pfc and pfc.get(
+                        (pkt.dest_gid,
+                         CLASS_MIG if pkt.op.is_mig else CLASS_APP),
+                        0) > now:
+                    break           # pause latched mid-drain: HoL stop
                 n = 64 + len(pkt.payload)   # pkt.nbytes(), inlined
                 if d < n:
                     break
@@ -894,6 +1046,116 @@ class EgressPort:
                    self.fabric.bytes_per_step,
                    lambda cq: self._eligible_head(cq, now),
                    lambda cq: self._drain_class(cq, now))
+
+    # -- PFC pause latches ---------------------------------------------------
+    def pfc_frame(self, pkt: Packet, now: int):
+        """Apply one PAUSE/UNPAUSE frame addressed to this node: the
+        frame's ``src_gid`` is the congested ingress that emitted it, so
+        the latch holds *our* traffic toward that node, for the class in
+        the payload, until the frame's lifetime (``length`` — the quanta
+        field) runs out or an UNPAUSE releases it. Link-level: frames
+        terminate here and never reach a QP."""
+        cls = pkt.payload.decode()
+        key = (pkt.src_gid, cls)
+        fab = self.fabric
+        if pkt.op is Op.PAUSE:
+            # commit/refund accounting: charge the frame's whole
+            # lifetime now (a refresh charges only the extension), and
+            # refund the unused tail on early release. Totals come out
+            # as latched-step spans, but every adjustment happens at a
+            # frame event — delivered identically by both pump cores —
+            # so an expired latch nobody touches again is already fully
+            # accounted and needs no lazy close.
+            new_until = now + pkt.length
+            until = self._pfc_until.get(key)
+            charge = pkt.length if until is None or until <= now \
+                else new_until - until
+            if charge > 0:
+                fab.metrics.inc("pfc_paused_steps", charge,
+                                gid=self.gid)
+            if until is None or new_until > until:
+                self._pfc_until[key] = new_until
+        elif key in self._pfc_until:
+            self._pfc_release(key, now)
+
+    def _pfc_release(self, key: Tuple[int, str], now: int):
+        """Drop one latch, refunding the committed-but-unused tail of
+        its lifetime (time past expiry was never charged)."""
+        until = self._pfc_until.pop(key)
+        refund = until - now
+        if refund > 0:
+            self.fabric.metrics.inc("pfc_paused_steps", -refund,
+                                    gid=self.gid)
+
+    def pfc_clear(self, now: int):
+        """Release every latch (PFC disabled mid-run)."""
+        for key in list(self._pfc_until):
+            self._pfc_release(key, now)
+
+    def pfc_blocked_until(self, now: int) -> int:
+        """Earliest step this port's backlog could move again, or
+        ``now`` when it is not *provably* pause-blocked. The event-
+        driven pump may only skip a service call that is a strict
+        no-op, so any unpaused head packet, any queued PFC frame, or
+        any configuration whose service call advances bucket or counter
+        state forces ``now``."""
+        pfc = self._pfc_until
+        if not pfc or not self.backlog_packets:
+            return now
+        cfg = self.cfg
+        if cfg.enabled and (cfg.migration_cap is not None
+                            or cfg.tenant_rate_Bps
+                            or cfg.default_tenant_rate_Bps is not None):
+            # service() consults token buckets (whose refill float-op
+            # order is per-call) and counts per-step deferrals — a
+            # blocked call is not a no-op under those knobs
+            return now
+        blocked: Optional[int] = None
+        for cq in self._class_list:
+            if not cq.backlog_packets:
+                continue
+            for t in cq.order:
+                q = cq.tenants.get(t)
+                if not q:
+                    continue
+                pkt = q[0]
+                if pkt.op.is_pfc:
+                    return now      # PFC frames are never paused
+                until = pfc.get(
+                    (pkt.dest_gid,
+                     CLASS_MIG if pkt.op.is_mig else CLASS_APP), 0)
+                if until <= now:
+                    return now
+                if blocked is None or until < blocked:
+                    blocked = until
+        return now if blocked is None else blocked
+
+    def pfc_dump(self, dest_gid: int, now: int) -> Dict[str, int]:
+        """Remaining pause steps per class toward one destination —
+        the slice of latch state that travels in a QP dump (§3.4: the
+        sender's view of a paused peer must survive migration)."""
+        out: Dict[str, int] = {}
+        for (dgid, cls), until in self._pfc_until.items():
+            if dgid == dest_gid and until > now:
+                out[cls] = until - now
+        return out
+
+    def pfc_restore(self, dest_gid: int, spans: Dict[str, int],
+                    now: int):
+        """Re-arm latches from a dump on the destination node's port: a
+        migrated QP resumes *respecting* the pause its old node had
+        latched, instead of blasting into the still-congested peer."""
+        for cls, rem in spans.items():
+            key = (dest_gid, cls)
+            until = now + int(rem)
+            old = self._pfc_until.get(key)
+            if old is None or old < until:
+                charge = int(rem) if old is None or old <= now \
+                    else until - old
+                if charge > 0:
+                    self.fabric.metrics.inc("pfc_paused_steps", charge,
+                                            gid=self.gid)
+                self._pfc_until[key] = until
 
     # -- delivery ------------------------------------------------------------
     def pop_due(self, now: int):
@@ -932,6 +1194,12 @@ class EgressPort:
         fl = self.flows.pop(gid, None)
         if fl is not None:
             fl.queued_bytes = 0
+        if self._pfc_until:
+            # the departed node's pauses die with it (a real peer that
+            # vanished can never send the XON frame; its latches would
+            # only ride out their lifetime anyway)
+            for key in [k for k in self._pfc_until if k[0] == gid]:
+                self._pfc_release(key, self.fabric.now)
         return dropped
 
 
@@ -1015,6 +1283,9 @@ class IngressPort:
         self._rnr_mute: Dict[Tuple[int, int], int] = {}
         #   ^ (src_gid, src_qpn) -> step until which further RNR NAKs
         #     for that sender are suppressed
+        # PFC: classes this queue has XOFF'd, mapped to the step at
+        # which the PAUSE broadcast is refreshed (empty when PFC is off)
+        self._pfc_latched: Dict[str, int] = {}
         # Order-aware admission state (the NIC owns both this port and
         # the destination QP contexts, so reading the responder's epsn
         # at line rate is exactly what real RNICs do):
@@ -1060,6 +1331,11 @@ class IngressPort:
             self.backlog_packets = 0
             self._inq.clear()
             self._run.clear()
+            if self._pfc_latched:
+                # an unlimited queue can never sit above XON again:
+                # release the senders now instead of making them ride
+                # out the latch lifetime
+                self._pfc_check_xon(self.fabric.now)
 
     def _push(self, pkt: Packet):
         cls = classify(pkt) if self.qos.enabled else CLASS_APP
@@ -1101,6 +1377,12 @@ class IngressPort:
 
     # -- arrival (wire latency expired) --------------------------------------
     def enqueue(self, pkt: Packet, now: int):
+        if pkt.op.is_pfc:
+            # link-level flow control terminates at the port boundary:
+            # the frame programs this node's *egress* pause latches and
+            # is never delivered, queued, or counted in the rx window
+            self.fabric.port(self.gid).pfc_frame(pkt, now)
+            return
         n = 64 + len(pkt.payload)       # pkt.nbytes(), inlined (hot)
         # utilization-window upkeep with _trim(now) inlined (per packet)
         w = self._window
@@ -1163,8 +1445,14 @@ class IngressPort:
                     trc.ingress_drop(now, pkt, self.gid, "dup_queued")
                 return
         if self.backlog_bytes + n > self.cfg.queue_bytes:
-            self._drop(pkt, now)
-            return
+            if not fab.pfc.enabled:
+                self._drop(pkt, now)
+                return
+            # lossless mode: real PFC reserves headroom above XOFF for
+            # the packets already serialised when the pause fired; we
+            # waive the hard bound the same way and admit the packet —
+            # the XOFF broadcast below is what stops the influx
+            fab.metrics.inc("pfc_headroom_admits", gid=self.gid)
         if epsn is not None and pkt.psn == exp:
             self._run[key] = exp + 1
         self._inq[key] = self._inq.get(key, 0) + 1
@@ -1184,6 +1472,82 @@ class IngressPort:
                           where="ingress"):
                 self._mark_window.append((now, n))
                 self._mark_bytes += n
+        if fab.pfc.enabled:
+            self._pfc_check_xoff(now)
+
+    # -- PFC watermark machinery ---------------------------------------------
+    def _pfc_occupancy(self, cls: str) -> float:
+        """Occupancy a class's watermarks are judged against. With QoS
+        class queues this is the class's OWN backlog (802.1Qbb pauses on
+        the priority's buffer usage — another priority's standing queue
+        must not hold this one's latch closed, or a sustained app incast
+        would starve the migration class forever). In single-FIFO mode
+        there is only the shared counter, so every class reads total
+        occupancy — global-pause semantics, with the HoL caveat the
+        docs spell out."""
+        if self.qos.enabled:
+            cq = self.classes.get(cls)
+            if cq is None:
+                return 0.0
+            return cq.backlog_bytes / self.cfg.queue_bytes
+        return self.backlog_bytes / self.cfg.queue_bytes
+
+    def _pfc_check_xoff(self, now: int):
+        """Pause any class whose XOFF watermark its queue has crossed,
+        and refresh latches still above XON before their lifetime runs
+        out."""
+        pfc = self.fabric.pfc
+        latched = self._pfc_latched
+        for cls, hi in pfc.xoff.items():
+            occ = self._pfc_occupancy(cls)
+            refresh_at = latched.get(cls)
+            if refresh_at is None:
+                if occ >= hi:
+                    latched[cls] = now + pfc.refresh_steps
+                    self._pfc_broadcast(Op.PAUSE, cls, now, occ)
+            elif now >= refresh_at and occ > pfc.xon[cls]:
+                # still above XON at refresh time: keep senders latched
+                # through the hysteresis band (a lapsed latch here would
+                # re-fill the queue and oscillate — the pause storm)
+                latched[cls] = now + pfc.refresh_steps
+                self._pfc_broadcast(Op.PAUSE, cls, now, occ)
+
+    def _pfc_check_xon(self, now: int):
+        """Release any latched class whose XON watermark its drained
+        queue has fallen back to (called on every service exit path, so
+        the call that empties the queue always releases)."""
+        pfc = self.fabric.pfc
+        if not pfc.enabled:
+            self._pfc_latched.clear()   # disabled mid-run: forget
+            return
+        for cls in [c for c in sorted(self._pfc_latched)
+                    if self._pfc_occupancy(c) <= pfc.xon.get(c, 1.0)]:
+            del self._pfc_latched[cls]
+            self._pfc_broadcast(Op.UNPAUSE, cls, now,
+                                self._pfc_occupancy(cls))
+
+    def _pfc_broadcast(self, op: Op, cls: str, now: int, occ: float):
+        """Send one PAUSE/UNPAUSE frame to every node that has ever sent
+        to us (sorted for determinism). The frames ride the ordinary
+        egress + latency wire path — flow control is not magic; a pause
+        can itself be delayed behind the congestion it answers."""
+        fab = self.fabric
+        targets = sorted(g for g, p in fab._ports.items()
+                         if g != self.gid and self.gid in p.flows)
+        pause = op is Op.PAUSE
+        length = fab.pfc.pause_steps if pause else 0
+        name = "pfc_pause_frames" if pause else "pfc_resume_frames"
+        for g in targets:
+            fab.metrics.inc(name, gid=self.gid)
+            fab.send(Packet(op=op, src_gid=self.gid, src_qpn=0,
+                            dest_gid=g, dest_qpn=0,
+                            payload=cls.encode(), length=length))
+        trc = fab.tracer
+        if trc is not None:
+            if pause:
+                trc.pfc_pause(now, self.gid, cls, occ, len(targets))
+            else:
+                trc.pfc_resume(now, self.gid, cls, occ, len(targets))
 
     def _qp_epsn(self, pkt: Packet) -> Optional[int]:
         """Responder epsn of the destination QP, or None when order is
@@ -1293,9 +1657,13 @@ class IngressPort:
             if d > 0 and not cq.backlog_packets:
                 d = 0.0             # reclaimed, then discarded unused
             cq.deficit = d
+            if self._pfc_latched:
+                self._pfc_check_xon(now)
             return
         _drr_spend(self._class_list, self.rx_bytes_per_step,
                    lambda cq: cq.backlog_packets > 0, self._drain)
+        if self._pfc_latched:
+            self._pfc_check_xon(now)
 
     def _drain(self, cq: _ClassQueue) -> int:
         sent = 0
@@ -1304,13 +1672,23 @@ class IngressPort:
             progress = False
             for _ in range(len(cq.order)):
                 t = cq.order[0]
-                cq.order.rotate(-1)
                 q = cq.tenants.get(t)
                 if not q:
+                    cq.order.rotate(-1)
                     continue
                 n = q[0].nbytes()
                 if cq.deficit < n:
-                    continue
+                    # out of budget at THIS tenant: stop with the
+                    # round-robin pointer parked here, so the deficit
+                    # that accumulates across service calls belongs to
+                    # it. The old shape (rotate on every check, full
+                    # net rotation per pass) restarted each call at the
+                    # same head tenant — in the sub-packet-per-step
+                    # budget regime that starved everyone else forever
+                    # once losses stopped interfering (PFC lossless
+                    # mode made it reproducible).
+                    return sent
+                cq.order.rotate(-1)
                 pkt = q.popleft()
                 cq.backlog_packets -= 1
                 cq.backlog_bytes -= n
@@ -1337,4 +1715,8 @@ class IngressPort:
         self.fabric._in_flight -= dropped
         self._inq.clear()
         self._run.clear()
+        # departed node: no UNPAUSE broadcast — its senders' latches
+        # self-release when their lifetime runs out (the progress
+        # guarantee against a vanished pause issuer)
+        self._pfc_latched.clear()
         return dropped

@@ -522,11 +522,17 @@ def _handle_rnr_nak(qp, pkt: Packet):
     # A flow whose packets drop at the ingress queue never sees CE
     # marks (they ride *delivered* packets), so the RNR NAK is its only
     # feedback; cut the reaction point like a CNP would.        # [ECN]
+    # On a lossless (PFC) fabric nothing overflows, so an RNR NAK here
+    # is spurious — a straggler from before configure_pfc, or replayed
+    # out of a pre-PFC dump. Every delivered packet still earns CE/CNP
+    # feedback, and cutting on top of that would double-punish the flow
+    # below its CNP-derived rate: the cut path is inert.        # [PFC]
+    fab = qp.device.fabric
     cc = _ensure_cc(qp)
-    if cc is not None:
-        cc.advance(now, qp.device.fabric.bytes_per_step)
+    if cc is not None and not fab.pfc.enabled:
+        cc.advance(now, fab.bytes_per_step)
         cc.cut(now)
-        trc = qp.device.fabric.tracer
+        trc = fab.tracer
         if trc is not None:
             trc.rate_change(now, qp.device.gid, qp.qpn, cc.rc, cc.rt,
                             cc.alpha, "rnr")

@@ -66,6 +66,15 @@ packets as their queues fill, responders answer Congestion-Experienced
 arrivals with CNPs, and each QP's DCQCN reaction point paces its sends
 — so congestion is resolved by rate adaptation *before* the
 overflow/RNR/timeout machinery has to fire.
+
+With PFC enabled (``configure_pfc``), the fabric is *lossless*: an
+ingress queue crossing a class's XOFF watermark broadcasts per-class
+PAUSE frames, senders latch the pause per (destination, class) on their
+egress ports, and overflow stops dropping reliable requests (headroom
+semantics) — congestion feedback rides ECN/CNP alone. A fully
+pause-blocked egress port leaves the active set; ``_next_event_time``
+covers the latch-expiry deadline so a lost XON can never park the pump
+past the pause lifetime.
 """
 from __future__ import annotations
 
@@ -74,7 +83,8 @@ from typing import Dict, List, Optional
 
 from repro.core.packets import MIG_OPS, Packet
 from repro.core.qos import (CLASS_APP, CLASS_MIG, ECNConfig, EgressPort,
-                            IngressConfig, IngressPort, QoSConfig)
+                            IngressConfig, IngressPort, PFCConfig,
+                            QoSConfig)
 from repro.obs.metrics import MetricsRegistry
 
 # sim-time -> wall-time conversion: one fabric pump step models roughly a
@@ -94,7 +104,8 @@ class Fabric:
                  latency_steps: int = 1, bandwidth_Bps: float = 40e9 / 8,
                  qos: Optional[QoSConfig] = None,
                  ingress: Optional[IngressConfig] = None,
-                 ecn: Optional[ECNConfig] = None):
+                 ecn: Optional[ECNConfig] = None,
+                 pfc: Optional[PFCConfig] = None):
         self.loss_prob = loss_prob
         self.seed = seed            # ports derive their ECN-marking rngs
         self.rng = random.Random(seed)
@@ -103,6 +114,7 @@ class Fabric:
         self.qos = (qos or QoSConfig()).validate()
         self.ingress_default = (ingress or IngressConfig()).validate()
         self.ecn = (ecn or ECNConfig()).validate()
+        self.pfc = (pfc or PFCConfig()).validate()
         self.utilization_window = UTILIZATION_WINDOW
         self._ports: Dict[int, EgressPort] = {}       # src gid -> port
         self._ingress: Dict[int, IngressPort] = {}    # dest gid -> port
@@ -256,6 +268,24 @@ class Fabric:
         # away (no-op when it was disabled: nothing ever advanced)
         self._advance_all_cc(self.bytes_per_step)
         self.ecn = ecn.validate()
+        self._wake_all()
+
+    # -- PFC (link-level flow control) ---------------------------------------
+    def configure_pfc(self, pfc: PFCConfig):
+        """Operator knob: swap the fabric-wide PFC config (per-class
+        XOFF/XON watermarks, pause lifetime). Enabling makes the fabric
+        lossless — ingress overflow admits instead of dropping, and the
+        RNR rate-cut path in ``CongestionControl`` goes inert. Disabling
+        releases every pause latch immediately (accounting their spans)
+        and forgets ingress XOFF state; in-flight PAUSE frames still
+        deliver but latch nothing new once applied latches are cleared —
+        their lifetime bounds any straggler."""
+        self.pfc = pfc.validate()
+        if not self.pfc.enabled:
+            for port in self._ports.values():
+                port.pfc_clear(self.now)
+            for iport in self._ingress.values():
+                iport._pfc_latched.clear()
         self._wake_all()
 
     # -- tracing -------------------------------------------------------------
@@ -533,7 +563,18 @@ class Fabric:
         nxt = _FAR
         for port in self._plist():
             if port.backlog_packets:
-                return now + 1
+                if not port._pfc_until:
+                    return now + 1
+                # backlogged but possibly PFC-blocked: a fully paused
+                # port's service calls are strict no-ops, so the only
+                # deadline it owns is the earliest latch expiry (an
+                # in-flight UNPAUSE rides someone's delivery pipe and
+                # is covered by that port's deadline below)
+                b = port.pfc_blocked_until(now)
+                if b <= now:
+                    return now + 1
+                if b < nxt:
+                    nxt = b
             dq = port.delivery
             if dq:
                 d = dq[0][0]        # deadlines are enqueue-ordered

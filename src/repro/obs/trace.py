@@ -51,6 +51,8 @@ class EventKind(enum.Enum):
     PSN_NAK = "psn_nak"                  # sequence-gap NAK emitted
     RETRANSMIT = "retransmit"            # requester re-offered a packet
     RATE_CHANGE = "rate_change"          # DCQCN rate cut (CNP/RNR/READ)
+    PFC_PAUSE = "pfc_pause"              # ingress XOFF broadcast a PAUSE
+    PFC_RESUME = "pfc_resume"            # ingress XON broadcast UNPAUSE
     # -- QP / service channel (verbs/service) -----------------------------
     QP_STATE = "qp_state"                # verbs state transition
     SVC_POST = "svc_post"                # service message queued (tx)
@@ -199,6 +201,21 @@ class Tracer:
         self._emit(EventKind.RATE_CHANGE, step, gid,
                    {"qpn": qpn, "rc": rc, "rt": rt, "alpha": alpha,
                     "reason": reason})
+
+    def pfc_pause(self, step: int, gid: int, cls: str, occupancy: float,
+                  targets: int):
+        """One XOFF broadcast: ingress ``gid`` paused class ``cls`` on
+        ``targets`` sender nodes at the given queue occupancy."""
+        self._emit(EventKind.PFC_PAUSE, step, gid,
+                   {"cls": cls, "occupancy": occupancy,
+                    "targets": targets})
+
+    def pfc_resume(self, step: int, gid: int, cls: str, occupancy: float,
+                   targets: int):
+        """The matching XON broadcast (UNPAUSE frames)."""
+        self._emit(EventKind.PFC_RESUME, step, gid,
+                   {"cls": cls, "occupancy": occupancy,
+                    "targets": targets})
 
     # -- QP / service channel ----------------------------------------------
     def qp_state(self, step: int, gid: int, qpn: int, old: str, new: str):

@@ -14,7 +14,8 @@ import msgpack
 
 from repro.core.migration import MigrationController
 from repro.core.namespace import GlobalNamespace
-from repro.core.qos import ECNConfig, IngressConfig, QoSConfig
+from repro.core.qos import (ECNConfig, IngressConfig, PFCConfig,
+                            QoSConfig)
 from repro.core.transport import Fabric
 from repro.core.verbs import Context, RdmaDevice
 from repro.orchestrator import Orchestrator
@@ -79,7 +80,8 @@ class SimCluster:
                  node_capacity: Optional[int] = None,
                  qos: Optional[QoSConfig] = None,
                  ingress: Optional[IngressConfig] = None,
-                 ecn: Optional[ECNConfig] = None):
+                 ecn: Optional[ECNConfig] = None,
+                 pfc: Optional[PFCConfig] = None):
         fab_kw = {} if link_bandwidth_Bps is None else \
             {"bandwidth_Bps": link_bandwidth_Bps}
         if qos is not None:
@@ -88,6 +90,8 @@ class SimCluster:
             fab_kw["ingress"] = ingress
         if ecn is not None:
             fab_kw["ecn"] = ecn
+        if pfc is not None:
+            fab_kw["pfc"] = pfc
         self.fabric = Fabric(loss_prob=loss_prob, seed=seed, **fab_kw)
         self.namespace = GlobalNamespace()
         self.nodes = [Node(self, gid, capacity=node_capacity)
@@ -155,6 +159,22 @@ class SimCluster:
         byte-identical to the ECN-less fabric. A QP's learned rate
         survives `migrate` (it rides the verbs dump)."""
         self.fabric.configure_ecn(ECNConfig(enabled=enabled, **knobs))
+
+    def configure_pfc(self, enabled: bool = True, **knobs):
+        """Operator knob: PFC link-level flow control, fabric-wide.
+        ``knobs`` are `repro.core.qos.PFCConfig` fields — per-class
+        XOFF/XON ingress-occupancy watermarks (``xoff``/``xon`` dicts
+        keyed ``app``/``mig``), the pause-frame lifetime
+        (``pause_steps``) and the re-broadcast cadence
+        (``refresh_steps``). Enabling makes the fabric *lossless*:
+        bounded ingress queues pause their senders per class instead of
+        dropping reliable requests, and congestion feedback rides
+        ECN/CNP alone (the RNR rate-cut path goes inert). Disabled by
+        default: no watermark is evaluated, no latch exists, and all
+        figures are byte-identical to the PFC-less fabric. A sender's
+        latched view of a paused peer survives `migrate` (it rides the
+        verbs dump)."""
+        self.fabric.configure_pfc(PFCConfig(enabled=enabled, **knobs))
 
     def configure_tracing(self, enabled: bool = True, *,
                           max_events: Optional[int] = None):

@@ -1,0 +1,241 @@
+"""PFC lossless fabric: pause frames, latches, headroom, lossless CC.
+
+Pins the 802.1Qbb subsystem end to end: the PAUSE/UNPAUSE control ops
+(packets.py), XOFF/XON watermark evaluation and broadcast at the
+bounded ingress, per-(dest, class) pause latches at egress with
+lifetime self-release, headroom admission instead of overflow drops,
+the lossless gate on the RNR rate-cut path (tasks.py), latch survival
+across migration (dump.py), and the config validation surface.
+"""
+import pytest
+
+from repro.core.packets import CTRL_OPS, PFC_OPS, Op, Packet
+from repro.core.qos import CLASS_APP, CLASS_MIG, ECNConfig, PFCConfig
+from repro.runtime.apps import SendBwApp
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import connect_pair
+from tests.helpers import make_channel_pair, make_sendbw_pair
+
+BPS = 2e8        # 200 B/step ports
+
+
+def _run(cl, n):
+    for _ in range(n):
+        cl.step_all()
+
+
+def _incast(n_senders, *, queue=32 * 1024, pfc=True, **pfc_kw):
+    cl = SimCluster(n_senders + 1, link_bandwidth_Bps=BPS)
+    cl.configure_ingress(rx_bandwidth_Bps=BPS, queue_bytes=queue, node=0)
+    if pfc:
+        cl.configure_pfc(enabled=True, **pfc_kw)
+    receivers = []
+    for i in range(n_senders):
+        A = cl.launch(f"s{i}", i + 1)
+        B = cl.launch(f"r{i}", 0)
+        aa = SendBwApp(msg_size=4096, window=8)
+        aa.attach(A, sender=True)
+        A.app = aa
+        ab = SendBwApp(msg_size=4096, window=8)
+        ab.attach(B, sender=False)
+        B.app = ab
+        connect_pair(aa.channels[0], ab.channels[0])
+        receivers.append(ab)
+    return cl, receivers
+
+
+# -- config validation ------------------------------------------------------
+
+def test_pfc_config_validation():
+    PFCConfig(enabled=True).validate()          # defaults are sane
+    with pytest.raises(ValueError):             # xon above xoff
+        PFCConfig(xoff={"app": 0.4}, xon={"app": 0.6}).validate()
+    with pytest.raises(ValueError):             # missing xon key
+        PFCConfig(xoff={"app": 0.6, "mig": 0.7},
+                  xon={"app": 0.3}).validate()
+    with pytest.raises(ValueError):             # xoff above 1
+        PFCConfig(xoff={"app": 1.2}, xon={"app": 0.3}).validate()
+    with pytest.raises(ValueError):             # refresh >= lifetime
+        PFCConfig(pause_steps=64, refresh_steps=64).validate()
+
+
+def test_per_class_ecn_validation_and_resolution():
+    with pytest.raises(ValueError):
+        ECNConfig(per_class={"app": (0.9, 0.5, 0.1)}).validate()
+    with pytest.raises(ValueError):
+        ECNConfig(per_class={"app": (0.1, 0.5, 0.0)}).validate()
+    ecn = ECNConfig(kmin=0.8, kmax=1.0, pmax=0.2,
+                    per_class={"mig": (0.2, 0.6, 0.5)}).validate()
+    flat = ECNConfig(kmin=0.8, kmax=1.0, pmax=0.2).validate()
+    for occ in (0.0, 0.5, 0.85, 0.99, 1.2):
+        # unlisted class and no-class fall back to the flat knobs,
+        # float-identical to the pre-per-class arithmetic
+        assert ecn.mark_probability(occ) == flat.mark_probability(occ)
+        assert ecn.mark_probability(occ, CLASS_APP) == \
+            flat.mark_probability(occ)
+    assert ecn.mark_probability(0.4, CLASS_MIG) == \
+        pytest.approx(0.5 * (0.4 - 0.2) / (0.6 - 0.2))
+    assert ecn.mark_probability(0.7, CLASS_MIG) == 1.0   # >= kmax
+
+
+def test_pause_ops_are_out_of_band_control():
+    assert Op.PAUSE in CTRL_OPS and Op.UNPAUSE in CTRL_OPS
+    assert PFC_OPS == {Op.PAUSE, Op.UNPAUSE}
+    assert Op.PAUSE.is_pfc and Op.UNPAUSE.is_pfc
+    # PFC frames terminate at the port, never at a QP completer
+    assert not Op.PAUSE.is_completer and not Op.UNPAUSE.is_completer
+
+
+# -- watermark machinery ----------------------------------------------------
+
+def test_incast_pauses_and_resumes_losslessly():
+    cl, receivers = _incast(4)
+    _run(cl, 2500)
+    stats = cl.fabric.stats
+    assert stats.get("pfc_pause_frames", 0) > 0
+    assert stats.get("pfc_resume_frames", 0) > 0
+    assert stats.get("pfc_paused_steps", 0) > 0
+    assert stats.get("rx_dropped", 0) == 0
+    assert stats.get("dropped", 0) == 0
+    assert stats.get("rnr_naks", 0) == 0
+    assert all(r.received > 0 for r in receivers)
+    # counter grammar: the PFC counters are node-attributed
+    sums = cl.fabric.metrics.node_twin_sums()
+    for name in ("pfc_pause_frames", "pfc_resume_frames",
+                 "pfc_paused_steps"):
+        bare, twin = sums[name]
+        assert bare == twin > 0
+
+
+def test_headroom_admission_replaces_overflow_drop():
+    # a queue much smaller than one in-flight window: overflow is
+    # guaranteed before the first PAUSE lands, so lossless mode must
+    # admit into headroom rather than drop
+    cl, _ = _incast(4, queue=4 * 1024)
+    _run(cl, 1500)
+    stats = cl.fabric.stats
+    assert stats.get("pfc_headroom_admits", 0) > 0
+    assert stats.get("rx_dropped", 0) == 0
+
+
+def test_pause_latch_blocks_class_and_lifetime_releases_it():
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_pfc(enabled=True, pause_steps=100, refresh_steps=50)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 5)
+    port = cl.fabric.port(0)
+    now = cl.fabric.now
+    # hand-deliver a PAUSE as if node 1's ingress emitted it
+    port.pfc_frame(Packet(op=Op.PAUSE, src_gid=1, src_qpn=0,
+                          dest_gid=0, dest_qpn=0,
+                          payload=CLASS_APP.encode(), length=100), now)
+    assert port._pfc_until[(1, CLASS_APP)] == now + 100
+    base = ab.received
+    _run(cl, 40)
+    assert ab.received == base, "app class transmitted while latched"
+    # ... but the latch self-releases after its lifetime (the progress
+    # guarantee: a lost UNPAUSE or a departed issuer cannot pause a
+    # class forever)
+    _run(cl, 200)
+    assert ab.received > base
+    assert cl.fabric.stats.get("pfc_paused_steps", 0) >= 100
+
+
+def test_unpause_releases_early_and_counts_span():
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_pfc(enabled=True, pause_steps=400)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 5)
+    port = cl.fabric.port(0)
+    now = cl.fabric.now
+    pause = Packet(op=Op.PAUSE, src_gid=1, src_qpn=0, dest_gid=0,
+                   dest_qpn=0, payload=CLASS_APP.encode(), length=400)
+    port.pfc_frame(pause, now)
+    _run(cl, 30)
+    port.pfc_frame(Packet(op=Op.UNPAUSE, src_gid=1, src_qpn=0,
+                          dest_gid=0, dest_qpn=0,
+                          payload=CLASS_APP.encode(), length=0),
+                   cl.fabric.now)
+    assert (1, CLASS_APP) not in port._pfc_until
+    span = cl.fabric.stats.get("pfc_paused_steps", 0)
+    assert 0 < span <= 60, f"span {span} should be ~the parked window"
+    base = ab.received
+    _run(cl, 100)
+    assert ab.received > base
+
+
+def test_latch_state_rides_the_dump():
+    port = SimCluster(2).fabric.port(0)     # throwaway for API shape
+    cl = SimCluster(3, link_bandwidth_Bps=BPS)
+    cl.configure_pfc(enabled=True)
+    port = cl.fabric.port(0)
+    port.pfc_frame(Packet(op=Op.PAUSE, src_gid=1, src_qpn=0,
+                          dest_gid=0, dest_qpn=0,
+                          payload=CLASS_MIG.encode(), length=300),
+                   cl.fabric.now)
+    rem = port.pfc_dump(1, cl.fabric.now)
+    assert rem == {CLASS_MIG: 300}
+    other = cl.fabric.port(2)
+    other.pfc_restore(1, rem, cl.fabric.now)
+    assert other._pfc_until[(1, CLASS_MIG)] == cl.fabric.now + 300
+
+
+def test_paused_peer_view_survives_migration():
+    """A QP migrated mid-pause restores its view of the paused peer:
+    the destination node's egress re-arms the latch from the verbs
+    dump, so the moved sender does not blast into a queue that XOFF'd
+    it moments earlier."""
+    cl = SimCluster(3, link_bandwidth_Bps=BPS)
+    cl.configure_pfc(enabled=True, pause_steps=4000)
+    aa, ab = make_sendbw_pair(cl)
+    _run(cl, 5)
+    # node 1 (the receiver's node) pauses the app class of sender node 0
+    cl.fabric.port(0).pfc_frame(
+        Packet(op=Op.PAUSE, src_gid=1, src_qpn=0, dest_gid=0,
+               dest_qpn=0, payload=CLASS_APP.encode(), length=4000),
+        cl.fabric.now)
+    rep = cl.migrate("send", 2, strategy="stop_and_copy")
+    assert rep.ok
+    assert cl.fabric.port(2)._pfc_until.get((1, CLASS_APP), 0) \
+        > cl.fabric.now, "migrated sender lost the pause latch"
+
+
+def test_disable_clears_all_latches():
+    cl, _ = _incast(4)
+    _run(cl, 800)
+    assert any(cl.fabric.port(g)._pfc_until for g in range(5)) or \
+        cl.fabric.ingress_port(0)._pfc_latched
+    cl.configure_pfc(enabled=False)
+    for g in range(5):
+        assert not cl.fabric.port(g)._pfc_until
+    assert not cl.fabric.ingress_port(0)._pfc_latched
+
+
+# -- lossless congestion control (satellite regression) ---------------------
+
+def test_rnr_cut_inert_in_lossless_mode():
+    """Regression: with PFC on, congestion feedback is CNP-only. A
+    spurious RNR NAK (responder not ready — nothing to do with fabric
+    congestion in lossless mode) must NOT double-cut the rate below
+    what the CNP stream derived."""
+    cl = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl.configure_ecn(enabled=True)
+    cl.configure_pfc(enabled=True)
+    c1, c2, _, _ = make_channel_pair(cl)
+    c1.post_send_bytes(b"x" * 2048)     # no receive posted -> RNR NAK
+    _run(cl, 100)
+    qp1 = c1.h.qp(c1.qpn)
+    assert cl.fabric.stats.get("rnr_naks", 0) > 0, \
+        "responder RNR must still fire (it is not an overflow signal)"
+    if qp1.cc is not None:
+        assert qp1.cc.rate_cuts == 0, \
+            "lossless mode must not rate-cut on RNR NAKs"
+        assert qp1.cc.rc == cl.fabric.bytes_per_step
+    # identical scenario without PFC: the cut path stays live
+    cl2 = SimCluster(2, link_bandwidth_Bps=BPS)
+    cl2.configure_ecn(enabled=True)
+    c1b, _, _, _ = make_channel_pair(cl2)
+    c1b.post_send_bytes(b"x" * 2048)
+    _run(cl2, 100)
+    qp1b = c1b.h.qp(c1b.qpn)
+    assert qp1b.cc is not None and qp1b.cc.rate_cuts > 0

@@ -1,0 +1,253 @@
+"""Property-based PFC lossless-fabric harness.
+
+Seeded-random schedules (``numpy.random.RandomState``, the repo's
+stand-in for hypothesis — same pattern as ``test_preempt_props.py``)
+draw XOFF/XON watermark pairs per traffic class, incast fan-in, queue
+sizes, QoS/ECN toggles, and a mid-run migration *into* the congested
+node — optionally pausing and resuming that migration while its own
+traffic class may be PFC-paused — then assert the invariants a lossless
+fabric must hold on EVERY trajectory:
+
+* zero drops of reliable requests: no ingress overflow drops and no
+  wire drops anywhere, for any watermark draw (headroom admission plus
+  pause latches must absorb whatever the schedule throws at the queue);
+* progress guarantee: every run drains — the incast receivers all make
+  forward progress despite pause/resume duty cycles (no pause-latch
+  deadlock, no XON lost forever), the migration lands, and once the
+  senders stop offering load the fabric reaches quiescence with every
+  egress/ingress backlog empty and every pause latch released;
+* the metrics counter grammar holds for the new PFC counters:
+  ``sum(name@gid) == name`` (``node_twin_sums``) — pause/resume frames
+  and paused-step spans attribute to exactly one node each.
+
+On any assertion failure the generating schedule is dumped as JSON to
+``pfc_failures/`` (CI archives the directory) so the exact
+counterexample replays with ``_run_schedule(json.load(...))``.
+
+Seed matrix: ``PFC_SEEDS`` env var (comma-separated ints), default
+``0,1,2,3`` — CI's extended step widens this to 20+ seeds and runs the
+matrix under BOTH fabric pumps (the legacy exhaustive scan and the
+event-driven active-set pump), since the pause latches feed the pump's
+wake-time computation.
+"""
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.core.qos import QoSConfig
+from repro.runtime.apps import SendBwApp
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import connect_pair
+
+ARTIFACT_DIR = Path(__file__).resolve().parent.parent / "pfc_failures"
+STRATEGIES = ("stop_and_copy", "pre_copy", "post_copy")
+
+
+def _seeds():
+    env = os.environ.get("PFC_SEEDS", "").strip()
+    if env:
+        return tuple(int(s) for s in env.split(",") if s.strip())
+    return (0, 1, 2, 3)
+
+
+def _draw_watermarks(rng: np.random.RandomState, qos: bool):
+    """One (xon, xoff) pair with 0 < xon < xoff <= 1 per class. With
+    QoS class queues each class polices its own backlog, so the pairs
+    draw independently; single-FIFO mode reads the one shared counter
+    (global-pause semantics), where per-class pairs would let one
+    class's standing queue hold another's latch closed forever — so
+    both classes share a single draw there."""
+    xoff, xon = {}, {}
+    for cls in ("app", "mig"):
+        if not qos and cls == "mig":
+            xon[cls], xoff[cls] = xon["app"], xoff["app"]
+            continue
+        lo = float(0.05 + 0.45 * rng.rand())        # xon in [0.05, 0.5)
+        hi = float(min(1.0, lo + 0.1 + 0.5 * rng.rand()))
+        xon[cls], xoff[cls] = lo, hi
+    return xoff, xon
+
+
+def _draw_schedule(rng: np.random.RandomState) -> dict:
+    """One random lossless-fabric schedule. Plain JSON-serialisable
+    dict so failures replay from the artifact."""
+    qos = bool(rng.rand() < 0.5)
+    xoff, xon = _draw_watermarks(rng, qos)
+    pause_steps = int(rng.randint(64, 1024))
+    sched = {
+        "cluster_seed": int(rng.randint(0, 1000)),
+        "fan_in": int(rng.randint(2, 5)),
+        "queue_bytes": int(rng.choice([16, 32, 64])) * 1024,
+        "xoff": xoff,
+        "xon": xon,
+        "pause_steps": pause_steps,
+        "refresh_steps": int(rng.randint(8, max(9, pause_steps // 2))),
+        "qos": qos,
+        "ecn": bool(rng.rand() < 0.3),
+        "strategy": str(rng.choice(list(STRATEGIES))),
+        "bulk_bytes": int(rng.randint(8, 64)) * 1024,
+        "pre_steps": int(rng.randint(100, 400)),
+        "run_steps": int(rng.randint(800, 2000)),
+        "pause_mig": bool(rng.rand() < 0.6),
+        "pause_after": int(rng.randint(1, 40)),
+        "park_steps": int(rng.randint(10, 400)),
+    }
+    return sched
+
+
+def _build(sched: dict):
+    n = sched["fan_in"]
+    cl = SimCluster(n + 2, seed=sched["cluster_seed"])
+    cl.configure_pump(sched.get("event_driven", True))
+    cl.configure_ingress(rx_bandwidth_Bps=2e8,
+                         queue_bytes=sched["queue_bytes"], node=0)
+    cl.configure_pfc(enabled=True, xoff=dict(sched["xoff"]),
+                     xon=dict(sched["xon"]),
+                     pause_steps=sched["pause_steps"],
+                     refresh_steps=sched["refresh_steps"])
+    if sched["qos"]:
+        cl.configure_qos(QoSConfig(enabled=True))
+    if sched["ecn"]:
+        cl.configure_ecn(enabled=True)
+    receivers = []
+    for i in range(n):
+        A = cl.launch(f"s{i}", i + 1)
+        B = cl.launch(f"r{i}", 0)
+        aa = SendBwApp(msg_size=4096, window=8)
+        aa.attach(A, sender=True)
+        A.app = aa
+        ab = SendBwApp(msg_size=4096, window=8)
+        ab.attach(B, sender=False)
+        B.app = ab
+        connect_pair(aa.channels[0], ab.channels[0])
+        receivers.append(ab)
+    # the migration victim: memory-backed, parked on the spare node,
+    # pre-copied INTO the congested node so its MIG_PAGE stream shares
+    # the bounded ingress (and its class's pause latches) with the incast
+    bulk = cl.launch("bulk", n + 1)
+    bulk.ctx.alloc_pd().reg_mr(sched["bulk_bytes"])
+    return cl, receivers
+
+
+def _migrate(cl, sched: dict):
+    """Run the scheduled migration, optionally preempting it mid-flight
+    — this is where a pause_migration deadline can land while the mig
+    class is itself PFC-paused at the sender's egress."""
+    if sched["pause_mig"]:
+        cl.pause_migration("bulk",
+                           at=cl.fabric.now + sched["pause_after"])
+    rep = cl.migrate("bulk", 0, strategy=sched["strategy"])
+    if not rep.ok:
+        assert rep.attempt is not None, \
+            f"migration not ok yet no attempt token: {rep.stage_failed}"
+        for _ in range(sched["park_steps"]):
+            cl.step_all()           # incast keeps hammering while parked
+        rep = cl.resume_migration("bulk")
+    assert rep.ok, f"migration failed: stage={rep.stage_failed}"
+    if rep.pager is not None:
+        while rep.pager.remaining_pages:
+            rep.pager.prefetch(16)
+            cl.fabric.pump()
+    return rep
+
+
+def _assert_lossless(cl):
+    stats = cl.fabric.stats
+    assert stats.get("rx_dropped", 0) == 0, \
+        f"ingress overflow dropped {stats['rx_dropped']} reliable pkts"
+    assert stats.get("dropped", 0) == 0, \
+        f"wire dropped {stats['dropped']} pkts on a loss-free fabric"
+
+
+def _assert_counter_grammar(cl):
+    sums = cl.fabric.metrics.node_twin_sums()
+    for name, (bare, twin) in sums.items():
+        assert bare == twin, (
+            f"counter '{name}': bare total {bare} != twin sum {twin}")
+    # the PFC counters must be node-attributed (present in the grammar)
+    if cl.fabric.stats.get("pfc_pause_frames", 0):
+        for name in ("pfc_pause_frames", "pfc_paused_steps"):
+            assert name in sums, f"'{name}' missing @gid twins"
+
+
+def _drain(cl, receivers):
+    """Progress guarantee, part 2: stop offering load (senders stop
+    stepping, receivers keep reposting) — the fabric must reach
+    quiescence with every backlog empty and every pause latch released
+    (XON or latch-lifetime expiry, either way: no deadlock)."""
+    rcv_containers = [cl.containers[f"r{i}"]
+                      for i in range(len(receivers))]
+    for _ in range(3000):
+        for c in rcv_containers:
+            c.step()
+        cl.pump()
+        if not cl.fabric.in_flight():
+            break
+    assert not cl.fabric.in_flight(), \
+        "fabric never drained after load stopped (pause deadlock?)"
+    for node in cl.nodes:
+        gid = node.gid
+        eport = cl.fabric.port(gid)
+        assert eport.backlog_packets == 0, \
+            f"node {gid}: egress backlog stuck at {eport.backlog_packets}"
+        assert cl.fabric.ingress_port(gid).backlog_packets == 0, \
+            f"node {gid}: ingress backlog never drained"
+    # a live latch with no backlog is harmless but must self-expire;
+    # prove it by advancing past every remaining lifetime
+    horizon = max([u for p in cl.nodes
+                   for u in cl.fabric.port(p.gid)._pfc_until.values()]
+                  or [cl.fabric.now])
+    while cl.fabric.now <= horizon:
+        cl.pump()
+    assert not cl.fabric.in_flight()
+
+
+def _run_schedule(sched: dict):
+    cl, receivers = _build(sched)
+    for _ in range(sched["pre_steps"]):
+        cl.step_all()
+    rep = _migrate(cl, sched)
+    before = [r.received for r in receivers]
+    for _ in range(sched["run_steps"]):
+        cl.step_all()
+    # progress guarantee, part 1: every incast pair moved bytes through
+    # the paused-and-resumed fabric while the migration ran
+    after = [r.received for r in receivers]
+    assert all(a > b for a, b in zip(after, before)), \
+        f"a receiver starved under PFC: {before} -> {after}"
+    assert cl.containers["bulk"].node.gid == cl.nodes[0].gid, \
+        "migration did not land on the congested node"
+    _assert_lossless(cl)
+    _drain(cl, receivers)
+    _assert_lossless(cl)            # draining must not drop either
+    _assert_counter_grammar(cl)
+    return rep
+
+
+def _dump_artifact(sched: dict, err: AssertionError) -> Path:
+    ARTIFACT_DIR.mkdir(exist_ok=True)
+    name = (f"{sched['strategy']}_seed{sched['cluster_seed']}"
+            f"_{abs(hash(json.dumps(sched, sort_keys=True))) % 10**8}"
+            f".json")
+    path = ARTIFACT_DIR / name
+    path.write_text(json.dumps(
+        {"schedule": sched, "error": str(err)}, indent=2))
+    return path
+
+
+@pytest.mark.parametrize("event_driven", [False, True],
+                         ids=["legacy", "event"])
+@pytest.mark.parametrize("seed", _seeds())
+def test_pfc_schedule_invariants(seed, event_driven):
+    rng = np.random.RandomState(seed * 6271 + 17)
+    sched = _draw_schedule(rng)
+    sched["event_driven"] = event_driven
+    try:
+        _run_schedule(sched)
+    except AssertionError as err:
+        path = _dump_artifact(sched, err)
+        raise AssertionError(
+            f"schedule failed (replay artifact: {path}): {err}") from err
