@@ -24,9 +24,9 @@ sys.path.insert(0, ROOT)
 
 from benchmarks import (fig7_overhead, fig8_shadow, fig9_creation,  # noqa
                         fig10_mr_reg, fig11_qps, fig13_training_migration,
-                        fig_contention, fig_downtime, fig_ecn, fig_incast,
-                        fig_pfc, fig_qos, roofline_table, table1_sloc,
-                        table2_dump_sizes)
+                        fig_contention, fig_delta, fig_downtime, fig_ecn,
+                        fig_incast, fig_pfc, fig_qos, roofline_table,
+                        table1_sloc, table2_dump_sizes)
 
 MODULES = [
     ("table1_sloc", table1_sloc),
@@ -43,6 +43,7 @@ MODULES = [
     ("fig_incast", fig_incast),
     ("fig_ecn", fig_ecn),
     ("fig_pfc", fig_pfc),
+    ("fig_delta", fig_delta),
     ("roofline_table", roofline_table),
 ]
 

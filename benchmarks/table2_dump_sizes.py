@@ -1,7 +1,11 @@
-"""Table 2: per-object dump sizes (bytes) for PD/MR/CQ/SRQ/QP/QP-with-SRQ."""
+"""Table 2: per-object dump sizes (bytes) for PD/MR/CQ/SRQ/QP/QP-with-SRQ,
+plus the full container checkpoint image raw vs codec-encoded (what a
+``configure_codec``-enabled migration actually puts on the wire)."""
 import msgpack
 
 from repro.core import dump as dumplib
+from repro.core import pagecodec
+from repro.core.pagecodec import CodecConfig
 from repro.core.verbs import RecvWR, SGE
 from repro.runtime.cluster import SimCluster
 from tests.helpers import make_channel_pair
@@ -30,8 +34,16 @@ def main():
         "QP": len(msgpack.packb(dumplib.dump_object(ctx.qps[0]))),
         "QP_w_SRQ": len(msgpack.packb(dumplib.dump_object(qp_srq))),
     }
+    # whole-container checkpoint image: raw (what the codec-less stream
+    # serialises) vs encoded (zlib via pagecodec.encode_image — the
+    # MIG_STATE payload under configure_codec)
+    image = cl.migrator._checkpoint(cl.containers["a"])
+    encoded = pagecodec.encode_image(image, CodecConfig(enabled=True))
+    sizes["image"] = len(image)
+    sizes["image_encoded"] = len(encoded)
     for k, v in sizes.items():
         print(f"table2_dump_size[{k}],{v},bytes")
+    return sizes
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ from typing import Callable, Dict, List, Optional
 import msgpack
 
 from repro.core import dump as dumplib
+from repro.core import pagecodec
 from repro.core.packets import Op
 from repro.core.service import ServiceError, StreamPreempted
 from repro.core.states import QPState
@@ -100,20 +101,31 @@ class MigrationAttempt:
     round_pages: int = 0              # progress inside the split round
     round_bytes: int = 0
     round_steps: int = 0
+    round_wire: int = 0               # encoded bytes of the split round
     image: Optional[bytes] = None     # stopped-phase checkpoint image
     service_qp: Dict = field(default_factory=dict)  # RTO/RTT + DCQCN
     paused_at: int = 0                # fabric.now at the yield
+    # page-codec sender state (acked digest cache + delta-base snapshots,
+    # ``pagecodec.PageCodec.dump``). Valid only toward the destination it
+    # was built against: a resume onto a NEW destination discards it.
+    codec: Dict = field(default_factory=dict)
     refs: Dict = field(default_factory=dict, repr=False, compare=False)
 
     _WIRE = ("container", "strategy", "runtime", "src_gid", "dest_gid",
              "phase", "reason", "rounds_done", "pages_sent", "stream",
              "pending", "round_pages", "round_bytes", "round_steps",
              "image", "service_qp", "paused_at")
+    # conditional keys: absent from the wire form when falsy, so tokens
+    # from codec-less runs stay byte-identical to the pre-codec format
+    _WIRE_OPT = ("round_wire", "codec")
 
     def to_bytes(self) -> bytes:
-        return msgpack.packb(
-            {k: getattr(self, k) for k in self._WIRE},
-            use_bin_type=True)
+        d = {k: getattr(self, k) for k in self._WIRE}
+        for k in self._WIRE_OPT:
+            v = getattr(self, k)
+            if v:
+                d[k] = v
+        return msgpack.packb(d, use_bin_type=True)
 
     @classmethod
     def from_bytes(cls, blob: bytes) -> "MigrationAttempt":
@@ -208,11 +220,15 @@ class MigrationController:
             # as if the detach had landed mid-stream
             raise StreamPreempted("detach", -1)
         dest_svc = dest_dev.service
-        delivered = bytes(image)
+        codec = self.fabric.codec
+        encoded = codec.enabled and codec.compress_image
+        wire = pagecodec.encode_image(image, codec) if encoded \
+            else bytes(image)
         for _hop in range(2 if runtime == "docker" else 1):
             xid = svc.transfer(dest_gid, Op.MIG_STATE, {"kind": "image"},
-                               delivered, preempt=preempt)
-            delivered = dest_svc.take_image(xid)
+                               wire, preempt=preempt)
+            wire = dest_svc.take_image(xid)
+        delivered = pagecodec.decode_image(wire) if encoded else wire
         if delivered != image:
             raise MigrationError("image corrupted in transit")
         return delivered

@@ -1,0 +1,292 @@
+"""Delta-aware migration page codec: zero elision, dedup, XOR deltas.
+
+The paper's headline metrics (§5: bounded downtime, bounded transfer
+time) are ultimately byte counts divided by contended link bandwidth —
+and the pre-copy data plane as seeded re-sends every dirtied page in
+full, 4 KiB a pop, every round. This module is the classic
+live-migration data-reduction layer on top of the ``MIG_PAGE`` stream:
+
+* ``PAGE_ZERO`` — an all-zero page ships as a bare record (meta tuple
+  only, empty payload) instead of 4 KiB of zeros;
+* ``PAGE_DUP``  — a page whose content (blake2b-128 digest, any offset)
+  is already staged at the destination ships as a 16-byte digest
+  reference into the receiver's content-addressed store;
+* ``PAGE_DELTA``— a re-dirtied page ships as the zlib-compressed XOR
+  diff against the last *acknowledged* snapshot of that page, when the
+  diff is smaller than the page (``PAGE_FULL`` otherwise).
+
+Sender state (``PageCodec``) is per-migration: a digest cache of the
+content known staged at the destination plus per-page delta-base
+snapshots. Both ride the ``MigrationAttempt`` pause token
+(``dump``/``restore``) and MUST be discarded when an attempt resumes
+onto a new destination — the old staging died with the old node, and a
+stale dedup hit would silently corrupt the restored image. The decoder
+makes that failure loud instead of silent: a ``PAGE_DUP``/``PAGE_DELTA``
+referencing a digest the receiver never registered raises
+``CodecError``.
+
+Idempotency under preemption: a batch cut off mid-transfer counts as
+unsent (the sender commits codec state only on the ``MIG_ACK``
+receipt), but the message may still have been *delivered*. Deltas are
+therefore decoded against the receiver's content-addressed store via
+the record's base digest — never against the mutable staged value — so
+re-delivery, and even a resend carrying *newer* page content, decodes
+to exactly the content the sender hashed into the record's result
+digest.
+
+Everything is stdlib (``hashlib.blake2b`` + ``zlib``) and gated behind
+``Fabric.configure_codec`` — disabled (the default), no call site
+touches this module and the wire format is byte-identical to the
+codec-less build.
+"""
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass
+from hashlib import blake2b
+from typing import Dict, List, Optional, Tuple
+
+# record kinds (the 4th element of an encoded page meta tuple)
+PAGE_FULL = 0
+PAGE_ZERO = 1
+PAGE_DUP = 2
+PAGE_DELTA = 3
+
+DIGEST_SIZE = 16
+
+_ZEROS: Dict[int, bytes] = {}
+
+
+def _zeros(n: int) -> bytes:
+    z = _ZEROS.get(n)
+    if z is None:
+        z = _ZEROS[n] = bytes(n)
+    return z
+
+
+def page_digest(data: bytes) -> bytes:
+    """blake2b-128 content digest — the dedup/delta-base identity."""
+    return blake2b(data, digest_size=DIGEST_SIZE).digest()
+
+
+def _xor(a: bytes, b: bytes) -> bytes:
+    return (int.from_bytes(a, "little")
+            ^ int.from_bytes(b, "little")).to_bytes(len(a), "little")
+
+
+class CodecError(RuntimeError):
+    """A record referenced content the receiver never registered, or a
+    reconstructed page failed its digest check — always a protocol bug
+    (e.g. codec state surviving a destination re-point), never a state
+    to limp past."""
+
+
+@dataclass
+class CodecConfig:
+    """Operator knobs for the migration page codec (``configure_codec``).
+    Disabled by default: no encode/decode happens anywhere and every
+    pinned figure is byte-identical to the codec-less fabric."""
+    enabled: bool = False
+    zero_elision: bool = True    # all-zero pages -> bare PAGE_ZERO record
+    dedup: bool = True           # staged-content digest hits -> PAGE_DUP
+    delta: bool = True           # re-dirtied pages -> XOR+zlib PAGE_DELTA
+    compress_image: bool = True  # MIG_STATE checkpoint images -> zlib
+    zlib_level: int = 6          # delta/image compression level (1..9)
+    # pre-copy convergence controller: cut over to stop-and-copy when the
+    # projected encoded bytes of the next round are >= this fraction of
+    # the round just sent (rounds stopped shrinking — the non-converging
+    # writable-working-set pathology)
+    cutover_ratio: float = 0.9
+
+    def validate(self) -> "CodecConfig":
+        if not 1 <= int(self.zlib_level) <= 9:
+            raise ValueError("zlib_level must be in [1, 9]")
+        if not 0.0 < self.cutover_ratio <= 1.0:
+            raise ValueError("cutover_ratio must be in (0, 1]")
+        return self
+
+
+class PageCodec:
+    """Sender-side, per-migration codec state.
+
+    ``staged`` maps content digests known staged at the destination
+    (insertion-ordered dict, never a set: bytes hashing is randomised
+    per process, and the dump order must be run-stable). ``snaps`` maps
+    ``(mrn, page)`` to the last *acknowledged* page bytes — the XOR
+    delta base. Both advance only via ``commit`` (called on the batch's
+    MIG_ACK receipt), so a preempted batch re-encodes from exactly the
+    state the receiver provably holds."""
+
+    def __init__(self, cfg: CodecConfig):
+        self.cfg = cfg
+        self.staged: Dict[bytes, bool] = {}
+        self.snaps: Dict[Tuple[int, int], bytes] = {}
+
+    # -- encode --------------------------------------------------------------
+    def encode_batch(self, pages: List[Tuple[int, int, bytes]]):
+        """Encode one MIG_PAGE batch of ``(mrn, page, data)`` triples.
+
+        Returns ``(metas, payload, pending, stats)``: wire-ready page
+        meta tuples + concatenated encoded payload, the tentative state
+        overlay to ``commit`` once the batch is acked, and the encode
+        statistics (counter feed). Meta tuple shapes:
+
+        * ``(mrn, pg, ln, PAGE_FULL,  clen)``           payload = page
+        * ``(mrn, pg, ln, PAGE_ZERO,  0)``              payload = empty
+        * ``(mrn, pg, ln, PAGE_DUP,   16)``             payload = digest
+        * ``(mrn, pg, ln, PAGE_DELTA, clen, rd, bd)``   payload = zlib(xor)
+
+        where ``rd``/``bd`` are the result/base content digests (the
+        base digest is only ever one the receiver has registered)."""
+        cfg = self.cfg
+        metas, parts = [], []
+        pend_staged: Dict[bytes, bool] = {}
+        pend_snaps: Dict[Tuple[int, int], bytes] = {}
+        stats = {"full": 0, "zero": 0, "dup": 0, "delta": 0,
+                 "bytes_in": 0, "bytes_out": 0, "delta_saved": 0}
+        for mrn, pg, data in pages:
+            ln = len(data)
+            stats["bytes_in"] += ln
+            dg = page_digest(data)
+            key = (mrn, pg)
+            meta = None
+            if cfg.zero_elision and data == _zeros(ln):
+                meta = (mrn, pg, ln, PAGE_ZERO, 0)
+                stats["zero"] += 1
+            elif cfg.dedup and (dg in pend_staged or dg in self.staged):
+                meta = (mrn, pg, ln, PAGE_DUP, DIGEST_SIZE)
+                parts.append(dg)
+                stats["dup"] += 1
+            else:
+                base = pend_snaps.get(key, self.snaps.get(key))
+                if cfg.delta and base is not None and len(base) == ln:
+                    bd = page_digest(base)
+                    if bd in pend_staged or bd in self.staged:
+                        comp = zlib.compress(_xor(data, base),
+                                             cfg.zlib_level)
+                        if len(comp) < ln:
+                            meta = (mrn, pg, ln, PAGE_DELTA, len(comp),
+                                    dg, bd)
+                            parts.append(comp)
+                            stats["delta"] += 1
+                            stats["delta_saved"] += ln - len(comp)
+                if meta is None:
+                    meta = (mrn, pg, ln, PAGE_FULL, ln)
+                    parts.append(data)
+                    stats["full"] += 1
+            metas.append(meta)
+            pend_snaps[key] = data
+            if meta[3] != PAGE_ZERO:
+                # zero pages are elided receiver-side too (never enter
+                # the content store), so their digest must not become a
+                # dedup/delta-base candidate
+                pend_staged[dg] = True
+        payload = b"".join(parts)
+        stats["bytes_out"] = len(payload)
+        return metas, payload, (pend_staged, pend_snaps), stats
+
+    def commit(self, pending):
+        """Fold a batch's tentative overlay in — call ONLY once the
+        batch's MIG_ACK receipt arrived. A preempted batch's overlay is
+        simply dropped; the resend re-encodes from committed state."""
+        pend_staged, pend_snaps = pending
+        self.staged.update(pend_staged)
+        self.snaps.update(pend_snaps)
+
+    # -- pause-token (de)serialisation ---------------------------------------
+    def dump(self) -> dict:
+        """Wire form for the ``MigrationAttempt`` token (msgpack-ready;
+        empty dict when there is nothing to carry)."""
+        if not self.staged and not self.snaps:
+            return {}
+        return {"staged": list(self.staged),
+                "snaps": [[k[0], k[1], v] for k, v in self.snaps.items()]}
+
+    @classmethod
+    def restore(cls, cfg: CodecConfig, d: Optional[dict]) -> "PageCodec":
+        c = cls(cfg)
+        if d:
+            for dg in d.get("staged", []):
+                c.staged[bytes(dg)] = True
+            for mrn, pg, data in d.get("snaps", []):
+                c.snaps[(int(mrn), int(pg))] = bytes(data)
+        return c
+
+
+# -- receive side ------------------------------------------------------------
+
+def decode_batch(metas, data: bytes, stage: Dict[Tuple[int, int], bytes],
+                 store: Dict[bytes, bytes]):
+    """Apply one encoded MIG_PAGE batch to a destination staging dict.
+
+    ``store`` is the stream's content-addressed store: every FULL/DELTA
+    page registers its content under its digest, and DUP/DELTA records
+    resolve through it — never through the mutable staged value — so
+    decoding is idempotent under re-delivery (the store is append-only
+    and content-addressed; re-applying any record reproduces the same
+    bytes). An unknown digest raises ``CodecError``: it means sender
+    codec state outlived the staging it described (the
+    new-destination-invalidation bug this codec refuses to hide)."""
+    off = 0
+    for m in metas:
+        mrn, pg, ln, kind, clen = int(m[0]), int(m[1]), int(m[2]), \
+            int(m[3]), int(m[4])
+        chunk = bytes(data[off:off + clen])
+        off += clen
+        if kind == PAGE_FULL:
+            page = chunk
+            store[page_digest(page)] = page
+        elif kind == PAGE_ZERO:
+            page = _zeros(ln)
+        elif kind == PAGE_DUP:
+            page = store.get(chunk)
+            if page is None or len(page) != ln:
+                raise CodecError(
+                    f"PAGE_DUP ({mrn},{pg}) references unstaged content "
+                    f"{chunk.hex()}")
+        elif kind == PAGE_DELTA:
+            rd, bd = bytes(m[5]), bytes(m[6])
+            base = store.get(bd)
+            if base is None or len(base) != ln:
+                raise CodecError(
+                    f"PAGE_DELTA ({mrn},{pg}) base {bd.hex()} not in "
+                    f"the stream's content store")
+            page = _xor(base, zlib.decompress(chunk))
+            if page_digest(page) != rd:
+                raise CodecError(
+                    f"PAGE_DELTA ({mrn},{pg}) reconstruction failed "
+                    f"its digest check")
+            store[rd] = page
+        else:
+            raise CodecError(f"unknown page record kind {kind}")
+        stage[(mrn, pg)] = page
+    if off != len(data):
+        raise CodecError(
+            f"encoded payload length mismatch ({off} != {len(data)})")
+
+
+# -- checkpoint images --------------------------------------------------------
+# One tag byte so the receiver-side take_image path stays format-blind:
+# the *sender* (stream_image) decodes what it reads back, and a blob
+# that did not shrink ships raw rather than inflated.
+
+_IMG_RAW = b"\x00"
+_IMG_ZLIB = b"\x01"
+
+
+def encode_image(image: bytes, cfg: CodecConfig) -> bytes:
+    """Wire form of a MIG_STATE checkpoint image: zlib-compressed when
+    that is actually smaller, raw (1-byte tag overhead) otherwise."""
+    comp = zlib.compress(image, cfg.zlib_level)
+    if len(comp) + 1 < len(image):
+        return _IMG_ZLIB + comp
+    return _IMG_RAW + image
+
+
+def decode_image(blob: bytes) -> bytes:
+    tag, body = blob[:1], blob[1:]
+    if tag == _IMG_ZLIB:
+        return zlib.decompress(body)
+    if tag == _IMG_RAW:
+        return bytes(body)
+    raise CodecError(f"unknown image encoding tag {tag!r}")

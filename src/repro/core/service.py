@@ -23,6 +23,7 @@ import msgpack
 from collections import deque
 from typing import Callable, Dict, Optional, Tuple
 
+from repro.core import pagecodec
 from repro.core.packets import Op
 from repro.core.qos import CongestionControl
 from repro.core.states import QPState
@@ -82,6 +83,13 @@ class ServiceChannel:
         # resumed attempt starts from it rather than from scratch
         self._suspended: Dict[int, str] = {}
         self.suspend_state: Dict[int, dict] = {}
+        # per-stream content-addressed store for codec-encoded pre-copy
+        # batches (digest -> page bytes); append-only for a stream's
+        # lifetime so record decode is idempotent under re-delivery
+        self.codec_rx: Dict[int, Dict[bytes, bytes]] = {}
+        # on-wire size of the most recent post()'s packed blob — the
+        # honest serialisation cost for transfer()'s timeout budget
+        self.last_post_nbytes = 0
 
     # -- identifiers ---------------------------------------------------------
     def next_xid(self) -> int:
@@ -136,6 +144,7 @@ class ServiceChannel:
         # only ever read as a local SGE source
         mr = MemoryRegion(self.pd, len(blob), mrn=-1, lkey=0, rkey=0)
         mr.buf[:] = blob
+        self.last_post_nbytes = len(blob)
         self._wr += 1
         wr = SendWR(self._wr, op, SGE(mr, 0, len(blob)))
         self._tx_mrs[self._wr] = (peer_gid, mr)
@@ -175,7 +184,10 @@ class ServiceChannel:
             rx_cap = fabric.ingress_capacity_Bps(peer_gid)
             if rx_cap is not None:
                 per_step = min(per_step, rx_cap * fabric.step_s())
-            ser = (len(data) + 4096) / max(per_step, 1e-9)
+            # budget against the packed on-wire size, not the logical
+            # payload: a codec-encoded round serialises far fewer bytes
+            # than it carries, and the slack must not inflate with it
+            ser = (self.last_post_nbytes + 4096) / max(per_step, 1e-9)
             max_steps = int(20 * ser) + 100_000
         if tick is None:
             if preempt is None:
@@ -244,10 +256,18 @@ class ServiceChannel:
                 # pre-copy staging: pages accumulate at the destination
                 # until install applies them
                 stage = self.staging.setdefault(meta["stream"], {})
-                off = 0
-                for mrn, pg, ln in meta["pages"]:
-                    stage[(mrn, pg)] = data[off:off + ln]
-                    off += ln
+                pages = meta["pages"]
+                if pages and len(pages[0]) > 3:
+                    # codec-encoded batch: ≥5-tuple metas (legacy senders
+                    # ship bare (mrn, pg, ln) triples, kept byte-identical)
+                    pagecodec.decode_batch(
+                        pages, data,
+                        stage, self.codec_rx.setdefault(meta["stream"], {}))
+                else:
+                    off = 0
+                    for mrn, pg, ln in pages:
+                        stage[(mrn, pg)] = data[off:off + ln]
+                        off += ln
             # post-copy pulls were already applied synchronously at the
             # destination MR; the stream only accounts for the wire cost
         if not meta.get("noack"):
@@ -260,6 +280,7 @@ class ServiceChannel:
             raise ServiceError(f"no delivered image for xid {xid}") from None
 
     def take_staging(self, stream: int) -> Dict[Tuple[int, int], bytes]:
+        self.codec_rx.pop(stream, None)
         return self.staging.pop(stream, {})
 
     def discard_stream(self, stream: int):
@@ -267,6 +288,7 @@ class ServiceChannel:
         attempt left behind (rollback path)."""
         self.staging.pop(stream, None)
         self.page_store.pop(stream, None)
+        self.codec_rx.pop(stream, None)
 
     def reset_peer(self, peer_gid: int):
         """Tear down the kernel QP pair toward a peer (both ends) after a

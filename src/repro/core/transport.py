@@ -82,6 +82,7 @@ import random
 from typing import Dict, List, Optional
 
 from repro.core.packets import MIG_OPS, Packet
+from repro.core.pagecodec import CodecConfig
 from repro.core.qos import (CLASS_APP, CLASS_MIG, ECNConfig, EgressPort,
                             IngressConfig, IngressPort, PFCConfig,
                             QoSConfig)
@@ -115,6 +116,7 @@ class Fabric:
         self.ingress_default = (ingress or IngressConfig()).validate()
         self.ecn = (ecn or ECNConfig()).validate()
         self.pfc = (pfc or PFCConfig()).validate()
+        self.codec = CodecConfig()
         self.utilization_window = UTILIZATION_WINDOW
         self._ports: Dict[int, EgressPort] = {}       # src gid -> port
         self._ingress: Dict[int, IngressPort] = {}    # dest gid -> port
@@ -287,6 +289,18 @@ class Fabric:
             for iport in self._ingress.values():
                 iport._pfc_latched.clear()
         self._wake_all()
+
+    # -- migration page codec ------------------------------------------------
+    def configure_codec(self, codec: CodecConfig):
+        """Operator knob: swap the migration page-codec config (zero-page
+        elision, content-addressed dedup, XOR+zlib delta rounds, image
+        compression — ``repro.core.pagecodec``). Applies to migrations
+        *started* after the call; an in-flight or paused attempt keeps
+        the codec state it was encoding with, and a paused attempt whose
+        token carries codec state resumes decoding-compatible. Disabled
+        — the default — the MIG_PAGE wire format is byte-identical to
+        the codec-less fabric (pinned by the benchmark figures)."""
+        self.codec = codec.validate()
 
     # -- tracing -------------------------------------------------------------
     def configure_tracing(self, enabled: bool = True, *,

@@ -59,6 +59,7 @@ class EventKind(enum.Enum):
     SVC_DELIVER = "svc_deliver"          # service message reassembled (rx)
     SVC_ACK = "svc_ack"                  # stream-level MIG_ACK receipt
     PAGE_PULL = "page_pull"              # post-copy demand/prefetch fill
+    PAGE_CODEC = "page_codec"            # encoded MIG_PAGE batch stats
     # -- migration phases (migration/strategies/orchestrator) -------------
     PHASE = "phase"                      # completed span [begin, end]
     PAUSED = "paused"                    # preemption gap [pause, resume]
@@ -240,6 +241,13 @@ class Tracer:
         self._emit(EventKind.PAGE_PULL, step, gid,
                    {"mrn": mrn, "page": page, "nbytes": nbytes,
                     "fault": fault})
+
+    def page_codec(self, step: int, gid: int, stream: int, stats: dict):
+        """One codec-encoded MIG_PAGE batch as acked/charged by the
+        sender: record mix (full/zero/dup/delta) and the logical vs
+        encoded byte counts."""
+        self._emit(EventKind.PAGE_CODEC, step, gid,
+                   {"stream": stream, **stats})
 
     # -- migration phases --------------------------------------------------
     def phase(self, name: str, begin: int, end: int,

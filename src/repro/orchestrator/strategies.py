@@ -35,6 +35,7 @@ import msgpack
 from repro.core import dump as dumplib
 from repro.core.migration import MigrationAttempt, MigrationReport
 from repro.core.packets import Op
+from repro.core.pagecodec import PageCodec
 from repro.core.service import StreamPreempted
 from repro.core.transport import STEP_S
 from repro.core.verbs import PAGE_SIZE, MemoryRegion
@@ -64,16 +65,18 @@ def _sim_attempt_s(ctl, attempt: MigrationAttempt) -> float:
 
 class _RoundPreempted(Exception):
     """Internal: a page round yielded mid-way. Carries what the round
-    still owes (``remaining``) and the bytes that DID cross the wire so
-    the split round's accounting stays exact across the pause."""
+    still owes (``remaining``) and the bytes that DID cross the wire —
+    logical and encoded — so the split round's accounting stays exact
+    across the pause."""
 
     def __init__(self, reason: str,
                  remaining: List[Tuple[MemoryRegion, int]],
-                 sent_bytes: int):
+                 sent_bytes: int, wire_bytes: int):
         super().__init__(f"page round preempted ({reason})")
         self.reason = reason
         self.remaining = remaining
         self.sent_bytes = sent_bytes
+        self.wire_bytes = wire_bytes
 
 
 def _page(mr: MemoryRegion, pg: int) -> bytes:
@@ -84,41 +87,80 @@ def _page_len(mr: MemoryRegion, pg: int) -> int:
     return min(PAGE_SIZE, mr.size - pg * PAGE_SIZE)
 
 
+def _codec_stats(fab, gid: int, stream: int, stats: Dict):
+    """Account one encoded batch: node-attributed counters (``@gid``
+    twins by construction) plus the typed trace hook."""
+    m = fab.metrics
+    if stats["zero"]:
+        m.inc("pages_zero_elided", stats["zero"], gid=gid)
+    if stats["dup"]:
+        m.inc("pages_dedup_hits", stats["dup"], gid=gid)
+    if stats["delta_saved"]:
+        m.inc("delta_bytes_saved", stats["delta_saved"], gid=gid)
+    trc = fab.tracer
+    if trc is not None:
+        trc.page_codec(fab.now, gid, stream, stats)
+
+
 def _stream_pages(ctl, src_dev, dest_gid: int, stream: int,
                   pages: List[Tuple[MemoryRegion, int]], tick,
-                  preempt: Optional[Callable] = None) -> int:
+                  preempt: Optional[Callable] = None,
+                  codec: Optional[PageCodec] = None) -> Tuple[int, int]:
     """Stream a page set over the service channel in MIG_PAGE batches;
     blocks (pumping via ``tick``) until each batch is receipt-acked.
-    Returns the number of payload bytes that crossed the wire.
+    Returns ``(logical_bytes, wire_bytes)`` — without a codec the two
+    are equal; with one, ``wire_bytes`` is the encoded payload that
+    actually crossed the links.
 
     ``preempt`` makes every batch boundary (and, via the service
     channel, every pump step inside a batch) a yield point: a truthy
     verdict raises ``_RoundPreempted`` with the round's remaining pages.
     A batch cut off mid-transfer counts as unsent — its receipt was
-    never acked, so the resend is idempotent (staging overwrites the
-    same keys with the same bytes)."""
+    never acked, so the resend is idempotent (legacy staging overwrites
+    the same keys with the same bytes; codec batches re-encode from the
+    last *committed* state, and their records decode through the
+    receiver's append-only content store). Codec state advances only on
+    the ack (``commit``), so a dropped batch never poisons the digest
+    cache with content the destination does not hold."""
     svc = src_dev.service
+    fab = ctl.fabric
     total = 0
+    wire = 0
     lo = 0
     while lo < len(pages):
         if preempt is not None:
             r = preempt()
             if r:
-                raise _RoundPreempted(r, pages[lo:], total)
-        metas, datas = [], []
-        for mr, pg in pages[lo:lo + PAGE_BATCH]:
-            data = _page(mr, pg)
-            metas.append((mr.mrn, pg, len(data)))
-            datas.append(data)
+                raise _RoundPreempted(r, pages[lo:], total, wire)
+        batch = pages[lo:lo + PAGE_BATCH]
+        if codec is None:
+            metas, datas = [], []
+            for mr, pg in batch:
+                data = _page(mr, pg)
+                metas.append((mr.mrn, pg, len(data)))
+                datas.append(data)
+            payload = b"".join(datas)
+            logical = encoded = sum(m[2] for m in metas)
+            pending = stats = None
+        else:
+            metas, payload, pending, stats = codec.encode_batch(
+                [(mr.mrn, pg, _page(mr, pg)) for mr, pg in batch])
+            logical = stats["bytes_in"]
+            encoded = stats["bytes_out"]
         try:
             svc.transfer(dest_gid, Op.MIG_PAGE,
                          {"stream": stream, "pages": metas},
-                         b"".join(datas), tick=tick, preempt=preempt)
+                         payload, tick=tick, preempt=preempt)
         except StreamPreempted as e:
-            raise _RoundPreempted(e.reason, pages[lo:], total) from None
-        total += sum(m[2] for m in metas)
+            raise _RoundPreempted(e.reason, pages[lo:], total,
+                                  wire) from None
+        if codec is not None:
+            codec.commit(pending)
+            _codec_stats(fab, src_dev.gid, stream, stats)
+        total += logical
+        wire += encoded
         lo += PAGE_BATCH
-    return total
+    return total, wire
 
 
 class MigrationStrategy:
@@ -315,8 +357,12 @@ class PreCopy(MigrationStrategy):
         # exactly the pages touched while the copy was on the wire
         all_pages = [(mr, pg) for mr in mrs for pg in range(mr.n_pages)]
         rep.pages_total = len(all_pages)
+        fab = ctl.fabric
         st = {"stream": stream, "round": 0, "pending": all_pages,
-              "round_pages": 0, "round_bytes": 0, "round_steps": 0}
+              "round_pages": 0, "round_bytes": 0, "round_steps": 0,
+              "round_wire": 0,
+              "codec": PageCodec(fab.codec) if fab.codec.enabled
+              else None}
         return self._rounds(ctl, container, dest_node, rep, st,
                             runtime=runtime, fail_at=fail_at,
                             background=background, preempt=preempt)
@@ -335,19 +381,23 @@ class PreCopy(MigrationStrategy):
         dest_gid = dest_node.device.gid
         mrs = list(ctx.mrs)
         live_tick = background if background is not None else fab.pump
+        codec = st["codec"]
         t_leg = fab.now
         residual = []
         while True:
             pending = st["pending"]
             rt = fab.now
             try:
-                sent = _stream_pages(ctl, src_dev, dest_gid, st["stream"],
-                                     pending, live_tick, preempt=preempt)
+                sent, wired = _stream_pages(ctl, src_dev, dest_gid,
+                                            st["stream"], pending,
+                                            live_tick, preempt=preempt,
+                                            codec=codec)
             except _RoundPreempted as e:
                 done = len(pending) - len(e.remaining)
                 st["pending"] = e.remaining
                 st["round_pages"] += done
                 st["round_bytes"] += e.sent_bytes
+                st["round_wire"] += e.wire_bytes
                 st["round_steps"] += fab.now - rt
                 rep.pages_sent += done
                 record_phase(fab, "precopy_round", rt, node=src_dev.gid,
@@ -356,18 +406,25 @@ class PreCopy(MigrationStrategy):
                                    e.reason, runtime, t_leg)
             pages_rnd = st["round_pages"] + len(pending)
             bytes_rnd = st["round_bytes"] + sent
+            wire_rnd = st["round_wire"] + wired
             rep.pages_sent += len(pending)
-            rep.rounds.append({"round": st["round"], "pages": pages_rnd,
-                               "bytes": bytes_rnd,
-                               "sim_s": bytes_rnd / ctl.bw,
-                               "wire_s": (st["round_steps"] +
-                                          fab.now - rt) * STEP_S})
+            rnd = {"round": st["round"], "pages": pages_rnd,
+                   "bytes": bytes_rnd,
+                   "sim_s": bytes_rnd / ctl.bw,
+                   "wire_s": (st["round_steps"] +
+                              fab.now - rt) * STEP_S}
+            if codec is not None:
+                # encoded bytes only exist with a codec; codec-off round
+                # records stay byte-identical to the pre-codec engine
+                rnd["wire_bytes"] = wire_rnd
+            rep.rounds.append(rnd)
             record_phase(fab, "precopy_round", rt, node=src_dev.gid,
                          round=st["round"], pages=pages_rnd,
                          bytes=bytes_rnd)
             self._live(ctl, background)
             st["round"] += 1
             st["round_pages"] = st["round_bytes"] = st["round_steps"] = 0
+            st["round_wire"] = 0
             dirty = [(mr, pg) for mr in mrs
                      for pg in sorted(mr.collect_dirty())]
             dirty_bytes = sum(_page_len(mr, pg) for mr, pg in dirty)
@@ -377,6 +434,21 @@ class PreCopy(MigrationStrategy):
                 # exactly this residual
                 residual = dirty
                 break
+            if codec is not None and st["round"] >= 2 and wire_rnd > 0:
+                # convergence controller: project the next round's
+                # encoded cost from this round's achieved encode ratio.
+                # Both rounds would drain at the same achieved send rate,
+                # so comparing encoded *bytes* compares wire *time* — if
+                # the projection is within cutover_ratio of the round
+                # just sent, rounds have stopped shrinking (the
+                # non-converging writable working set) and the residual
+                # stop-and-copy is cheaper than burning the round budget.
+                projected = dirty_bytes * (wire_rnd / max(bytes_rnd, 1))
+                if projected >= codec.cfg.cutover_ratio * wire_rnd:
+                    rep.rounds[-1]["cutover"] = True
+                    fab.metrics.inc("codec_cutovers", gid=src_dev.gid)
+                    residual = dirty
+                    break
             st["pending"] = dirty
         rep.live_s += (fab.now - t_leg) * STEP_S
         record_phase(fab, "live", t_leg, node=src_dev.gid,
@@ -420,8 +492,10 @@ class PreCopy(MigrationStrategy):
             pending=[(mr.mrn, pg) for mr, pg in st["pending"]],
             round_pages=st["round_pages"], round_bytes=st["round_bytes"],
             round_steps=st["round_steps"],
+            round_wire=st["round_wire"],
             service_qp=svc.take_suspend_state(dest_gid),
-            paused_at=fab.now)
+            paused_at=fab.now,
+            codec=st["codec"].dump() if st["codec"] is not None else {})
         return rep
 
     def _finish(self, ctl, container, dest_node, rep, st, residual, *,
@@ -566,13 +640,20 @@ class PreCopy(MigrationStrategy):
         if dest_gid != attempt.dest_gid:
             # nothing staged survives the old destination: restart the
             # current round over the full footprint (later delta rounds
-            # still shrink it — dirty tracking never stopped)
+            # still shrink it — dirty tracking never stopped). The codec
+            # state is invalidated WITH the staging: its digest cache
+            # describes content only the old destination held, and a
+            # stale dedup/delta-base hit against the new one would
+            # silently corrupt the restored image — the fresh codec
+            # starts with nothing staged, so every page ships decodable.
             self._redirect_stream(ctl, container, dest_node, attempt)
             pending = [(mr, pg) for mr in ctx.mrs
                        for pg in range(mr.n_pages)]
             st = {"stream": attempt.stream, "round": attempt.rounds_done,
                   "pending": pending, "round_pages": 0, "round_bytes": 0,
-                  "round_steps": 0}
+                  "round_steps": 0, "round_wire": 0,
+                  "codec": PageCodec(fab.codec) if fab.codec.enabled
+                  else None}
         else:
             if attempt.service_qp:
                 src_dev.service.apply_wire_state(dest_gid,
@@ -584,7 +665,10 @@ class PreCopy(MigrationStrategy):
                               for mrn, pg in attempt.pending],
                   "round_pages": attempt.round_pages,
                   "round_bytes": attempt.round_bytes,
-                  "round_steps": attempt.round_steps}
+                  "round_steps": attempt.round_steps,
+                  "round_wire": attempt.round_wire,
+                  "codec": PageCodec.restore(fab.codec, attempt.codec)
+                  if fab.codec.enabled else None}
         return self._rounds(ctl, container, dest_node, rep, st,
                             runtime=attempt.runtime, fail_at=None,
                             background=background, preempt=preempt)
@@ -664,6 +748,11 @@ class DemandPager:
         # keep serving — a paused post-copy must never wedge the running
         # destination container on an absent page
         self.paused = False
+        # lazy page codec for the pull wire charges; keyed to the
+        # destination it encoded against so a resume onto a new node
+        # starts a fresh one (same invalidation rule as pre-copy)
+        self._codec: Optional[PageCodec] = None
+        self._codec_dest: Optional[int] = None
 
     def capture(self, mrs):
         for mr in mrs:
@@ -682,10 +771,27 @@ class DemandPager:
     def _charge_wire(self, mr: MemoryRegion, pg: int, data: bytes):
         if self.service is None or self.dest_gid is None:
             return
+        fab = self.service.device.fabric
+        if fab.codec.enabled:
+            # the pull really is applied before this message (the fill is
+            # synchronous), so the wire charge is the *encoded* cost —
+            # dedup/delta against what this destination already pulled.
+            # Fire-and-forget: there is no ack to gate on, and the
+            # receive path ignores postcopy payloads, so committing at
+            # send is exact.
+            if self._codec is None or self._codec_dest != self.dest_gid:
+                self._codec = PageCodec(fab.codec)
+                self._codec_dest = self.dest_gid
+            metas, payload, pending, stats = self._codec.encode_batch(
+                [(mr.mrn, pg, data)])
+            self._codec.commit(pending)
+            _codec_stats(fab, self.service.device.gid, self.stream, stats)
+        else:
+            metas = [(mr.mrn, pg, len(data))]
+            payload = data
         self.service.post(self.dest_gid, Op.MIG_PAGE,
                           {"stream": self.stream, "postcopy": True,
-                           "noack": True,
-                           "pages": [(mr.mrn, pg, len(data))]}, data)
+                           "noack": True, "pages": metas}, payload)
 
     def _fill(self, mr: MemoryRegion, pg: int, *, fault: bool):
         lo = pg * PAGE_SIZE

@@ -14,6 +14,7 @@ import msgpack
 
 from repro.core.migration import MigrationController
 from repro.core.namespace import GlobalNamespace
+from repro.core.pagecodec import CodecConfig
 from repro.core.qos import (ECNConfig, IngressConfig, PFCConfig,
                             QoSConfig)
 from repro.core.transport import Fabric
@@ -175,6 +176,23 @@ class SimCluster:
         latched view of a paused peer survives `migrate` (it rides the
         verbs dump)."""
         self.fabric.configure_pfc(PFCConfig(enabled=enabled, **knobs))
+
+    def configure_codec(self, enabled: bool = True, **knobs):
+        """Operator knob: delta-aware migration page codec, fabric-wide.
+        ``knobs`` are `repro.core.pagecodec.CodecConfig` fields —
+        feature gates (``zero_elision``, ``dedup``, ``delta``,
+        ``compress_image``), the delta/image compression level
+        (``zlib_level``) and the pre-copy convergence-controller
+        threshold (``cutover_ratio``). Enabling makes MIG_PAGE batches
+        ship encoded (all-zero pages elided, staged-content duplicates
+        sent as digest references, re-dirtied pages as XOR+zlib deltas)
+        and charges the wire at encoded size, so ``transfer_s`` /
+        ``downtime_s`` and migration-class contention genuinely drop.
+        Disabled by default: the migration stream is byte-identical to
+        the codec-less fabric (pinned by all five benchmark figures).
+        Codec state rides the `MigrationAttempt` pause token and is
+        invalidated when an attempt resumes onto a new destination."""
+        self.fabric.configure_codec(CodecConfig(enabled=enabled, **knobs))
 
     def configure_tracing(self, enabled: bool = True, *,
                           max_events: Optional[int] = None):

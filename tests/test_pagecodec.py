@@ -1,0 +1,222 @@
+"""Delta-aware migration page codec: unit roundtrips, end-to-end
+pre-copy integration, the convergence controller, and the on-wire
+transfer-budget accounting."""
+import random
+
+import pytest
+
+from repro.core import pagecodec
+from repro.core.pagecodec import (CodecConfig, CodecError, PageCodec,
+                                  decode_batch, page_digest)
+from repro.core.packets import Op
+from repro.core.verbs import PAGE_SIZE
+from repro.runtime.apps import SendBwApp
+from repro.runtime.cluster import SimCluster
+from repro.runtime.collectives import connect_pair
+
+CFG = CodecConfig(enabled=True)
+
+
+def _rand_page(seed, n=PAGE_SIZE):
+    return random.Random(seed).randbytes(n)
+
+
+def _roundtrip(codec, pages, stage, store):
+    metas, payload, pending, stats = codec.encode_batch(pages)
+    decode_batch(metas, payload, stage, store)
+    codec.commit(pending)
+    return metas, stats
+
+
+# -- unit: the four record kinds --------------------------------------------
+
+def test_record_kinds_roundtrip():
+    codec = PageCodec(CFG)
+    stage, store = {}, {}
+    zero = bytes(PAGE_SIZE)
+    pa, pb = _rand_page(1), _rand_page(2)
+    metas, stats = _roundtrip(
+        codec, [(1, 0, pa), (1, 1, zero), (1, 2, pa), (1, 3, pb)],
+        stage, store)
+    kinds = [m[3] for m in metas]
+    assert kinds == [pagecodec.PAGE_FULL, pagecodec.PAGE_ZERO,
+                     pagecodec.PAGE_DUP, pagecodec.PAGE_FULL]
+    assert stats == {**stats, "full": 2, "zero": 1, "dup": 1, "delta": 0}
+    assert stage[(1, 0)] == pa and stage[(1, 2)] == pa
+    assert stage[(1, 1)] == zero and stage[(1, 3)] == pb
+
+    # re-dirty page 0 with a tiny in-place change: ships as a delta
+    pa2 = bytearray(pa)
+    pa2[100:108] = b"\x00" * 8
+    pa2 = bytes(pa2)
+    metas, stats = _roundtrip(codec, [(1, 0, pa2)], stage, store)
+    assert metas[0][3] == pagecodec.PAGE_DELTA
+    assert metas[0][4] < PAGE_SIZE and stats["delta_saved"] > 0
+    assert stage[(1, 0)] == pa2
+
+
+def test_delta_against_zero_page_falls_back_to_full():
+    """Zero pages never enter the receiver's content store, so a page
+    that was all-zero last round must re-ship FULL, never DELTA."""
+    codec = PageCodec(CFG)
+    stage, store = {}, {}
+    _roundtrip(codec, [(1, 0, bytes(PAGE_SIZE))], stage, store)
+    metas, _ = _roundtrip(codec, [(1, 0, _rand_page(3))], stage, store)
+    assert metas[0][3] == pagecodec.PAGE_FULL
+
+
+def test_decode_is_idempotent_under_redelivery():
+    """A delivered-but-unacked batch may be re-encoded after the page
+    changed; decoding the OLD records again (delta base resolved through
+    the content store, not the mutable staged value) must still
+    reproduce exactly the old content."""
+    codec = PageCodec(CFG)
+    stage, store = {}, {}
+    p0 = _rand_page(4)
+    _roundtrip(codec, [(1, 0, p0)], stage, store)
+    p1 = bytearray(p0)
+    p1[0:8] = b"\xffper-rnd"
+    metas1, payload1, pending1, _ = codec.encode_batch([(1, 0, bytes(p1))])
+    assert metas1[0][3] == pagecodec.PAGE_DELTA
+    decode_batch(metas1, payload1, stage, store)    # delivered...
+    # ...but never acked: sender re-encodes from committed state with
+    # NEWER content, and the receiver then sees the old batch again
+    p2 = bytearray(p0)
+    p2[0:8] = b"\xeenewer!!"
+    metas2, payload2, pending2, _ = codec.encode_batch([(1, 0, bytes(p2))])
+    decode_batch(metas2, payload2, stage, store)
+    decode_batch(metas1, payload1, stage, store)    # re-delivery (stale)
+    assert stage[(1, 0)] == bytes(p1)
+    decode_batch(metas2, payload2, stage, store)
+    assert stage[(1, 0)] == bytes(p2)
+
+
+def test_unknown_digest_raises():
+    """A DUP/DELTA record referencing content the receiver never staged
+    is the invalidation bug the codec must refuse to hide."""
+    codec = PageCodec(CFG)
+    codec.staged[page_digest(_rand_page(5))] = True   # stale cache entry
+    metas, payload, _, _ = codec.encode_batch([(1, 0, _rand_page(5))])
+    assert metas[0][3] == pagecodec.PAGE_DUP
+    with pytest.raises(CodecError):
+        decode_batch(metas, payload, {}, {})
+
+
+def test_dump_restore_roundtrip():
+    codec = PageCodec(CFG)
+    stage, store = {}, {}
+    _roundtrip(codec, [(1, 0, _rand_page(6)), (2, 3, _rand_page(7))],
+               stage, store)
+    back = PageCodec.restore(CFG, codec.dump())
+    assert back.staged == codec.staged
+    assert back.snaps == codec.snaps
+    assert PageCodec.restore(CFG, {}).dump() == {}
+
+
+def test_image_encode_roundtrip():
+    blob = b"\x00" * 4096 + _rand_page(8)
+    enc = pagecodec.encode_image(blob, CFG)
+    assert len(enc) < len(blob)
+    assert pagecodec.decode_image(enc) == blob
+    raw = _rand_page(9, 64)    # incompressible: ships raw + 1 tag byte
+    assert pagecodec.decode_image(pagecodec.encode_image(raw, CFG)) == raw
+
+
+# -- integration: pre-copy with the codec on --------------------------------
+
+def _codec_cluster():
+    cl = SimCluster(3, link_bandwidth_Bps=1e8)
+    cl.configure_codec(enabled=True)
+    A = cl.launch("send", 0)
+    B = cl.launch("recv", 1)
+    aa = SendBwApp(msg_size=4096, window=16, buf_size=64 * 1024)
+    aa.attach(A, sender=True)
+    A.app = aa
+    ab = SendBwApp(msg_size=4096, window=16, buf_size=64 * 1024)
+    ab.attach(B, sender=False)
+    B.app = ab
+    connect_pair(aa.channels[0], ab.channels[0])
+    # a second MR with a zero region and duplicate content pages
+    mr = B.ctx.pds[0].reg_mr(64 * PAGE_SIZE)
+    blk = bytes(range(256)) * (PAGE_SIZE // 256)
+    for pg in range(8, 24):
+        mr.write(pg * PAGE_SIZE, blk)
+    return cl, B, mr.mrn, blk
+
+
+def test_pre_copy_codec_end_to_end():
+    cl, B, mrn, blk = _codec_cluster()
+    for _ in range(40):
+        cl.step_all()
+    w0 = cl.fabric.stats.get("mig_tx_bytes", 0)
+    rep = cl.migrate("recv", 2, strategy="pre_copy")
+    wire = cl.fabric.stats.get("mig_tx_bytes", 0) - w0
+    assert rep.ok
+    # every staged/installed byte equals the source pattern
+    mr = next(m for m in B.ctx.mrs if m.mrn == mrn)
+    for pg in range(8, 24):
+        assert bytes(mr.buf[pg * PAGE_SIZE:(pg + 1) * PAGE_SIZE]) == blk
+    assert bytes(mr.buf[24 * PAGE_SIZE:]) == bytes(40 * PAGE_SIZE)
+    # the codec genuinely shrank the stream and accounted itself
+    logical = sum(r["bytes"] for r in rep.rounds)
+    encoded = sum(r["wire_bytes"] for r in rep.rounds)
+    assert encoded < logical
+    assert wire < logical
+    stats = cl.fabric.stats
+    assert stats.get("pages_zero_elided", 0) > 0
+    assert stats.get("pages_dedup_hits", 0) > 0
+    for name, (bare, twin) in cl.fabric.metrics.node_twin_sums().items():
+        assert bare == twin, f"twin invariant broken for {name}"
+    # the decode store is released with the staging
+    for node in cl.nodes:
+        assert not node.device.service.codec_rx
+
+
+def test_convergence_cutover():
+    """A workload whose dirty set never shrinks (full-page fresh random
+    content each step) must trip the convergence controller instead of
+    burning the whole round budget."""
+    cl = SimCluster(3, link_bandwidth_Bps=1e8)
+    cl.configure_codec(enabled=True)
+    c = cl.launch("churn", 0)
+    pd = c.ctx.alloc_pd()
+    mr = pd.reg_mr(32 * PAGE_SIZE)
+
+    class Churn:
+        ticks = 0
+
+        def step(self):
+            Churn.ticks += 1
+            for pg in range(16):
+                mr.write(pg * PAGE_SIZE,
+                         _rand_page((Churn.ticks << 8) | pg))
+
+        def checkpoint(self):
+            return b""
+
+        def restore(self, blob):
+            pass
+
+        def rebind(self, container, session):
+            pass
+
+    c.app = Churn()
+    for _ in range(10):
+        cl.step_all()
+    rep = cl.migrate("churn", 1, strategy="pre_copy")
+    assert rep.ok
+    assert len(rep.rounds) < 8, "cutover should beat the round cap"
+    assert any(r.get("cutover") for r in rep.rounds)
+    assert cl.fabric.stats.get("codec_cutovers", 0) == 1
+
+
+def test_transfer_budget_uses_wire_size():
+    """``transfer`` must budget its timeout from the packed on-wire blob
+    (``last_post_nbytes``), which is what actually serialises — not the
+    logical payload."""
+    cl = SimCluster(2)
+    svc = cl.nodes[0].device.service
+    xid = svc.post(cl.nodes[1].device.gid, Op.MIG_STATE,
+                   {"kind": "probe"}, b"z" * 4096)
+    assert svc.last_post_nbytes > 4096    # meta + msgpack framing
+    cl.fabric.pump_until(lambda: xid in svc.acked, 100_000)

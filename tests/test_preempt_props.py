@@ -77,6 +77,7 @@ def _draw_schedule(rng: np.random.RandomState, strategy: str) -> dict:
         "loss_prob": float(rng.choice([0.0, 0.0, 0.0, 0.01])),
         "ecn": bool(rng.rand() < 0.3),
         "ingress": bool(rng.rand() < 0.3),
+        "codec": bool(rng.rand() < 0.5),
         "pre_steps": int(rng.randint(20, 80)),
         "cycles": cycles,
     }
@@ -101,6 +102,7 @@ def _assert_no_leaks(cl):
         assert not svc.staging, f"node {dev.gid}: staged pages leaked"
         assert not svc.page_store, f"node {dev.gid}: page store leaked"
         assert not svc._suspended, f"node {dev.gid}: suspend flag leaked"
+        assert not svc.codec_rx, f"node {dev.gid}: codec store leaked"
         stopped = [q.qpn for q in dev.qps.values()
                    if q.state == QPState.STOPPED]
         assert not stopped, f"node {dev.gid}: STOPPED QPs {stopped}"
@@ -130,6 +132,8 @@ def _run_schedule(sched: dict):
                     seed=sched["cluster_seed"])
     if sched["ecn"]:
         cl.configure_ecn(enabled=True)
+    if sched.get("codec"):
+        cl.configure_codec(enabled=True)
     if sched["ingress"]:
         cl.configure_ingress(rx_bandwidth_Bps=2e8,
                              queue_bytes=32 * 1024, node=2)
@@ -210,6 +214,88 @@ def test_preemption_schedule_invariants(strategy, seed):
         path = _dump_artifact(sched, err)
         raise AssertionError(
             f"schedule failed (replay artifact: {path}): {err}") from err
+
+
+# -- codec invalidation: resume onto a NEW destination ---------------------
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_codec_resume_new_destination(strategy):
+    """Pause a codec-enabled migration mid-flight, then resume it onto a
+    DIFFERENT destination. The dedup/delta-base cache described content
+    staged only at the old node; the protocol must invalidate it (a
+    stale PAGE_DUP/PAGE_DELTA against the new node raises ``CodecError``
+    receiver-side, failing the migration), and the installed image —
+    zero band, duplicate band, planted pattern — must still equal the
+    source exactly."""
+    import random
+
+    from repro.core.verbs import PAGE_SIZE
+
+    cl = SimCluster(4, link_bandwidth_Bps=1e8)
+    cl.configure_codec(enabled=True)
+    aa, ab = make_sendbw_pair(cl)
+    for _ in range(30):
+        cl.step_all()
+    ch = ab.channels[0]
+    ch.h.mr(ch.mrn_send).write(0, _PATTERN)
+    # a large extra MR: zero band + duplicate band (codec-friendly) +
+    # an incompressible random band that keeps round 0 on the wire long
+    # enough for the pause to land with a PARTIALLY-populated digest
+    # cache — the case invalidation exists for
+    blk = bytes(range(256)) * (PAGE_SIZE // 256)
+    rnd = {pg: random.Random(pg).randbytes(PAGE_SIZE)
+           for pg in range(48, 112)}
+    mr = ab.container.ctx.pds[0].reg_mr(128 * PAGE_SIZE)
+    for pg in range(16, 48):
+        mr.write(pg * PAGE_SIZE, blk)
+    for pg, blob in rnd.items():
+        mr.write(pg * PAGE_SIZE, blob)
+    mrn = mr.mrn
+
+    # deadline tuned per strategy so the pause lands mid-stream with
+    # real progress behind it: post-copy's stop window is only the tiny
+    # verbs image, while pre-copy / stop-and-copy serialise the random
+    # band for thousands of steps (batch 1 — the zero/dup band — acks
+    # around step ~700, so 1200 lands inside batch 2 with the digest
+    # cache partially populated)
+    deadline = 60 if strategy == "post_copy" else 1200
+    cl.pause_migration("recv", at=cl.fabric.now + deadline)
+    rep = cl.migrate("recv", 2, strategy=strategy)
+    assert not rep.ok and rep.attempt is not None
+    _assert_token_roundtrip(rep.attempt)
+    if strategy == "pre_copy":
+        assert rep.attempt.phase == "live"
+        assert rep.attempt.pages_sent > 0
+        assert rep.attempt.codec, \
+            "live pre-copy token must carry codec state"
+    for _ in range(200):
+        cl.step_all()
+
+    rep = cl.resume_migration("recv", dest_idx=3)
+    assert rep.ok, f"resume onto new dest failed: {rep.stage_failed}"
+    assert ch.h.ctx.device.gid == 3
+    assert ch.h.mr(ch.mrn_send).read(0, len(_PATTERN)) == _PATTERN
+    _drain_pager(cl, rep)
+    mr2 = next(m for m in ab.container.ctx.mrs if m.mrn == mrn)
+    assert bytes(mr2.buf[:16 * PAGE_SIZE]) == bytes(16 * PAGE_SIZE)
+    for pg in range(16, 48):
+        assert bytes(mr2.buf[pg * PAGE_SIZE:(pg + 1) * PAGE_SIZE]) == blk
+    for pg, blob in rnd.items():
+        assert bytes(mr2.buf[pg * PAGE_SIZE:(pg + 1) * PAGE_SIZE]) \
+            == blob, f"random page {pg} corrupted"
+    assert bytes(mr2.buf[112 * PAGE_SIZE:]) == bytes(16 * PAGE_SIZE)
+    # the post-copy pager's fire-and-forget wire charges for the random
+    # band (~260 KiB at 100 B/step) take thousands of steps to serialise
+    # after the fills have already applied — drain the link before the
+    # leak check
+    cl.fabric.pump_until(
+        lambda: all(n.device.service.tx_backlog == 0 for n in cl.nodes),
+        200_000)
+    for _ in range(600):
+        cl.step_all()
+    _assert_no_leaks(cl)
+    _assert_counter_grammar(cl)
 
 
 # -- accounting property: paused time never inflates active time -----------
